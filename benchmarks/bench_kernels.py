@@ -1,0 +1,62 @@
+"""Kernel microbenchmarks: ref-backend wall time + Pallas(interpret) parity.
+
+Wall-clock here is CPU (the TPU numbers are the roofline analysis in
+EXPERIMENTS.md); the derived field reports achieved GFLOP/s on CPU plus a
+correctness delta vs the oracle.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ops
+
+
+def _bench(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters, out
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    # exact rerank: 256 queries × 8192 candidates × 768 d
+    Q = jnp.asarray(rng.normal(size=(256, 768)).astype(np.float32))
+    X = jnp.asarray(rng.normal(size=(8192, 768)).astype(np.float32))
+    s, out = _bench(lambda a, b: ops.exact_distances(a, b, backend="ref"), Q, X)
+    flops = 2 * 256 * 8192 * 768
+    small = ops.exact_distances(Q[:8], X[:64], backend="pallas")
+    ref_small = ops.exact_distances(Q[:8], X[:64], backend="ref")
+    delta = float(jnp.abs(small - ref_small).max())
+    emit("kernel.rerank", s * 1e6, f"gflops_{flops/s/1e9:.1f}_pallas_delta_{delta:.2e}")
+
+    # PQ ADC scan: 16 queries × 65536 codes, m=48 K=256
+    luts = jnp.asarray(rng.normal(size=(16, 48, 256)).astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, 256, size=(65536, 48)).astype(np.int32))
+    s, _ = _bench(lambda a, b: ops.pq_scan(a, b, backend="ref"), luts, codes)
+    lut_ops = 16 * 65536 * 48
+    small_p = ops.pq_scan(luts[:2], codes[:256], backend="pallas", tile_q=2, tile_n=128)
+    small_r = ops.pq_scan(luts[:2], codes[:256], backend="ref")
+    delta = float(jnp.abs(small_p - small_r).max())
+    emit("kernel.pq_scan", s * 1e6, f"glookups_{lut_ops/s/1e9:.2f}_pallas_delta_{delta:.2e}")
+
+    # k-means assign: 65536 points × 1024 centroids × 96 d
+    P = jnp.asarray(rng.normal(size=(65536, 96)).astype(np.float32))
+    C = jnp.asarray(rng.normal(size=(1024, 96)).astype(np.float32))
+    s, _ = _bench(lambda a, b: ops.kmeans_assign(a, b, backend="ref"), P, C)
+    flops = 2 * 65536 * 1024 * 96
+    ip, dp = ops.kmeans_assign(P[:512], C[:128], backend="pallas", tile_n=128, tile_k=64)
+    ir, dr = ops.kmeans_assign(P[:512], C[:128], backend="ref")
+    agree = float(np.mean(np.asarray(ip) == np.asarray(ir)))
+    emit("kernel.kmeans_assign", s * 1e6, f"gflops_{flops/s/1e9:.1f}_pallas_agree_{agree:.3f}")
+
+
+if __name__ == "__main__":
+    main()

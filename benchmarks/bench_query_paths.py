@@ -1,0 +1,101 @@
+"""Paper Table 2: query cost by strategy (no index / centroid / DiskANN).
+
+Measurable scale: ~32k vectors, 32 files, 4 executors.  Reports files
+scanned, bytes read from the object store, cold/warm latency, and recall —
+the same columns as the paper's table; the derived field carries the
+probe-vs-scan reduction ratios.
+"""
+
+import time
+
+import numpy as np
+
+from benchmarks.common import clustered, emit, make_cluster
+from repro.core.vamana import brute_force_topk
+from repro.lakehouse.table import LakehouseTable
+from repro.runtime.coordinator import IndexConfig
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    c = make_cluster(4)
+    t = LakehouseTable(c.catalog, "bench")
+    D = 96
+    t.create(dim=D)
+    X = clustered(rng, 32_000, D, n_clusters=64)
+    # cluster-correlated file layout: the paper's §10 states recall (and
+    # centroid pruning) depend on the data-partition correlation; writing
+    # shuffled files makes every file centroid ≈ the global mean and
+    # centroid pruning degenerates to random file choice (measured:
+    # recall 0.27 at n_probe=6 — a §10 validation).  Real ingest pipelines
+    # cluster by time/key, which the sorted layout models.
+    from repro.core.kmeans import assign, train_kmeans
+    cents, _ = train_kmeans(X[:8192], 64, iters=8, seed=0)
+    order = np.argsort(assign(X, cents), kind="stable")
+    X = X[order]
+    t.append_vectors(X, num_files=32, rows_per_group=512)
+    c.coordinator.create_index(
+        "bench",
+        # paper-style search params: PQ traversal needs L ≳ 100 (DiskANN
+        # ships L_search 100+; at L=48 PQ-guided beams misroute on
+        # well-separated clusters — measured in EXPERIMENTS §1)
+        IndexConfig(name="idx", R=24, L=128, pq_m=24, pq_nbits=8,
+                    partitions_per_shard=4, build_passes=2, build_batch=256),
+    )
+    Q = X[rng.choice(len(X), 12)] + 0.05 * rng.normal(size=(12, D)).astype(np.float32)
+    _, truth = brute_force_topk(X, Q, 10)
+    vecs_all, locs_all = t.scan_vectors()
+    truth_locs = [
+        {(locs_all[i].file_path, locs_all[i].row_group_id, locs_all[i].row_offset) for i in row}
+        for row in truth
+    ]
+
+    def recall(hits_lists):
+        scores = [
+            len({(h.file_path, h.row_group, h.row_offset) for h in hits} & tl) / len(tl)
+            for hits, tl in zip(hits_lists, truth_locs)
+        ]
+        return float(np.mean(scores))
+
+    results = {}
+    for strat, kw in (
+        ("scan", {}),
+        ("centroid", {"n_probe": 6}),
+        ("diskann", {}),
+        ("diskann_fp", {"use_pq": False}),
+    ):
+        probe_strat = "diskann" if strat.startswith("diskann") else strat
+        # cold: fresh executor caches
+        for ex in c.executors:
+            ex._l1.clear()
+        t0 = time.perf_counter()
+        pr_cold = c.coordinator.probe("bench", Q[:1], 10, strategy=probe_strat, **kw)
+        cold_s = time.perf_counter() - t0
+        # warm, PER QUERY (the paper's Table 2 counts files/bytes per query)
+        hits, files, bytes_ = [], [], []
+        t0 = time.perf_counter()
+        for qi in range(len(Q)):
+            pr = c.coordinator.probe("bench", Q[qi], 10, strategy=probe_strat, **kw)
+            hits.append(pr.hits[0])
+            files.append(pr.files_scanned)
+            bytes_.append(pr.bytes_read)
+        warm_s = (time.perf_counter() - t0) / len(Q)
+        r = recall(hits)
+        results[strat] = (float(np.mean(files)), float(np.mean(bytes_)))
+        emit(
+            f"table2.{strat}",
+            warm_s * 1e6,
+            f"files_per_query_{np.mean(files):.1f}_bytes_per_query_{np.mean(bytes_):.0f}"
+            f"_cold_ms_{cold_s*1e3:.0f}_warm_ms_{warm_s*1e3:.0f}_recall_{r:.3f}",
+        )
+    emit(
+        "table2.read_reduction",
+        0.0,
+        f"centroid_{results['scan'][1]/max(results['centroid'][1],1):.1f}x"
+        f"_diskann_{results['scan'][1]/max(results['diskann'][1],1):.1f}x"
+        f"_paper_25x_200x",
+    )
+
+
+if __name__ == "__main__":
+    main()

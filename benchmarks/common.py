@@ -1,0 +1,38 @@
+"""Shared benchmark scaffolding: timing, CSV rows, cluster factory."""
+
+from __future__ import annotations
+
+import sys
+import tempfile
+import time
+from contextlib import contextmanager
+
+import numpy as np
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+@contextmanager
+def timed():
+    t0 = time.perf_counter()
+    box = {}
+    yield box
+    box["s"] = time.perf_counter() - t0
+
+
+def clustered(rng, n, dim, n_clusters=32, scale=4.0):
+    centers = rng.normal(size=(n_clusters, dim)) * scale
+    per = n // n_clusters
+    X = np.concatenate(
+        [c + rng.normal(size=(per, dim)) for c in centers]
+    ).astype(np.float32)
+    rng.shuffle(X)
+    return X
+
+
+def make_cluster(num_executors=4):
+    from repro.runtime.cluster import make_local_cluster
+
+    return make_local_cluster(tempfile.mkdtemp(), num_executors=num_executors)

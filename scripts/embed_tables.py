@@ -1,0 +1,33 @@
+"""Regenerate EXPERIMENTS.md's embedded tables from results/*.jsonl.
+
+    PYTHONPATH=src python scripts/embed_tables.py
+"""
+
+import io
+import re
+import subprocess
+import sys
+
+out = subprocess.run(
+    [sys.executable, "-m", "repro.analysis.report"],
+    capture_output=True, text=True, check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+).stdout
+perf_idx = out.index("## §Perf")
+main_tables = out[:perf_idx].rstrip()
+perf_tables = out[perf_idx:].split("\n", 1)[1].strip()
+
+content = open("EXPERIMENTS.md").read()
+content = re.sub(
+    r"<!-- BEGIN GENERATED TABLES -->.*?<!-- END GENERATED TABLES -->",
+    "<!-- BEGIN GENERATED TABLES -->\n" + main_tables + "\n<!-- END GENERATED TABLES -->",
+    content,
+    flags=re.S,
+)
+content = re.sub(
+    r"<!-- BEGIN PERF TABLE -->.*?<!-- END PERF TABLE -->",
+    "<!-- BEGIN PERF TABLE -->\n" + perf_tables + "\n<!-- END PERF TABLE -->",
+    content,
+    flags=re.S,
+)
+open("EXPERIMENTS.md", "w").write(content)
+print("EXPERIMENTS.md tables refreshed:", len(content.splitlines()), "lines")

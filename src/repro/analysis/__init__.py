@@ -1,0 +1,5 @@
+"""Roofline analysis: jaxpr FLOP accounting, HLO collective parsing."""
+
+from repro.analysis.flops import count_jaxpr_flops  # noqa: F401
+from repro.analysis.hlo import collective_bytes_from_hlo  # noqa: F401
+from repro.analysis.roofline import RooflineTerms, compute_roofline  # noqa: F401

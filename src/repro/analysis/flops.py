@@ -1,0 +1,93 @@
+"""Trip-count-aware FLOP accounting from the jaxpr.
+
+``compiled.cost_analysis()`` visits each HLO instruction once, so a
+scan-over-layers module under-reports FLOPs by ~num_layers× (verified in
+EXPERIMENTS.md §Dry-run).  The jaxpr still carries every scan's static
+``length``, so walking it and multiplying body costs by trip counts gives
+the exact analytic FLOP count of the compiled program — including autodiff
+(the backward scan is a first-class scan in the jaxpr).
+
+Counted: dot_general (2·M·N·K·batch), conv, and a 1-flop-per-element charge
+for arithmetic elementwise/reduce ops.  ``cond`` branches contribute their
+*maximum* (conservative for roofline).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax import core
+
+ELEMENTWISE = {
+    "add", "sub", "mul", "div", "max", "min", "exp", "log", "tanh", "logistic",
+    "rsqrt", "sqrt", "neg", "abs", "floor", "ceil", "round", "sign", "pow",
+    "integer_pow", "erf", "cumsum", "cumprod", "select_n", "clamp", "and", "or",
+    "xor", "not", "erf_inv", "expm1", "log1p", "sin", "cos",
+}
+REDUCTIONS = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "argmax", "argmin"}
+
+
+def _size(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) if aval.shape else 1
+    except Exception:
+        return 0
+
+
+def _dot_flops(eqn) -> float:
+    dnums = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dnums
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    batch = int(np.prod([lhs.shape[i] for i in lb])) if lb else 1
+    contract = int(np.prod([lhs.shape[i] for i in lc])) if lc else 1
+    m = int(np.prod([s for i, s in enumerate(lhs.shape) if i not in set(lc) | set(lb)]))
+    n = int(np.prod([s for i, s in enumerate(rhs.shape) if i not in set(rc) | set(rb)]))
+    return 2.0 * batch * m * n * contract
+
+
+def _jaxpr_flops(jaxpr: core.Jaxpr) -> float:
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            total += _dot_flops(eqn)
+        elif prim in ("conv_general_dilated",):
+            out = eqn.outvars[0].aval
+            lhs = eqn.invars[0].aval
+            rhs = eqn.invars[1].aval
+            total += 2.0 * _size(out) * int(np.prod(rhs.shape[:-1]))
+        elif prim == "scan":
+            body = eqn.params["jaxpr"].jaxpr
+            total += eqn.params["length"] * _jaxpr_flops(body)
+        elif prim == "while":
+            body = eqn.params["body_jaxpr"].jaxpr
+            # data-dependent trip count: fall back to a declared bound if the
+            # caller attached one (beam search); else count once.
+            trips = eqn.params.get("_trip_hint", 1)
+            total += trips * _jaxpr_flops(body)
+        elif prim == "cond":
+            branches = eqn.params["branches"]
+            total += max((_jaxpr_flops(b.jaxpr) for b in branches), default=0.0)
+        elif prim in ("pjit", "closed_call", "core_call", "xla_call", "remat_call"):
+            inner = eqn.params.get("jaxpr")
+            if inner is not None:
+                total += _jaxpr_flops(inner.jaxpr if hasattr(inner, "jaxpr") else inner)
+        elif prim in ("custom_jvp_call", "custom_vjp_call", "custom_vjp_call_jaxpr"):
+            inner = eqn.params.get("call_jaxpr") or eqn.params.get("fun_jaxpr")
+            if inner is not None:
+                total += _jaxpr_flops(inner.jaxpr if hasattr(inner, "jaxpr") else inner)
+        elif prim == "checkpoint" or prim == "remat2":
+            inner = eqn.params.get("jaxpr")
+            if inner is not None:
+                total += _jaxpr_flops(inner)
+        elif prim in ELEMENTWISE or prim in REDUCTIONS:
+            total += float(_size(eqn.outvars[0].aval))
+    return total
+
+
+def count_jaxpr_flops(fn, *args, **kwargs) -> float:
+    """Analytic FLOPs of ``fn(*args)`` (args may be ShapeDtypeStructs)."""
+    closed = jax.make_jaxpr(fn, **kwargs)(*args)
+    return _jaxpr_flops(closed.jaxpr)

@@ -1,0 +1,74 @@
+"""Roofline terms for TPU v5e (DESIGN.md §7).
+
+    compute    = FLOPs / (chips × 197e12)          [bf16 peak]
+    memory     = bytes / (chips × 819e9)           [HBM]
+    collective = coll_bytes / (chips × n_links × 50e9)   [ICI]
+                 + dcn_bytes / (chips × dcn_bw)          [multi-pod]
+
+FLOPs come from the trip-count-aware jaxpr counter; bytes from an analytic
+traffic model (params read once per step + activation/cache traffic), with
+the raw ``cost_analysis`` numbers recorded alongside for transparency;
+collective bytes from the HLO parser (trip-corrected).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_LINK_BW = 50e9  # bytes/s per link
+ICI_LINKS = 4  # v5e: 4 usable ICI links per chip in a 2D torus (x±, y±... 4)
+DCN_BW = 25e9  # bytes/s per chip cross-pod (conservative DCN share)
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # inputs
+    hlo_flops_raw: float  # cost_analysis (single-visit)
+    hlo_bytes_raw: float
+    jaxpr_flops: float  # trip-corrected analytic
+    model_bytes: float  # analytic traffic model
+    coll_bytes_raw: float
+    coll_bytes: float  # trip-corrected (ICI share)
+    dcn_bytes: float = 0.0
+    model_flops: float = 0.0  # 6·N_active·D or 2·N_active per token
+    # derived (seconds)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0  # MODEL_FLOPS / jaxpr_flops
+    roofline_fraction: float = 0.0  # max-term bound vs pure-compute bound
+    extra: Dict[str, float] = field(default_factory=dict)
+
+    def finalize(self) -> "RooflineTerms":
+        self.t_compute = self.jaxpr_flops / (self.chips * PEAK_FLOPS)
+        self.t_memory = self.model_bytes / (self.chips * HBM_BW)
+        t_ici = self.coll_bytes / (self.chips * ICI_LINKS * ICI_LINK_BW)
+        t_dcn = self.dcn_bytes / (self.chips * DCN_BW)
+        self.t_collective = t_ici + t_dcn
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        self.bottleneck = max(terms, key=terms.get)
+        self.useful_ratio = (
+            self.model_flops / self.jaxpr_flops if self.jaxpr_flops else 0.0
+        )
+        # fraction of the pure-compute roofline this step could achieve if
+        # perfectly overlapped: useful_compute_time / max(all terms)
+        t_useful = self.model_flops / (self.chips * PEAK_FLOPS)
+        bound = max(terms.values())
+        self.roofline_fraction = t_useful / bound if bound > 0 else 0.0
+        return self
+
+
+def compute_roofline(**kw) -> RooflineTerms:
+    return RooflineTerms(**kw).finalize()

@@ -1,0 +1,140 @@
+"""Product quantization (Jégou et al. [10]) — train / encode / ADC LUTs.
+
+Paper defaults: ``m = 48`` subquantizers, ``nbits = 8`` (K = 256 codewords).
+The codebook shape is ``(m, K, D/m)`` float32; codes are ``(N, m)`` uint8.
+The in-memory footprint claim of §3.2 / §9.2 (48 B per vector at m=48)
+falls directly out of this layout and is validated in the benchmarks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kmeans import train_kmeans
+from repro.kernels import ops, ref
+
+
+@dataclass
+class PQCodebook:
+    codebook: np.ndarray  # (m, K, dsub) float32
+    metric: str = "l2"
+
+    @property
+    def m(self) -> int:
+        return self.codebook.shape[0]
+
+    @property
+    def K(self) -> int:
+        return self.codebook.shape[1]
+
+    @property
+    def dsub(self) -> int:
+        return self.codebook.shape[2]
+
+    @property
+    def dim(self) -> int:
+        return self.m * self.dsub
+
+    @property
+    def nbits(self) -> int:
+        return int(np.log2(self.K))
+
+    # -- serialization (flat f32 + shape header handled by blob codec) -----
+    def tobytes(self) -> bytes:
+        return np.ascontiguousarray(self.codebook, dtype=np.float32).tobytes()
+
+    @staticmethod
+    def frombytes(data: bytes, m: int, K: int, dsub: int, metric: str = "l2") -> "PQCodebook":
+        arr = np.frombuffer(data, dtype=np.float32).reshape(m, K, dsub).copy()
+        return PQCodebook(arr, metric)
+
+
+def train_pq(
+    vectors: np.ndarray,
+    m: int = 48,
+    nbits: int = 8,
+    *,
+    iters: int = 12,
+    seed: int = 0,
+    sample_cap: int = 65536,
+    metric: str = "l2",
+) -> PQCodebook:
+    """Train one k-means codebook per subquantizer."""
+    vectors = np.ascontiguousarray(vectors, dtype=np.float32)
+    n, d = vectors.shape
+    if d % m:
+        raise ValueError(f"dim {d} not divisible by m={m}")
+    K = 1 << nbits
+    rng = np.random.default_rng(seed)
+    if n > sample_cap:
+        vectors = vectors[rng.choice(n, size=sample_cap, replace=False)]
+    dsub = d // m
+    sub = vectors.reshape(-1, m, dsub)
+    codebook = np.empty((m, K, dsub), dtype=np.float32)
+    for j in range(m):
+        k_eff = min(K, sub.shape[0])
+        cents, _ = train_kmeans(sub[:, j, :], k_eff, iters=iters, seed=seed + j)
+        if k_eff < K:  # degenerate tiny-corpus case: tile the codebook
+            reps = int(np.ceil(K / k_eff))
+            cents = np.tile(cents, (reps, 1))[:K]
+        codebook[j] = cents
+    return PQCodebook(codebook, metric)
+
+
+def encode(pq: PQCodebook, vectors: np.ndarray, batch: int = 8192) -> np.ndarray:
+    """PQ-encode vectors -> (N, m) uint8 codes."""
+    vectors = np.ascontiguousarray(vectors, dtype=np.float32)
+    n, d = vectors.shape
+    if d != pq.dim:
+        raise ValueError(f"dim {d} != codebook dim {pq.dim}")
+    out = np.empty((n, pq.m), dtype=np.uint8)
+    for start in range(0, n, batch):
+        stop = min(start + batch, n)
+        sub = vectors[start:stop].reshape(stop - start, pq.m, pq.dsub)
+        for j in range(pq.m):
+            idx, _ = ops.kmeans_assign(
+                jnp.asarray(sub[:, j, :]), jnp.asarray(pq.codebook[j]), backend="ref"
+            )
+            out[start:stop, j] = np.asarray(idx).astype(np.uint8)
+    return out
+
+
+def decode(pq: PQCodebook, codes: np.ndarray) -> np.ndarray:
+    """Reconstruct approximate vectors from codes (N, m) -> (N, D)."""
+    n = codes.shape[0]
+    out = np.empty((n, pq.dim), dtype=np.float32)
+    for j in range(pq.m):
+        out[:, j * pq.dsub : (j + 1) * pq.dsub] = pq.codebook[j][codes[:, j]]
+    return out
+
+
+def build_luts(pq: PQCodebook, queries: np.ndarray) -> jnp.ndarray:
+    """Per-query ADC lookup tables (Q, m, K)."""
+    return ref.build_pq_luts(
+        jnp.asarray(queries, dtype=jnp.float32), jnp.asarray(pq.codebook), pq.metric
+    )
+
+
+def adc_scores(
+    pq: PQCodebook,
+    queries: np.ndarray,
+    codes: np.ndarray,
+    *,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    """Full ADC scan: (Q, N) approximate distances."""
+    luts = build_luts(pq, queries)
+    return ops.pq_scan(luts, jnp.asarray(codes.astype(np.int32)), backend=backend)
+
+
+def reconstruction_error(pq: PQCodebook, vectors: np.ndarray, sample: Optional[int] = 4096) -> float:
+    """Mean squared PQ reconstruction error (quality diagnostic)."""
+    if sample and vectors.shape[0] > sample:
+        rng = np.random.default_rng(0)
+        vectors = vectors[rng.choice(vectors.shape[0], sample, replace=False)]
+    approx = decode(pq, encode(pq, vectors))
+    return float(np.mean(np.sum((vectors - approx) ** 2, axis=1)))

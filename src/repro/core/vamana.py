@@ -1,0 +1,614 @@
+"""Vamana / DiskANN graph index (paper §2.2, §5–§7) — JAX-accelerated.
+
+TPU adaptation (DESIGN.md §2): the graph lives as a **dense padded adjacency**
+``int32 (N, R)`` (−1 padding) instead of SSD-resident varint lists; beam
+search is a fully-jittable ``lax.while_loop`` over a fixed-size candidate
+pool, so the probe path can run *on device* inside a shard_map'd serving
+step.  Graph construction keeps DiskANN's batch-parallel structure: batched
+beam searches + batched robust-prune (both jit'd), with only the variable-
+degree reverse-edge scatter on host.
+
+Entry points:
+- :func:`build_vamana`      — full build (random init + 2 refinement passes)
+- :meth:`VamanaGraph.search`        — batched beam search (full precision)
+- :meth:`VamanaGraph.search_pq`     — beam search with PQ ADC distances and
+  exact rerank of the pool (the paper's Stage-A probe)
+- :meth:`VamanaGraph.insert_batch`  — greedy insert (§7.2 refresh)
+- :meth:`VamanaGraph.tombstone`     — lazy deletes (§7.3)
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pq import PQCodebook, build_luts, encode
+
+
+@dataclass
+class VamanaParams:
+    R: int = 64  # max degree
+    L: int = 100  # beam width / pool size
+    alpha: float = 1.2  # RNG pruning slack
+    metric: str = "l2"  # l2 | ip
+
+    def to_props(self) -> dict:
+        return {"R": str(self.R), "L": str(self.L), "alpha": str(self.alpha), "metric": self.metric}
+
+
+# ---------------------------------------------------------------------------
+# jit'd primitives.  All take padded fixed shapes; `n_valid` bounds real ids.
+# ---------------------------------------------------------------------------
+
+
+def _pair_dist(q: jnp.ndarray, v: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """q: (..., D), v: (..., D) -> (...)"""
+    if metric == "ip":
+        return -jnp.sum(q * v, axis=-1)
+    diff = q - v
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def _dedupe_sorted_by_id(ids, dists, expanded):
+    """Mark duplicate ids invalid.  Inputs already sorted by id asc with
+    expanded entries first within a run (so the surviving copy keeps its
+    expansion status)."""
+    dup = jnp.concatenate(
+        [jnp.zeros_like(ids[:, :1], dtype=bool), ids[:, 1:] == ids[:, :-1]], axis=1
+    )
+    dists = jnp.where(dup, jnp.inf, dists)
+    expanded = jnp.where(dup, True, expanded)  # never expand a dup
+    return ids, dists, expanded
+
+
+@functools.partial(jax.jit, static_argnames=("L", "max_iters", "metric", "use_pq"))
+def _beam_search(
+    vectors: jnp.ndarray,  # (cap, D) f32   (or PQ codes (cap, m) int32 if use_pq)
+    adjacency: jnp.ndarray,  # (cap, R) int32, -1 pad
+    n_valid: jnp.ndarray,  # () int32
+    entry: jnp.ndarray,  # () int32
+    queries: jnp.ndarray,  # (B, D) f32     (or LUTs (B, m, K) f32 if use_pq)
+    L: int,
+    max_iters: int,
+    metric: str,
+    use_pq: bool,
+):
+    """Batched greedy beam search.
+
+    Returns (pool_ids (B,L), pool_dists (B,L), visited_ids (B,max_iters),
+    visited_dists (B,max_iters)).  Invalid slots: id == cap, dist == +inf.
+    """
+    cap = vectors.shape[0]
+    B = queries.shape[0]
+    R = adjacency.shape[1]
+    INF = jnp.float32(jnp.inf)
+
+    def dist_to(ids: jnp.ndarray) -> jnp.ndarray:  # ids (B, K) -> (B, K)
+        safe = jnp.clip(ids, 0, cap - 1)
+        if use_pq:
+            codes = vectors[safe]  # (B, K, m) int32
+            # luts: (B, m, Kcode); gather -> (B, m, K)
+            g = jnp.take_along_axis(queries, codes.transpose(0, 2, 1), axis=2)
+            d = jnp.sum(g, axis=1)
+        else:
+            v = vectors[safe]  # (B, K, D)
+            d = _pair_dist(queries[:, None, :], v, metric)
+        return jnp.where(ids < n_valid, d, INF)
+
+    # multi-entry seeding: the medoid plus three strided nodes.  Costs three
+    # extra expansions but makes search robust to weakly-connected regions
+    # (single-pass builds on clustered data can leave islands the medoid
+    # alone never reaches).
+    n_seeds = min(4, L)
+    strides = jnp.arange(n_seeds, dtype=jnp.int32)
+    seeds = jnp.where(
+        strides == 0, entry, (strides * (n_valid // jnp.int32(n_seeds))) % jnp.maximum(n_valid, 1)
+    )
+    pool_ids = jnp.full((B, L), cap, jnp.int32).at[:, :n_seeds].set(
+        jnp.broadcast_to(seeds, (B, n_seeds))
+    )
+    d0 = dist_to(pool_ids[:, :n_seeds])
+    pool_dists = jnp.full((B, L), INF).at[:, :n_seeds].set(d0)
+    pool_exp = jnp.ones((B, L), bool).at[:, :n_seeds].set(False)
+    visited_ids = jnp.full((B, max_iters), cap, jnp.int32)
+    visited_dists = jnp.full((B, max_iters), INF)
+
+    def has_frontier(state):
+        _, dists, exp, *_ = state
+        return jnp.any(~exp & jnp.isfinite(dists))
+
+    def cond(state):
+        return has_frontier(state) & (state[-1] < max_iters)
+
+    def body(state):
+        ids, dists, exp, vis_ids, vis_dists, it = state
+        frontier = jnp.where(~exp & jnp.isfinite(dists), dists, INF)
+        best = jnp.argmin(frontier, axis=1)  # (B,)
+        row = jnp.arange(B)
+        best_id = ids[row, best]
+        best_dist = dists[row, best]
+        active = jnp.isfinite(frontier[row, best])  # row still has frontier
+        exp = exp.at[row, best].set(True)
+        vis_ids = vis_ids.at[row, it].set(jnp.where(active, best_id, cap))
+        vis_dists = vis_dists.at[row, it].set(jnp.where(active, best_dist, INF))
+        nbrs = adjacency[jnp.clip(best_id, 0, cap - 1)]  # (B, R)
+        nbrs = jnp.where((nbrs >= 0) & active[:, None], nbrs, cap)
+        nd = dist_to(nbrs)
+        # merge pool + neighbors
+        cat_ids = jnp.concatenate([ids, nbrs], axis=1)
+        cat_dists = jnp.concatenate([dists, nd], axis=1)
+        cat_exp = jnp.concatenate([exp, jnp.zeros_like(nbrs, bool)], axis=1)
+        # sort by (id asc, expanded first) to dedupe: key = id*2 + (1-expanded)
+        key = cat_ids * 2 + (1 - cat_exp.astype(jnp.int32))
+        order = jnp.argsort(key, axis=1)
+        cat_ids = jnp.take_along_axis(cat_ids, order, axis=1)
+        cat_dists = jnp.take_along_axis(cat_dists, order, axis=1)
+        cat_exp = jnp.take_along_axis(cat_exp, order, axis=1)
+        cat_ids, cat_dists, cat_exp = _dedupe_sorted_by_id(cat_ids, cat_dists, cat_exp)
+        # keep top-L by distance
+        order = jnp.argsort(cat_dists, axis=1)[:, :L]
+        ids = jnp.take_along_axis(cat_ids, order, axis=1)
+        dists = jnp.take_along_axis(cat_dists, order, axis=1)
+        exp = jnp.take_along_axis(cat_exp, order, axis=1)
+        return ids, dists, exp, vis_ids, vis_dists, it + 1
+
+    state = (pool_ids, pool_dists, pool_exp, visited_ids, visited_dists, jnp.int32(0))
+    ids, dists, _exp, vis_ids, vis_dists, _ = jax.lax.while_loop(cond, body, state)
+    return ids, dists, vis_ids, vis_dists
+
+
+@functools.partial(jax.jit, static_argnames=("R", "alpha", "metric"))
+def _robust_prune(
+    vectors: jnp.ndarray,  # (cap, D)
+    p_vecs: jnp.ndarray,  # (B, D) the points being pruned
+    cand_ids: jnp.ndarray,  # (B, C) candidate ids (cap = invalid)
+    n_valid: jnp.ndarray,
+    R: int,
+    alpha: float,
+    metric: str,
+):
+    """Vectorized α-RNG robust prune.  Returns (B, R) int32, -1 padded."""
+    cap, D = vectors.shape
+    B, C = cand_ids.shape
+    safe = jnp.clip(cand_ids, 0, cap - 1)
+    cand_vecs = vectors[safe]  # (B, C, D)
+    valid = cand_ids < n_valid
+    d_p = jnp.where(valid, _pair_dist(p_vecs[:, None, :], cand_vecs, metric), jnp.inf)
+    # dedupe identical ids: sort by id, invalidate repeats
+    order = jnp.argsort(cand_ids, axis=1)
+    s_ids = jnp.take_along_axis(cand_ids, order, axis=1)
+    s_dp = jnp.take_along_axis(d_p, order, axis=1)
+    s_vecs = jnp.take_along_axis(cand_vecs, order[:, :, None], axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(s_ids[:, :1], bool), s_ids[:, 1:] == s_ids[:, :-1]], axis=1
+    )
+    s_dp = jnp.where(dup, jnp.inf, s_dp)
+    alive = jnp.isfinite(s_dp)
+
+    result = jnp.full((B, R), -1, jnp.int32)
+
+    def body(step, carry):
+        alive, result = carry
+        masked = jnp.where(alive, s_dp, jnp.inf)
+        pick = jnp.argmin(masked, axis=1)  # (B,)
+        row = jnp.arange(B)
+        ok = jnp.isfinite(masked[row, pick])
+        pick_id = s_ids[row, pick]
+        result = result.at[:, step].set(jnp.where(ok, pick_id, -1))
+        pvec = s_vecs[row, pick]  # (B, D)
+        d_star = _pair_dist(pvec[:, None, :], s_vecs, metric)  # (B, C)
+        kill = alpha * d_star <= s_dp  # removes pick itself (d_star=0)
+        alive = alive & ~kill & ok[:, None]
+        return alive, result
+
+    _, result = jax.lax.fori_loop(0, R, body, (alive, result))
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Graph object (host-resident arrays; device work via the jit'd primitives)
+# ---------------------------------------------------------------------------
+
+
+def _round_capacity(n: int) -> int:
+    cap = 1024
+    while cap < n:
+        cap *= 2
+    return cap
+
+
+@dataclass
+class VamanaGraph:
+    vectors: np.ndarray  # (cap, D) f32; rows >= n are padding
+    adjacency: np.ndarray  # (cap, R) int32, -1 pad
+    n: int
+    medoid: int
+    params: VamanaParams
+    tombstones: np.ndarray = field(default=None)  # (cap,) bool
+    pq: Optional[PQCodebook] = None
+    pq_codes: Optional[np.ndarray] = None  # (cap, m) uint8
+
+    def __post_init__(self):
+        if self.tombstones is None:
+            self.tombstones = np.zeros(self.vectors.shape[0], dtype=bool)
+
+    # -- stats ---------------------------------------------------------------
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[1]
+
+    @property
+    def num_live(self) -> int:
+        return int(self.n - self.tombstones[: self.n].sum())
+
+    @property
+    def tombstone_ratio(self) -> float:
+        return float(self.tombstones[: self.n].sum() / max(self.n, 1))
+
+    def degrees(self) -> np.ndarray:
+        return (self.adjacency[: self.n] >= 0).sum(axis=1)
+
+    # -- search ---------------------------------------------------------------
+    def search(
+        self,
+        queries: np.ndarray,
+        k: int,
+        L: Optional[int] = None,
+        batch: int = 64,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Full-precision beam search.  Returns (dists (Q,k), ids (Q,k));
+        tombstoned nodes traversed but filtered (paper §7.3)."""
+        L = max(L or self.params.L, k)
+        queries = np.ascontiguousarray(queries, dtype=np.float32)
+        out_d = np.empty((queries.shape[0], k), np.float32)
+        out_i = np.empty((queries.shape[0], k), np.int64)
+        max_iters = int(1.3 * L) + 8
+        for s in range(0, queries.shape[0], batch):
+            q = queries[s : s + batch]
+            pad = batch - q.shape[0]
+            qb = np.pad(q, ((0, pad), (0, 0))) if pad else q
+            ids, dists, _, _ = _beam_search(
+                jnp.asarray(self.vectors),
+                jnp.asarray(self.adjacency),
+                jnp.int32(self.n),
+                jnp.int32(self.medoid),
+                jnp.asarray(qb),
+                L,
+                max_iters,
+                self.params.metric,
+                False,
+            )
+            ids_np = np.asarray(ids)
+            dists_np = np.asarray(dists)
+            # lazy-tombstone filter
+            ts = self.tombstones[np.clip(ids_np, 0, self.vectors.shape[0] - 1)]
+            dists_np = np.where(ts | (ids_np >= self.n), np.inf, dists_np)
+            order = np.argsort(dists_np, axis=1)[:, :k]
+            d = np.take_along_axis(dists_np, order, axis=1)
+            i = np.take_along_axis(ids_np, order, axis=1)
+            out_d[s : s + q.shape[0]] = d[: q.shape[0]]
+            out_i[s : s + q.shape[0]] = i[: q.shape[0]]
+        return out_d, out_i
+
+    def search_pq(
+        self,
+        queries: np.ndarray,
+        k: int,
+        L: Optional[int] = None,
+        rerank: bool = True,
+        batch: int = 64,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Stage-A probe: PQ-approximate traversal + full-precision rerank of
+        the candidate pool (paper §6)."""
+        if self.pq is None or self.pq_codes is None:
+            raise ValueError("graph has no PQ data; call attach_pq()")
+        L = max(L or self.params.L, k)
+        queries = np.ascontiguousarray(queries, dtype=np.float32)
+        out_d = np.empty((queries.shape[0], k), np.float32)
+        out_i = np.empty((queries.shape[0], k), np.int64)
+        max_iters = int(1.3 * L) + 8
+        codes_j = jnp.asarray(self.pq_codes.astype(np.int32))
+        for s in range(0, queries.shape[0], batch):
+            q = queries[s : s + batch]
+            pad = batch - q.shape[0]
+            qb = np.pad(q, ((0, pad), (0, 0))) if pad else q
+            luts = build_luts(self.pq, qb)  # (B, m, K)
+            ids, dists, vis_ids, _vis_d = _beam_search(
+                codes_j,
+                jnp.asarray(self.adjacency),
+                jnp.int32(self.n),
+                jnp.int32(self.medoid),
+                luts,
+                L,
+                max_iters,
+                self.params.metric,
+                True,
+            )
+            ids_np = np.asarray(ids)
+            dists_np = np.asarray(dists)
+            if rerank:
+                # DiskANN-style rerank: every *visited* node's full vector is
+                # already paged in during traversal, so the exact rerank runs
+                # over pool ∪ visited, not just the final PQ-ranked pool —
+                # this is what keeps recall high when PQ noise exceeds the
+                # within-cluster distance gaps.
+                ids_np = np.concatenate([ids_np, np.asarray(vis_ids)], axis=1)
+                # dedupe per row (keep first occurrence, invalidate repeats)
+                sort_idx = np.argsort(ids_np, axis=1, kind="stable")
+                sorted_ids = np.take_along_axis(ids_np, sort_idx, axis=1)
+                dup = np.concatenate(
+                    [
+                        np.zeros((ids_np.shape[0], 1), bool),
+                        sorted_ids[:, 1:] == sorted_ids[:, :-1],
+                    ],
+                    axis=1,
+                )
+                ids_np = np.where(dup, self.vectors.shape[0], sorted_ids)
+                safe = np.clip(ids_np, 0, self.vectors.shape[0] - 1)
+                vecs = self.vectors[safe]  # (B, C, D)
+                if self.params.metric == "ip":
+                    dists_np = -np.einsum("bcd,bd->bc", vecs, qb)
+                else:
+                    dists_np = np.sum((vecs - qb[:, None, :]) ** 2, axis=-1)
+                dists_np = np.where(ids_np >= self.n, np.inf, dists_np)
+            ts = self.tombstones[np.clip(ids_np, 0, self.vectors.shape[0] - 1)]
+            dists_np = np.where(ts | (ids_np >= self.n), np.inf, dists_np)
+            order = np.argsort(dists_np, axis=1)[:, :k]
+            out_d[s : s + q.shape[0]] = np.take_along_axis(dists_np, order, axis=1)[: q.shape[0]]
+            out_i[s : s + q.shape[0]] = np.take_along_axis(ids_np, order, axis=1)[: q.shape[0]]
+        return out_d, out_i
+
+    # -- mutation -----------------------------------------------------------------
+    def _ensure_capacity(self, extra: int) -> None:
+        need = self.n + extra
+        cap = self.vectors.shape[0]
+        if need <= cap:
+            return
+        new_cap = _round_capacity(need)
+        self.vectors = np.concatenate(
+            [self.vectors, np.zeros((new_cap - cap, self.dim), np.float32)]
+        )
+        self.adjacency = np.concatenate(
+            [self.adjacency, np.full((new_cap - cap, self.params.R), -1, np.int32)]
+        )
+        self.tombstones = np.concatenate([self.tombstones, np.zeros(new_cap - cap, bool)])
+        if self.pq_codes is not None:
+            self.pq_codes = np.concatenate(
+                [self.pq_codes, np.zeros((new_cap - cap, self.pq.m), np.uint8)]
+            )
+
+    def insert_batch(self, new_vectors: np.ndarray, batch: int = 64) -> np.ndarray:
+        """Greedy insert (paper §7.2): beam search from medoid → robust prune
+        → bidirectional edges → re-prune over-degree neighbors.
+        Returns the assigned ids."""
+        new_vectors = np.ascontiguousarray(new_vectors, dtype=np.float32)
+        count = new_vectors.shape[0]
+        self._ensure_capacity(count)
+        ids = np.arange(self.n, self.n + count, dtype=np.int64)
+        self.vectors[self.n : self.n + count] = new_vectors
+        if self.pq is not None:
+            self.pq_codes[self.n : self.n + count] = encode(self.pq, new_vectors)
+        # keep n at pre-insert value during search so new points are invisible
+        p = self.params
+        max_iters = int(1.3 * p.L) + 8
+        for s in range(0, count, batch):
+            stop = min(s + batch, count)
+            q = new_vectors[s:stop]
+            pad = batch - q.shape[0]
+            qb = np.pad(q, ((0, pad), (0, 0))) if pad else q
+            pool_ids, pool_dists, vis_ids, vis_dists = _beam_search(
+                jnp.asarray(self.vectors),
+                jnp.asarray(self.adjacency),
+                jnp.int32(self.n),
+                jnp.int32(self.medoid),
+                jnp.asarray(qb),
+                p.L,
+                max_iters,
+                p.metric,
+                False,
+            )
+            cand = jnp.concatenate([pool_ids, vis_ids], axis=1)
+            nbrs = _robust_prune(
+                jnp.asarray(self.vectors),
+                jnp.asarray(qb),
+                cand,
+                jnp.int32(self.n),
+                p.R,
+                p.alpha,
+                p.metric,
+            )
+            nbrs_np = np.asarray(nbrs)[: stop - s]
+            batch_ids = ids[s:stop]
+            self.adjacency[batch_ids] = nbrs_np
+            self._add_reverse_edges(batch_ids, nbrs_np)
+        self.n += count
+        return ids
+
+    def _add_reverse_edges(self, src_ids: np.ndarray, nbrs: np.ndarray) -> None:
+        """Host-side scatter of reverse edges with robust-prune on overflow."""
+        p = self.params
+        overflow: dict[int, list[int]] = {}
+        for sid, row in zip(src_ids, nbrs):
+            for nbr in row:
+                if nbr < 0:
+                    continue
+                adj = self.adjacency[nbr]
+                slot = np.flatnonzero(adj < 0)
+                if sid in adj:
+                    continue
+                if len(slot):
+                    adj[slot[0]] = sid
+                else:
+                    overflow.setdefault(int(nbr), []).append(int(sid))
+        if overflow:
+            self._reprune_nodes(overflow)
+
+    def _reprune_nodes(self, overflow: dict) -> None:
+        """Batch robust-prune nodes whose degree exceeded R.
+
+        Shapes are bucketed (C to a multiple of 32, node count to the next
+        power of two) so `_robust_prune` compiles only a handful of times
+        over an entire build instead of once per batch.
+        """
+        p = self.params
+        nodes = np.array(sorted(overflow.keys()), dtype=np.int64)
+        max_extra = max(len(v) for v in overflow.values())
+        C = p.R + max(32, 32 * int(np.ceil(max_extra / 32)))
+        cap = self.vectors.shape[0]
+        n_pad = 1 << int(np.ceil(np.log2(max(len(nodes), 1))))
+        cand = np.full((n_pad, C), cap, dtype=np.int32)
+        max_id = int(nodes.max())
+        for i, node in enumerate(nodes):
+            cur = self.adjacency[node]
+            cur = cur[cur >= 0]
+            extras = np.array(overflow[int(node)], dtype=np.int32)
+            allc = np.concatenate([cur.astype(np.int32), extras])[:C]
+            cand[i, : len(allc)] = allc
+            if len(allc):
+                max_id = max(max_id, int(allc.max()))
+        p_vecs = np.zeros((n_pad, self.dim), np.float32)
+        p_vecs[: len(nodes)] = self.vectors[nodes]
+        # validity bound must cover mid-insert ids (>= self.n): their vectors
+        # are already written, and excluding them silently drops every
+        # reverse edge into a dense region (zero-reachability inserts)
+        pruned = _robust_prune(
+            jnp.asarray(self.vectors),
+            jnp.asarray(p_vecs),
+            jnp.asarray(cand),
+            jnp.int32(max(self.n, max_id + 1)),
+            p.R,
+            p.alpha,
+            p.metric,
+        )
+        self.adjacency[nodes] = np.asarray(pruned)[: len(nodes)]
+
+    def tombstone(self, ids: np.ndarray) -> None:
+        self.tombstones[np.asarray(ids, dtype=np.int64)] = True
+
+    def attach_pq(self, pq: PQCodebook, codes: Optional[np.ndarray] = None) -> None:
+        self.pq = pq
+        if codes is None:
+            codes = encode(pq, self.vectors[: self.n])
+        full = np.zeros((self.vectors.shape[0], pq.m), np.uint8)
+        full[: self.n] = codes[: self.n]
+        self.pq_codes = full
+
+
+# ---------------------------------------------------------------------------
+# build
+# ---------------------------------------------------------------------------
+
+
+def _medoid(vectors: np.ndarray) -> int:
+    mean = vectors.mean(axis=0, keepdims=True)
+    d = np.sum((vectors - mean) ** 2, axis=1)
+    return int(np.argmin(d))
+
+
+def build_vamana(
+    vectors: np.ndarray,
+    params: VamanaParams = VamanaParams(),
+    *,
+    seed: int = 0,
+    passes: int = 2,
+    batch: int = 64,
+    with_pq: bool = False,
+    pq_m: Optional[int] = None,
+    pq_nbits: int = 8,
+) -> VamanaGraph:
+    """Batch-parallel Vamana build.
+
+    1. random R-regular init;
+    2. ``passes`` refinement sweeps (first at α=1.0, last at α=params.alpha,
+       per the DiskANN two-pass schedule): for every point, beam-search the
+       current graph, robust-prune the visited set into its new neighbor
+       list, then scatter reverse edges.
+    """
+    vectors = np.ascontiguousarray(vectors, dtype=np.float32)
+    n, d = vectors.shape
+    if n == 0:
+        raise ValueError("empty build")
+    rng = np.random.default_rng(seed)
+    cap = _round_capacity(n)
+    padded = np.zeros((cap, d), np.float32)
+    padded[:n] = vectors
+    adjacency = np.full((cap, params.R), -1, np.int32)
+    if n > 1:
+        for i in range(n):  # random init, self-loop free
+            deg = min(params.R, n - 1)
+            choices = rng.choice(n - 1, size=deg, replace=False)
+            choices = choices + (choices >= i)
+            adjacency[i, :deg] = choices
+    graph = VamanaGraph(
+        vectors=padded,
+        adjacency=adjacency,
+        n=n,
+        medoid=_medoid(vectors),
+        params=params,
+    )
+    max_iters = int(1.3 * params.L) + 8
+    order = rng.permutation(n)
+    for p_idx in range(passes):
+        alpha = 1.0 if p_idx < passes - 1 else params.alpha
+        for s in range(0, n, batch):
+            sel = order[s : s + batch]
+            q = vectors[sel]
+            pad = batch - q.shape[0]
+            qb = np.pad(q, ((0, pad), (0, 0))) if pad else q
+            pool_ids, _pd, vis_ids, _vd = _beam_search(
+                jnp.asarray(graph.vectors),
+                jnp.asarray(graph.adjacency),
+                jnp.int32(n),
+                jnp.int32(graph.medoid),
+                jnp.asarray(qb),
+                params.L,
+                max_iters,
+                params.metric,
+                False,
+            )
+            cand = np.concatenate([np.asarray(pool_ids), np.asarray(vis_ids)], axis=1)
+            # a point must not select itself
+            cand = np.where(cand == np.pad(sel, (0, pad))[:, None], cap, cand)
+            nbrs = _robust_prune(
+                jnp.asarray(graph.vectors),
+                jnp.asarray(qb),
+                jnp.asarray(cand),
+                jnp.int32(n),
+                params.R,
+                alpha,
+                params.metric,
+            )
+            nbrs_np = np.asarray(nbrs)[: len(sel)]
+            graph.adjacency[sel] = nbrs_np
+            graph._add_reverse_edges(sel, nbrs_np)
+    if with_pq:
+        m = pq_m if pq_m is not None else max(1, d // 16)
+        from repro.core.pq import train_pq
+
+        pq = train_pq(vectors, m=m, nbits=pq_nbits)
+        graph.attach_pq(pq)
+    return graph
+
+
+def brute_force_topk(
+    vectors: np.ndarray, queries: np.ndarray, k: int, metric: str = "l2"
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact ground truth for recall measurements."""
+    from repro.kernels import ops
+
+    d, i = ops.exact_topk(
+        jnp.asarray(queries, jnp.float32), jnp.asarray(vectors, jnp.float32), k, metric=metric, backend="ref"
+    )
+    return np.asarray(d), np.asarray(i)
+
+
+def recall_at_k(result_ids: np.ndarray, truth_ids: np.ndarray) -> float:
+    hits = 0
+    for r, t in zip(result_ids, truth_ids):
+        hits += len(set(int(x) for x in r) & set(int(x) for x in t))
+    return hits / truth_ids.size

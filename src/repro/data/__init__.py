@@ -1,0 +1,3 @@
+"""Data pipeline: deterministic synthetic + lakehouse-backed token streams."""
+
+from repro.data.pipeline import SyntheticTokens, TokenTableReader, write_token_table  # noqa: F401

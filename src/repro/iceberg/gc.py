@@ -1,0 +1,70 @@
+"""Orphan-file cleanup (paper §7.4: superseded Puffin files are "reaped by
+the table format's existing orphan-file cleanup").
+
+An object under the table location is *referenced* if it is:
+- a metadata json (``v*.metadata.json``) at or below the retained version,
+- a manifest list / manifest reachable from any retained snapshot,
+- a data file live in any retained snapshot's manifests (any status — DELETED
+  entries still reference the file for time travel),
+- a Puffin file named by any retained snapshot's summary
+  (``statistics-file`` or ``ann.stale-statistics-file``).
+
+Everything else is an orphan.  ``collect_orphans`` returns them;
+``expire_and_collect`` additionally drops old snapshots first, which is how
+superseded index Puffins become orphaned.
+"""
+
+from __future__ import annotations
+
+from typing import List, Set
+
+from repro.iceberg.snapshot import (
+    Manifest,
+    TableMetadata,
+    read_manifest_list,
+    STATISTICS_FILE_PROP,
+)
+from repro.lakehouse.objectstore import ObjectStore
+
+
+def _referenced_keys(store: ObjectStore, meta: TableMetadata) -> Set[str]:
+    refs: Set[str] = set()
+    for v in range(meta.version + 1):
+        refs.add(f"{meta.location}/metadata/v{v}.metadata.json")
+    for snap in meta.snapshots:
+        refs.add(snap.manifest_list)
+        for mpath in read_manifest_list(store, snap.manifest_list):
+            refs.add(mpath)
+            for entry in Manifest.read(store, mpath).entries:
+                refs.add(entry.data_file.path)
+        for key in (STATISTICS_FILE_PROP, "ann.stale-statistics-file"):
+            if key in snap.summary:
+                refs.add(snap.summary[key])
+    return refs
+
+
+def collect_orphans(store: ObjectStore, meta: TableMetadata) -> List[str]:
+    refs = _referenced_keys(store, meta)
+    return [k for k in store.list(meta.location + "/") if k not in refs]
+
+
+def expire_snapshots(meta: TableMetadata, keep_last: int = 1) -> TableMetadata:
+    """Drop all but the last ``keep_last`` snapshots (by sequence number)."""
+    if keep_last < 1:
+        raise ValueError("must keep at least one snapshot")
+    meta.snapshots.sort(key=lambda s: s.sequence_number)
+    meta.snapshots = meta.snapshots[-keep_last:]
+    if meta.snapshots:
+        meta.current_snapshot_id = meta.snapshots[-1].snapshot_id
+    return meta
+
+
+def expire_and_collect(
+    store: ObjectStore, meta: TableMetadata, keep_last: int = 1, delete: bool = False
+) -> List[str]:
+    meta = expire_snapshots(meta, keep_last)
+    orphans = collect_orphans(store, meta)
+    if delete:
+        for key in orphans:
+            store.delete(key)
+    return orphans

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Three kernels, each with a pure-jnp oracle in :mod:`repro.kernels.ref` and a
+padded/jit'd public wrapper in :mod:`repro.kernels.ops`:
+
+- ``pq_scan``       — PQ asymmetric-distance scan (one-hot-matmul MXU form)
+- ``rerank``        — tiled exact-distance matrix for the rerank stage
+- ``kmeans_assign`` — K-tiled nearest-centroid assignment (running min)
+
+On CPU the kernels run under ``interpret=True`` for validation; production
+CPU paths dispatch to the oracles (see ops.py backend rules).
+"""
+
+from repro.kernels.ops import (  # noqa: F401
+    exact_distances,
+    exact_topk,
+    kmeans_assign,
+    pq_scan,
+    pq_scan_topk,
+)

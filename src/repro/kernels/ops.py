@@ -1,0 +1,159 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each op handles tile padding, dtype coercion, and backend dispatch:
+
+- ``backend="auto"``   → real Pallas on TPU; pure-jnp oracle on CPU (fast —
+  interpret mode executes the kernel body per grid step in Python and is for
+  *validation*, not production CPU work).
+- ``backend="pallas"`` → Pallas always (``interpret=True`` off-TPU).  This is
+  what the kernel correctness tests use.
+- ``backend="ref"``    → the ref.py oracle.
+
+Padding rules preserve semantics: feature dims pad with zeros (no effect on
+L2/IP), point/centroid tiles pad with +inf sentinels that can never win a
+min/top-k, query tiles pad with zeros and are sliced off the output.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.kmeans_assign import kmeans_assign_pallas
+from repro.kernels.pq_scan import pq_scan_pallas
+from repro.kernels.rerank import rerank_distances_pallas
+
+_BIG = jnp.float32(3.4e38)  # ~f32 max; safe "never wins" sentinel
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return backend
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int, value) -> Tuple[jnp.ndarray, int]:
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x, size
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=value), size
+
+
+# -- exact distances ---------------------------------------------------------
+
+def exact_distances(
+    queries: jnp.ndarray,
+    points: jnp.ndarray,
+    *,
+    metric: str = "l2",
+    backend: str = "auto",
+    tile_q: int = 128,
+    tile_n: int = 128,
+) -> jnp.ndarray:
+    """(Q, D) × (N, D) → (Q, N) distance matrix (squared L2 or -IP)."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        fn = ref.l2_distances if metric == "l2" else ref.ip_distances
+        return fn(queries, points)
+    interpret = not _on_tpu()
+    q_pad, q0 = _pad_to(queries.astype(jnp.float32), 0, tile_q, 0.0)
+    x_pad, n0 = _pad_to(points.astype(jnp.float32), 0, tile_n, 0.0)
+    q_pad, _ = _pad_to(q_pad, 1, 128, 0.0)
+    x_pad, _ = _pad_to(x_pad, 1, 128, 0.0)
+    out = rerank_distances_pallas(
+        q_pad, x_pad, metric=metric, tile_q=tile_q, tile_n=tile_n, interpret=interpret
+    )
+    return out[:q0, :n0]
+
+
+def exact_topk(
+    queries: jnp.ndarray,
+    points: jnp.ndarray,
+    k: int,
+    *,
+    metric: str = "l2",
+    backend: str = "auto",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k nearest: returns (distances (Q, k), indices (Q, k))."""
+    d = exact_distances(queries, points, metric=metric, backend=backend)
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx
+
+
+# -- PQ ADC scan ---------------------------------------------------------------
+
+def pq_scan(
+    luts: jnp.ndarray,
+    codes: jnp.ndarray,
+    *,
+    backend: str = "auto",
+    tile_q: int = 8,
+    tile_n: int = 128,
+) -> jnp.ndarray:
+    """ADC scores (Q, N) from per-query LUTs (Q, m, K) and codes (N, m)."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return ref.pq_adc_scores(luts, codes)
+    interpret = not _on_tpu()
+    luts_p, q0 = _pad_to(luts.astype(jnp.float32), 0, tile_q, 0.0)
+    codes_p, n0 = _pad_to(codes.astype(jnp.int32), 0, tile_n, 0)
+    out = pq_scan_pallas(
+        luts_p, codes_p, tile_q=tile_q, tile_n=tile_n, interpret=interpret
+    )
+    return out[:q0, :n0]
+
+
+def pq_scan_topk(
+    luts: jnp.ndarray,
+    codes: jnp.ndarray,
+    k: int,
+    *,
+    backend: str = "auto",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scores = pq_scan(luts, codes, backend=backend)
+    neg, idx = jax.lax.top_k(-scores, k)
+    return -neg, idx
+
+
+# -- k-means assignment -----------------------------------------------------------
+
+def kmeans_assign(
+    points: jnp.ndarray,
+    centroids: jnp.ndarray,
+    *,
+    backend: str = "auto",
+    tile_n: int = 256,
+    tile_k: int = 128,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (assignments (N,) int32, squared distances (N,) f32)."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return ref.kmeans_assign(points, centroids)
+    interpret = not _on_tpu()
+    x_pad, n0 = _pad_to(points.astype(jnp.float32), 0, tile_n, 0.0)
+    # pad centroid *rows* with a huge coordinate so padded centroids lose
+    c = centroids.astype(jnp.float32)
+    k = c.shape[0]
+    rem = (-k) % tile_k
+    if rem:
+        filler = jnp.full((rem, c.shape[1]), 1e18, dtype=jnp.float32)
+        c = jnp.concatenate([c, filler], axis=0)
+    x_pad, _ = _pad_to(x_pad, 1, 128, 0.0)
+    c, _ = _pad_to(c, 1, 128, 0.0)
+    idx, dist = kmeans_assign_pallas(
+        x_pad, c, tile_n=tile_n, tile_k=tile_k, interpret=interpret
+    )
+    return idx[:n0], dist[:n0]

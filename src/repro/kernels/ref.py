@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each kernel's test sweeps shapes and
+dtypes and asserts ``assert_allclose`` against the functions here.  They are
+also the CPU fallback used when Pallas interpret mode is not wanted (e.g.
+inside heavily-iterated host-side build loops).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def l2_distances(queries: jnp.ndarray, points: jnp.ndarray) -> jnp.ndarray:
+    """Squared L2 distance matrix.
+
+    queries: (Q, D) f32;  points: (N, D) f32  ->  (Q, N) f32.
+    Uses the expanded form |q|^2 - 2 q.x + |x|^2 (same math as the kernel so
+    numerical behaviour matches to float tolerance).
+    """
+    q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)  # (Q, 1)
+    x2 = jnp.sum(points * points, axis=-1)[None, :]  # (1, N)
+    cross = queries @ points.T  # (Q, N)
+    return q2 - 2.0 * cross + x2
+
+
+def ip_distances(queries: jnp.ndarray, points: jnp.ndarray) -> jnp.ndarray:
+    """Negative inner product ("distance": smaller is closer)."""
+    return -(queries @ points.T)
+
+
+def pq_adc_scores(luts: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """Asymmetric-distance-computation scores.
+
+    luts:  (Q, m, K) f32 — per-query lookup tables (distance of the query's
+           j-th subvector to each of the K codewords of subquantizer j).
+    codes: (N, m) integer — PQ codes of the database points.
+    Returns (Q, N) f32: ``scores[q, n] = sum_j luts[q, j, codes[n, j]]``.
+    """
+    codes = codes.astype(jnp.int32)
+    # gather per subquantizer: (Q, m, N)
+    gathered = jnp.take_along_axis(
+        luts, codes.T[None, :, :].astype(jnp.int32), axis=2
+    )  # luts (Q,m,K) indexed with (1,m,N) -> (Q,m,N)
+    return jnp.sum(gathered, axis=1)
+
+
+def build_pq_luts(
+    queries: jnp.ndarray, codebook: jnp.ndarray, metric: str = "l2"
+) -> jnp.ndarray:
+    """LUT construction for ADC.
+
+    queries:  (Q, D) f32;  codebook: (m, K, D/m) f32.
+    Returns (Q, m, K) f32 of sub-distances.
+    """
+    m, K, dsub = codebook.shape
+    q_sub = queries.reshape(queries.shape[0], m, dsub)  # (Q, m, dsub)
+    if metric == "l2":
+        diff = q_sub[:, :, None, :] - codebook[None, :, :, :]  # (Q, m, K, dsub)
+        return jnp.sum(diff * diff, axis=-1)
+    if metric == "ip":
+        return -jnp.einsum("qmd,mkd->qmk", q_sub, codebook)
+    raise ValueError(f"unknown metric {metric}")
+
+
+def kmeans_assign(points: jnp.ndarray, centroids: jnp.ndarray):
+    """Nearest-centroid assignment.
+
+    points: (N, D) f32;  centroids: (K, D) f32.
+    Returns (assignments (N,) int32, sq_distances (N,) f32).
+    """
+    d = l2_distances(points, centroids)  # (N, K)
+    idx = jnp.argmin(d, axis=1).astype(jnp.int32)
+    return idx, jnp.min(d, axis=1)

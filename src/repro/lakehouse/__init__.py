@@ -1,0 +1,10 @@
+"""Lakehouse substrate: object store, columnar file format, table IO paths."""
+
+from repro.lakehouse.objectstore import ObjectStore  # noqa: F401
+from repro.lakehouse.vparquet import (  # noqa: F401
+    VParquetReader,
+    VParquetWriter,
+    read_vector_column,
+    write_vector_file,
+)
+from repro.lakehouse.table import LakehouseTable  # noqa: F401

@@ -1,0 +1,189 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any jax import (device count locks on
+first init) and are deliberately NOT set globally — smoke tests and benches
+see the real single CPU device.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi    # 2-pod only
+    PYTHONPATH=src python -m repro.launch.dryrun --out results/dryrun.jsonl
+
+Each cell appends one JSON line (restartable: existing (arch, shape, mesh)
+rows are skipped unless --force).  Row contents: memory_analysis,
+cost_analysis flops/bytes, trip-corrected jaxpr FLOPs, HLO collective bytes
+(raw + corrected), analytic roofline terms, and the dominant bottleneck.
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.flops import count_jaxpr_flops
+from repro.analysis.hlo import collective_bytes_from_hlo
+from repro.analysis.roofline import compute_roofline
+from repro.configs.base import ARCH_IDS, SHAPES, get_config, shape_cells
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+
+DEFAULT_OUT = "results/dryrun.jsonl"
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, rules=None, microbatches: int = 8) -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = int(np.prod(list(mesh.shape.values())))
+    cell = build_cell(arch, shape_name, mesh, rules, microbatches=microbatches)
+    row = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": chips,
+        "kind": cell.kind,
+    }
+    if cell.kind == "skip":
+        row["skip_reason"] = cell.skip_reason
+        return row
+
+    with mesh:
+        lowered = cell.lower()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        coll = collective_bytes_from_hlo(hlo)
+        # trip-corrected analytic FLOPs from the pre-lowering jaxpr
+        jaxpr_flops = count_jaxpr_flops(
+            cell.fn.__wrapped__ if hasattr(cell.fn, "__wrapped__") else cell.fn,
+            *cell.args,
+        )
+
+    # DCN share: on the multi-pod mesh, collectives that touch the pod axis
+    # cross DCN.  Approximation: training gradient reduce crosses pods once
+    # per step (2·P bytes ring-share); serving decode crosses none.
+    dcn_bytes = 0.0
+    if mesh_name == "multi" and cell.kind == "train":
+        total_p = sum(
+            float(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(cell.args[0])
+        )
+        dcn_bytes = 2.0 * total_p * 4.0 / 2  # ring all-reduce, 2 pods, f32 grads
+
+    terms = compute_roofline(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops_raw=float(ca.get("flops", 0.0)),
+        hlo_bytes_raw=float(ca.get("bytes accessed", 0.0)),
+        jaxpr_flops=jaxpr_flops,
+        model_bytes=cell.model_bytes,
+        coll_bytes_raw=float(coll.raw_bytes),
+        coll_bytes=float(coll.global_bytes),
+        dcn_bytes=dcn_bytes,
+        model_flops=cell.model_flops,
+    )
+    row.update(
+        {
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory_analysis": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+            },
+            "cost_analysis": {
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            },
+            "collectives": {
+                "raw_bytes": coll.raw_bytes,
+                "corrected_bytes": coll.corrected_bytes,
+                "global_bytes": coll.global_bytes,
+                "by_kind": coll.by_kind,
+                "ops": coll.ops,
+            },
+            "roofline": {
+                k: v
+                for k, v in dataclasses.asdict(terms).items()
+                if k not in ("arch", "shape", "mesh", "extra")
+            },
+        }
+    )
+    return row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: arch's set)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+                except Exception:
+                    pass
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = [args.shape] if args.shape else [s.name for s in shape_cells(cfg)]
+        # always record the skip rows for non-subquadratic long_500k
+        if not args.shape and not cfg.subquadratic:
+            shapes.append("long_500k")
+        for shape in shapes:
+            for mesh_name in meshes:
+                key = (arch, shape, mesh_name)
+                if key in done:
+                    print(f"[skip-done] {key}")
+                    continue
+                print(f"[cell] {arch} × {shape} × {mesh_name} ...", flush=True)
+                t0 = time.time()
+                try:
+                    row = run_cell(arch, shape, mesh_name, microbatches=args.microbatches)
+                    status = row.get("kind")
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    row = {
+                        "arch": arch,
+                        "shape": shape,
+                        "mesh": mesh_name,
+                        "kind": "error",
+                        "error": f"{type(e).__name__}: {e}",
+                    }
+                    status = "ERROR"
+                    failures += 1
+                row["wall_s"] = round(time.time() - t0, 1)
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(row) + "\n")
+                print(f"  -> {status} in {row['wall_s']}s", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,268 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Perf hillclimbing on the three chosen cells (EXPERIMENTS.md §Perf).
+
+Each VARIANT is a (cell, hypothesis, change) triple; running it lowers the
+modified step, recomputes the roofline terms, and appends a JSONL row with
+the before/after deltas.  Variants are cumulative within a cell where noted.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb            # all variants
+    PYTHONPATH=src python -m repro.launch.hillclimb qwen.b16   # one
+"""
+
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.flops import count_jaxpr_flops
+from repro.analysis.hlo import collective_bytes_from_hlo
+from repro.analysis.roofline import compute_roofline
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import SERVE_RULES, build_cell
+from repro.models.sharding import DEFAULT_RULES, with_rules
+
+OUT = "results/hillclimb.jsonl"
+
+# variant id -> dict(cell, hypothesis, knobs)
+VARIANTS = {
+    # ------------------------------------------------------------------
+    # Cell A: qwen2.5-3b × train_4k (most collective-bound: t_coll≈t_comp)
+    # ------------------------------------------------------------------
+    "qwen.base": dict(
+        arch="qwen2.5-3b", shape="train_4k",
+        hypothesis="baseline (paper-faithful megatron TP16 × DP16, f32 params)",
+        knobs={},
+    ),
+    "qwen.bf16params": dict(
+        arch="qwen2.5-3b", shape="train_4k",
+        hypothesis=(
+            "grad/param collectives are f32 because params are f32 masters; "
+            "storing bf16 params (f32 m/v in optimizer) halves every "
+            "param-sized and grad-sized collective payload → predict "
+            "t_collective ≈ 0.5× with unchanged t_compute"
+        ),
+        knobs=dict(train_param_dtype=jnp.bfloat16),
+    ),
+    "qwen.sparseattn": dict(
+        arch="qwen2.5-3b", shape="train_4k",
+        hypothesis=(
+            "cumulative w/ bf16: dense flash pays 2× causal attention FLOPs; "
+            "block-sparse schedule removes the upper triangle → predict "
+            "t_compute down by ~attention share (~10-15%) and useful_ratio up"
+        ),
+        knobs=dict(train_param_dtype=jnp.bfloat16, cfg_overrides={"attn_impl": "sparse"}),
+    ),
+    "qwen.micro4": dict(
+        arch="qwen2.5-3b", shape="train_4k",
+        hypothesis=(
+            "cumulative: fewer, larger microbatches (8→4) amortize per-pass "
+            "param traffic (3 passes/micro) → predict t_memory down ~2×, "
+            "collectives unchanged (activation-dominated)"
+        ),
+        knobs=dict(train_param_dtype=jnp.bfloat16,
+                   cfg_overrides={"attn_impl": "sparse"}, microbatches=4),
+    ),
+    "qwen.micro2": dict(
+        arch="qwen2.5-3b", shape="train_4k",
+        hypothesis=(
+            "cumulative: micro4 halved collective bytes — if per-round "
+            "fixed-size reductions dominate, 4→2 microbatches should halve "
+            "them again (predict t_collective ~0.11s)"
+        ),
+        knobs=dict(train_param_dtype=jnp.bfloat16,
+                   cfg_overrides={"attn_impl": "sparse"}, microbatches=2),
+    ),
+    "mixtral_train.base": dict(
+        arch="mixtral-8x7b", shape="train_4k",
+        hypothesis=(
+            "baseline after the 2D-expert memory fix: weight gathers over "
+            "'data' made train collective-bound (t_coll 3.66s)"
+        ),
+        knobs={},
+    ),
+    "mixtral_train.ep2d": dict(
+        arch="mixtral-8x7b", shape="train_4k",
+        hypothesis=(
+            "shard expert d_model over 'model' and ff over 'data' instead: "
+            "weights stay put and the contraction inserts activation "
+            "all-reduces of (E,G,C,·) tiles — predicted cheaper than "
+            "re-gathering 46B expert weights every microbatch"
+        ),
+        knobs=dict(rules=with_rules(
+            DEFAULT_RULES, expert_embed="model", expert_mlp=("data",)
+        )),
+    ),
+    # ------------------------------------------------------------------
+    # Cell B: mixtral-8x7b × prefill_32k (worst useful ratio among
+    # compute-bound cells: dense attention pays full 32k² despite SWA-4k)
+    # ------------------------------------------------------------------
+    "mixtral.base": dict(
+        arch="mixtral-8x7b", shape="prefill_32k",
+        hypothesis="baseline (dense flash attention computes all kv blocks then masks)",
+        knobs={},
+    ),
+    "mixtral.sparseattn": dict(
+        arch="mixtral-8x7b", shape="prefill_32k",
+        hypothesis=(
+            "SWA window 4096 over 32768 ctx: visible blocks ≈ (W+qc)/S ≈ 14% "
+            "of the full grid → predict attention FLOPs ~7× down; total "
+            "t_compute down by the attention share (~45% at 32k) and "
+            "useful_ratio 0.54 → ~0.75"
+        ),
+        knobs=dict(cfg_overrides={"attn_impl": "sparse"}),
+    ),
+    # ------------------------------------------------------------------
+    # Cell C: chatglm3-6b × decode_32k (paper-representative serving cell;
+    # memory-bound: kv=2 padded to 16 → 8× KV-cache bloat per chip)
+    # ------------------------------------------------------------------
+    "chatglm3.base": dict(
+        arch="chatglm3-6b", shape="decode_32k",
+        hypothesis="baseline (KV heads padded 2→16 for clean TP sharding)",
+        knobs={},
+    ),
+    "chatglm3.seqshard": dict(
+        arch="chatglm3-6b", shape="decode_32k",
+        hypothesis=(
+            "keep native kv=2 and shard the cache SEQUENCE dim over 'model' "
+            "instead of padding heads: per-chip cache bytes drop 8× "
+            "(962GB→120GB global); the cross-shard softmax moves only "
+            "(B,H,S) score tensors (~0.5GB global) over ICI → predict "
+            "t_memory ~6-8× down, small t_collective increase"
+        ),
+        knobs=dict(
+            cfg_overrides={"pad_kv_to_tp": False},
+            rules=with_rules(
+                SERVE_RULES, cache_seq="model", cache_heads=None, seq=None
+            ),
+        ),
+    ),
+    "mixtral.cf1": dict(
+        arch="mixtral-8x7b", shape="prefill_32k",
+        hypothesis=(
+            "cumulative: GShard capacity factor 1.25 inflates expert FLOPs "
+            "25%; cf=1.0 trades marginal token drops for ~14% of the MLP "
+            "share of t_compute (quality tradeoff recorded, not free)"
+        ),
+        knobs=dict(cfg_overrides={"attn_impl": "sparse", "capacity_factor": 1.0}),
+    ),
+    "chatglm3.f8kv": dict(
+        arch="chatglm3-6b", shape="decode_32k",
+        hypothesis=(
+            "cumulative w/ seqshard: store the KV cache in float8_e4m3fn "
+            "(upcast after the HBM read) — cache bytes halve again → predict "
+            "t_memory ~3.5e-4 (params now a visible fraction)"
+        ),
+        knobs=dict(
+            cfg_overrides={"pad_kv_to_tp": False, "cache_dtype": "float8_e4m3fn"},
+            rules=with_rules(
+                SERVE_RULES, cache_seq="model", cache_heads=None, seq=None
+            ),
+        ),
+    ),
+    "chatglm3.seqshard.sparse": dict(
+        arch="chatglm3-6b", shape="decode_32k",
+        hypothesis=(
+            "cumulative: sparse-attn flag is decode-neutral (decode attends "
+            "one token) — control variant to confirm no regression"
+        ),
+        knobs=dict(
+            cfg_overrides={"pad_kv_to_tp": False, "attn_impl": "sparse"},
+            rules=with_rules(
+                SERVE_RULES, cache_seq="model", cache_heads=None, seq=None
+            ),
+        ),
+    ),
+}
+
+
+def run_variant(name: str, spec: dict) -> dict:
+    mesh = make_production_mesh(multi_pod=False)
+    chips = int(np.prod(list(mesh.shape.values())))
+    knobs = dict(spec["knobs"])
+    t0 = time.time()
+    cell = build_cell(
+        spec["arch"], spec["shape"], mesh,
+        knobs.pop("rules", None),
+        microbatches=knobs.pop("microbatches", 8),
+        cfg_overrides=knobs.pop("cfg_overrides", None),
+        train_param_dtype=knobs.pop("train_param_dtype", jnp.float32),
+    )
+    assert not knobs, knobs
+    with mesh:
+        lowered = cell.lower()
+        compiled = lowered.compile()
+        ca = compiled.cost_analysis() or {}
+        coll = collective_bytes_from_hlo(compiled.as_text())
+        jaxpr_flops = count_jaxpr_flops(
+            cell.fn.__wrapped__ if hasattr(cell.fn, "__wrapped__") else cell.fn,
+            *cell.args,
+        )
+    terms = compute_roofline(
+        arch=spec["arch"], shape=spec["shape"], mesh="single", chips=chips,
+        hlo_flops_raw=float(ca.get("flops", 0.0)),
+        hlo_bytes_raw=float(ca.get("bytes accessed", 0.0)),
+        jaxpr_flops=jaxpr_flops,
+        model_bytes=cell.model_bytes,
+        coll_bytes_raw=float(coll.raw_bytes),
+        coll_bytes=float(coll.global_bytes),
+        model_flops=cell.model_flops,
+    )
+    row = dict(
+        variant=name,
+        arch=spec["arch"],
+        shape=spec["shape"],
+        hypothesis=spec["hypothesis"],
+        wall_s=round(time.time() - t0, 1),
+        t_compute=terms.t_compute,
+        t_memory=terms.t_memory,
+        t_collective=terms.t_collective,
+        bottleneck=terms.bottleneck,
+        useful_ratio=terms.useful_ratio,
+        roofline_fraction=terms.roofline_fraction,
+        jaxpr_flops=terms.jaxpr_flops,
+        model_bytes=terms.model_bytes,
+        coll_bytes=terms.coll_bytes,
+    )
+    return row
+
+
+def main(argv=None) -> int:
+    wanted = (argv or sys.argv[1:]) or list(VARIANTS)
+    os.makedirs("results", exist_ok=True)
+    done = set()
+    if os.path.exists(OUT):
+        for line in open(OUT):
+            try:
+                done.add(json.loads(line)["variant"])
+            except Exception:
+                pass
+    for name in wanted:
+        if name in done:
+            print(f"[skip-done] {name}")
+            continue
+        print(f"[variant] {name}: {VARIANTS[name]['hypothesis'][:100]}...", flush=True)
+        try:
+            row = run_variant(name, VARIANTS[name])
+        except Exception as e:  # noqa: BLE001
+            import traceback
+
+            traceback.print_exc()
+            row = dict(variant=name, error=f"{type(e).__name__}: {e}")
+        with open(OUT, "a") as f:
+            f.write(json.dumps(row) + "\n")
+        if "error" not in row:
+            print(
+                f"  t_comp={row['t_compute']:.3e} t_mem={row['t_memory']:.3e} "
+                f"t_coll={row['t_collective']:.3e} bneck={row['bottleneck']} "
+                f"useful={row['useful_ratio']:.3f} frac={row['roofline_fraction']:.3f}"
+            )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,33 @@
+"""Production mesh factory.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Shapes: one v5e pod = (data=16, model=16) = 256
+chips; two pods = (pod=2, data=16, model=16) = 512 chips.  The ``pod`` axis
+maps onto DCN; ``data``/``model`` map onto ICI.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devices)} — "
+            "the dry-run launcher must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import"
+        )
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many devices exist (tests/examples)."""
+    shape = (data, model)
+    need = data * model
+    return jax.make_mesh(shape, ("data", "model"), devices=jax.devices()[:need])

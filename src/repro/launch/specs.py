@@ -1,0 +1,203 @@
+"""Per-cell dry-run specs: step functions + ShapeDtypeStruct inputs.
+
+``build_cell(arch, shape, mesh, rules)`` returns a :class:`CellSpec` whose
+``lower()`` produces the jax.jit lowering for the cell's step function:
+
+- train_4k     → ``train_step``   (CE + AdamW, microbatched, remat)
+- prefill_32k  → ``prefill_step``
+- decode_32k / long_500k → ``serve_step`` (one token, full KV/state cache)
+
+plus the analytic MODEL_FLOPS / traffic model used by the roofline.
+All inputs are ShapeDtypeStructs — nothing is allocated.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, get_config, SHAPES
+from repro.models.model import Model, build_model, param_shapes
+from repro.models.sharding import (
+    DEFAULT_RULES,
+    LogicalRules,
+    logical_to_sharding,
+    spec_for,
+    with_rules,
+)
+from repro.training.optimizer import AdamWState
+from repro.training.train_loop import TrainStepConfig, make_train_step
+from repro.serving.serve_loop import ServeConfig, make_serve_fns
+
+SERVE_RULES = with_rules(
+    DEFAULT_RULES,
+    batch=("pod", "data"),
+    cache_batch=("pod", "data"),
+)
+
+
+def _abstract(tree, dtype=None):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype or s.dtype), tree
+    )
+
+
+@dataclass
+class CellSpec:
+    arch: str
+    shape: ShapeConfig
+    cfg: ModelConfig
+    model: Model
+    kind: str
+    fn: Callable  # the jit'd (but not yet lowered) step
+    args: Tuple  # ShapeDtypeStruct inputs
+    model_flops: float
+    model_bytes: float
+    skip_reason: Optional[str] = None
+
+    def lower(self):
+        return self.fn.lower(*self.args)
+
+
+def _active_params(cfg: ModelConfig, model: Model) -> Tuple[float, float]:
+    """(total_params, active_non_embedding_params)."""
+    shapes = param_shapes(model)
+    total = 0.0
+    active = 0.0
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for path, leaf in flat:
+        n = float(np.prod(leaf.shape))
+        total += n
+        keys = "/".join(str(getattr(p, "key", "")) for p in path)
+        if "embed" in keys or "lm_head" in keys:
+            continue
+        if "moe" in keys and "router" not in keys:
+            n = n * cfg.top_k / max(cfg.num_experts, 1)
+        active += n
+    return total, active
+
+
+def _attn_flops_train(cfg: ModelConfig, B: int, S: int, kv_eff: int) -> float:
+    if cfg.attention == "none":
+        return 0.0
+    # qk^T and a·v, causal → /2; fwd+bwd ≈ 3×fwd
+    window = cfg.window if cfg.attention == "swa" else S
+    eff = min(window, S)
+    per_layer = 2.0 * B * S * eff * cfg.num_heads * cfg.head_dim * 2 / 2
+    n_attn_layers = cfg.num_layers if not cfg.shared_attn_every else cfg.num_layers // cfg.shared_attn_every
+    return 3.0 * per_layer * n_attn_layers
+
+
+def _attn_flops_decode(cfg: ModelConfig, B: int, S_ctx: int) -> float:
+    if cfg.attention == "none":
+        return 0.0
+    window = cfg.window if cfg.attention == "swa" else S_ctx
+    eff = min(window, S_ctx)
+    n_attn_layers = cfg.num_layers if not cfg.shared_attn_every else cfg.num_layers // cfg.shared_attn_every
+    return 2.0 * B * eff * cfg.num_heads * cfg.head_dim * 2 * n_attn_layers
+
+
+def _cache_bytes(model: Model, B: int, max_len: int) -> float:
+    cache = jax.eval_shape(lambda: model.init_cache(B, max_len))
+    return float(
+        sum(np.prod(l.shape) * l.dtype.itemsize for l in jax.tree_util.tree_leaves(cache))
+    )
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh: Mesh,
+    rules: Optional[LogicalRules] = None,
+    *,
+    microbatches: int = 8,
+    remat: bool = True,
+    cfg_overrides: Optional[dict] = None,
+    train_param_dtype=jnp.float32,
+) -> CellSpec:
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    tp = mesh.shape.get("model", 1)
+    model = build_model(cfg, tp=tp)
+    total_p, active_p = _active_params(cfg, model)
+
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return CellSpec(
+            arch=arch, shape=shape, cfg=cfg, model=model, kind="skip",
+            fn=None, args=(), model_flops=0.0, model_bytes=0.0,
+            skip_reason="pure full-attention arch: 500k KV cache is quadratic-cost; "
+                        "skipped per assignment (DESIGN.md §4)",
+        )
+
+    B, S = shape.global_batch, shape.seq_len
+    ids_extra = (cfg.num_codebooks,) if cfg.num_codebooks else ()
+
+    if shape.kind == "train":
+        rules = rules or DEFAULT_RULES
+        step, sh = make_train_step(
+            model, mesh, rules,
+            TrainStepConfig(microbatches=microbatches, remat=remat),
+        )
+        pshapes = _abstract(param_shapes(model), train_param_dtype)
+        opt = AdamWState(
+            m=_abstract(pshapes, jnp.float32),
+            v=_abstract(pshapes, jnp.float32),
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+        ids = jax.ShapeDtypeStruct((B, S) + ids_extra, jnp.int32)
+        # musicgen codebook streams share one backbone position: tokens = B·S
+        tokens = B * S
+        mf = 6.0 * active_p * tokens + _attn_flops_train(cfg, B, S, model.kv_eff)
+        # traffic: params ×3 passes per microbatch (fwd, remat-fwd, bwd)
+        # + optimizer m/v read+write + grads
+        p_bytes = jnp.dtype(train_param_dtype).itemsize
+        mb = (
+            microbatches * 3.0 * total_p * p_bytes
+            + total_p * (4 * 2 + 4 * 2 + 4 * 2)  # m,v rw + grads rw
+            + tokens * cfg.d_model * cfg.num_layers * 4 * 2.0  # layer boundaries
+        )
+        return CellSpec(arch, shape, cfg, model, "train", step, (pshapes, opt, ids, ids), mf, mb)
+
+    # serving cells: bf16 params.  Experts stay 1D (model) sharded when the
+    # bf16 stack fits HBM that way (mixtral: 5.8 GB/chip) — the train-time 2D
+    # rule exists for f32 masters + moments and would add FSDP-style gathers
+    # to the serve path; dbrx (16.5 GB/chip at 1D) keeps 2D out of necessity.
+    if rules is None:
+        rules = SERVE_RULES
+        if cfg.num_experts:
+            total_p_, _ = _active_params(cfg, model)
+            tp_ = mesh.shape.get("model", 1)
+            if total_p_ * 2.0 / tp_ < 12e9:
+                rules = with_rules(SERVE_RULES, expert_mlp="model")
+    pshapes = _abstract(param_shapes(model), jnp.bfloat16)
+    prefill_fn, decode_fn, _sample, sh = make_serve_fns(
+        model, mesh, rules, ServeConfig(), batch_hint=B, max_len_hint=S
+    )
+    if shape.kind == "prefill":
+        ids = jax.ShapeDtypeStruct((B, S) + ids_extra, jnp.int32)
+        cache = _abstract(jax.eval_shape(lambda: model.init_cache(B, S)))
+        tokens = B * S
+        mf = 2.0 * active_p * tokens + _attn_flops_train(cfg, B, S, model.kv_eff) / 3.0
+        mb = total_p * 2.0 + tokens * cfg.d_model * cfg.num_layers * 2 * 2.0 + _cache_bytes(model, B, S)
+        return CellSpec(arch, shape, cfg, model, "prefill", prefill_fn, (pshapes, ids, cache), mf, mb)
+
+    # decode
+    ids = jax.ShapeDtypeStruct((B, 1) + ids_extra, jnp.int32)
+    cache = _abstract(jax.eval_shape(lambda: model.init_cache(B, S)))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    mf = 2.0 * active_p * B + _attn_flops_decode(cfg, B, S)
+    cache_b = _cache_bytes(model, B, S)
+    # decode traffic: all params once (bf16) + cache read + small writes.
+    # MoE dense-dispatch decode really does read every expert — honest.
+    mb = total_p * 2.0 + cache_b
+    return CellSpec(arch, shape, cfg, model, "decode", decode_fn, (pshapes, ids, cache, pos), mf, mb)

@@ -1,0 +1,12 @@
+"""Model substrate: the 10 assigned architectures as composable JAX modules.
+
+Families: dense GQA transformers (chatglm3, qwen2.5, minitron, phi4-mini,
+chameleon, musicgen), MoE (dbrx, mixtral), SSM (rwkv6), hybrid (zamba2).
+All models share one scan-over-layers decoder skeleton with pluggable
+sequence mixers and MLPs, carry logical-axis annotations for pjit sharding,
+and expose three entry points: ``forward`` (training), ``prefill`` and
+``decode`` (serving with caches).
+"""
+
+from repro.models.model import build_model, Model  # noqa: F401
+from repro.models.sharding import LogicalRules, logical_to_sharding  # noqa: F401

@@ -1,0 +1,417 @@
+"""Shared layer library: norms, RoPE, attention (flash + decode), MLPs.
+
+All functions are pure (params pytree in, arrays out) and scan-friendly.
+Param construction goes through :class:`ParamBuilder`, which records a
+parallel pytree of logical-axis tuples consumed by
+:func:`repro.models.sharding.logical_to_sharding`.
+
+Attention is implemented blockwise (online-softmax over KV chunks inside a
+``lax.scan``) so 32k-token prefill compiles to O(S·chunk) memory instead of
+an S×S score tensor, and supports causal + sliding-window masks.  Decode
+attends one query position against a (optionally ring-buffered) cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+
+class ParamBuilder:
+    """Collects params + logical axes as parallel nested dicts.
+
+    ``abstract=True`` records ShapeDtypeStructs instead of allocating — used
+    to derive the axes/shape trees for sharding and dry-runs without paying
+    for a 132 B-parameter init."""
+
+    def __init__(self, key: Optional[jax.Array], dtype=jnp.float32, abstract: bool = False):
+        self.key = key
+        self.dtype = dtype
+        self.abstract = abstract
+        self.params: Dict[str, Any] = {}
+        self.axes: Dict[str, Any] = {}
+
+    def _split(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def add(self, path: str, shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+            init: str = "normal", scale: Optional[float] = None) -> None:
+        assert len(shape) == len(axes), (path, shape, axes)
+        if self.abstract:
+            arr = jax.ShapeDtypeStruct(shape, self.dtype)
+        elif init == "zeros":
+            arr = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            arr = jnp.ones(shape, self.dtype)
+        elif init == "normal":
+            if scale is None:
+                # fan-in init, skipping leading stacked-layer dims (their
+                # axes entries are None) and the output dim
+                prefix = 0
+                for a in axes:
+                    if a is None:
+                        prefix += 1
+                    else:
+                        break
+                fan_in = max(1, int(np.prod(shape[prefix:-1])))
+                scale = 1.0 / np.sqrt(fan_in)
+            arr = (jax.random.normal(self._split(), shape, jnp.float32) * scale).astype(self.dtype)
+        else:
+            raise ValueError(init)
+        self._set(self.params, path, arr)
+        self._set(self.axes, path, tuple(axes))
+
+    @staticmethod
+    def _set(tree: dict, path: str, value) -> None:
+        parts = path.split("/")
+        for p in parts[:-1]:
+            tree = tree.setdefault(p, {})
+        tree[parts[-1]] = value
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(norm_kind: str, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if norm_kind == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+def add_norm_params(b: ParamBuilder, path: str, d: int, norm_kind: str, layer_axes=()) -> None:
+    b.add(f"{path}/scale", layer_axes + (d,), tuple([None] * len(layer_axes)) + ("embed",), init="ones")
+    if norm_kind == "layernorm":
+        b.add(f"{path}/bias", layer_axes + (d,), tuple([None] * len(layer_axes)) + ("embed",), init="zeros")
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, frac: float, theta: float) -> jnp.ndarray:
+    rot = int(head_dim * frac) // 2 * 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, frac: float, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    rot = int(hd * frac) // 2 * 2
+    if rot == 0:
+        return x
+    freqs = rope_freqs(hd, frac, theta)  # (rot/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, rot/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., S, 1, rot/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    y = jnp.stack([y1, y2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([y.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def add_attention_params(b: ParamBuilder, path: str, cfg, layer_axes=(), kv_heads=None) -> None:
+    d = cfg.d_model
+    H, hd = cfg.num_heads, cfg.head_dim
+    KV = kv_heads if kv_heads is not None else cfg.num_kv_heads
+    la = tuple([None] * len(layer_axes))
+    import numpy as _np
+
+    s_in = 1.0 / _np.sqrt(d)
+    b.add(f"{path}/wq", layer_axes + (d, H, hd), la + ("embed", "heads", "head_dim"), scale=s_in)
+    b.add(f"{path}/wk", layer_axes + (d, KV, hd), la + ("embed", "kv_heads", "head_dim"), scale=s_in)
+    b.add(f"{path}/wv", layer_axes + (d, KV, hd), la + ("embed", "kv_heads", "head_dim"), scale=s_in)
+    b.add(f"{path}/wo", layer_axes + (H, hd, d), la + ("heads", "head_dim", "embed"), scale=1.0 / _np.sqrt(H * hd))
+    if cfg.qkv_bias:
+        b.add(f"{path}/bq", layer_axes + (H, hd), la + ("heads", "head_dim"), init="zeros")
+        b.add(f"{path}/bk", layer_axes + (KV, hd), la + ("kv_heads", "head_dim"), init="zeros")
+        b.add(f"{path}/bv", layer_axes + (KV, hd), la + ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        b.add(f"{path}/q_norm", layer_axes + (hd,), la + ("head_dim",), init="ones")
+        b.add(f"{path}/k_norm", layer_axes + (hd,), la + ("head_dim",), init="ones")
+
+
+def _project_qkv(p: dict, cfg, x: jnp.ndarray):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if "q_norm" in p:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    return q, k, v
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Skv, KV, hd)
+    v: jnp.ndarray,  # (B, Skv, KV, hd)
+    *,
+    q_offset: int = 0,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Blockwise online-softmax attention with GQA-grouped einsums.
+
+    Memory per step is O(q_chunk × kv_chunk); the KV loop is a lax.scan so
+    the HLO stays one-block-sized regardless of sequence length.
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    assert Sq % q_chunk == 0 and Skv % kv_chunk == 0
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, Sq, KV, G, hd)
+
+    def process_q_chunk(qi, q_blk):
+        # q_blk: (B, q_chunk, KV, G, hd)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, axis=1)
+            kv_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum(
+                "bqkgd,bskd->bkgqs", q_blk, k_blk, preferred_element_type=jnp.float32
+            ) * scale  # (B, KV, G, q_chunk, kv_chunk)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= kv_pos[None, :] <= q_pos[:, None]
+            if window:
+                mask &= kv_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask, s, -jnp.inf)
+            blk_max = jnp.max(s, axis=-1)  # (B,KV,G,qc)
+            new_m = jnp.maximum(m, blk_max)
+            # guard fully-masked rows
+            new_m_safe = jnp.where(jnp.isfinite(new_m), new_m, 0.0)
+            p = jnp.exp(s - new_m_safe[..., None])
+            p = jnp.where(mask, p, 0.0)
+            corr = jnp.exp(jnp.where(jnp.isfinite(m), m - new_m_safe, -jnp.inf))
+            corr = jnp.where(jnp.isfinite(corr), corr, 0.0)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            return (new_m, l, acc), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        acc0 = jnp.zeros((B, KV, G, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, acc0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        # (B, KV, G, qc, hd) -> (B, qc, KV, G, hd)
+        return out.transpose(0, 3, 1, 2, 4)
+
+    q_blocks = qg.reshape(B, nq, q_chunk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    out_blocks = jax.lax.map(
+        lambda args: process_q_chunk(args[0], args[1]),
+        (jnp.arange(nq), q_blocks),
+    )  # (nq, B, qc, KV, G, hd)
+    out = out_blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KV, G, hd)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def flash_attention_sparse(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Skv, KV, hd)
+    v: jnp.ndarray,  # (B, Skv, KV, hd)
+    *,
+    q_offset: int = 0,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+) -> jnp.ndarray:
+    """Block-sparse flash attention: only *visible* (q-block, kv-block) pairs
+    are computed.
+
+    The dense variant (:func:`flash_attention`) computes every kv block per
+    q block and masks afterwards — paying the full S² FLOPs even for causal
+    (2× waste) and sliding-window (S/W× waste) attention.  Here the block
+    schedule is computed statically: a ``lax.scan`` over the visible pairs
+    with per-q-block online-softmax accumulators.  FLOPs drop to the true
+    masked work (plus boundary-block slack ≤ one block row), and the jaxpr
+    FLOP accounting is exact (static trip count).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    assert Sq % q_chunk == 0 and Skv % kv_chunk == 0
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, Sq, KV, G, hd)
+
+    # static visibility schedule
+    pairs = []
+    for qi in range(nq):
+        q_lo = q_offset + qi * q_chunk
+        q_hi = q_lo + q_chunk - 1
+        for ki in range(nk):
+            kv_lo = ki * kv_chunk
+            kv_hi = kv_lo + kv_chunk - 1
+            if causal and kv_lo > q_hi:
+                continue  # entirely in the future
+            if window and kv_hi <= q_lo - window:
+                continue  # entirely outside the window
+            pairs.append((qi, ki))
+    pairs_arr = jnp.asarray(pairs, jnp.int32)  # (P, 2)
+
+    m0 = jnp.full((nq, B, KV, G, q_chunk), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((nq, B, KV, G, q_chunk), jnp.float32)
+    acc0 = jnp.zeros((nq, B, KV, G, q_chunk, hd), jnp.float32)
+
+    def step(carry, pair):
+        m, l, acc = carry
+        qi, ki = pair[0], pair[1]
+        q_blk = jax.lax.dynamic_slice_in_dim(qg, qi * q_chunk, q_chunk, axis=1)
+        k_blk = jax.lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, axis=1)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        kv_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum(
+            "bqkgd,bskd->bkgqs", q_blk, k_blk, preferred_element_type=jnp.float32
+        ) * scale
+        mask = jnp.ones((q_chunk, kv_chunk), bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, -jnp.inf)
+        m_q = m[qi]
+        blk_max = jnp.max(s, axis=-1)
+        new_m = jnp.maximum(m_q, blk_max)
+        new_m_safe = jnp.where(jnp.isfinite(new_m), new_m, 0.0)
+        p = jnp.exp(s - new_m_safe[..., None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(jnp.where(jnp.isfinite(m_q), m_q - new_m_safe, -jnp.inf))
+        corr = jnp.where(jnp.isfinite(corr), corr, 0.0)
+        new_l = l[qi] * corr + jnp.sum(p, axis=-1)
+        new_acc = acc[qi] * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(v_blk.dtype), v_blk,
+            preferred_element_type=jnp.float32,
+        )
+        m = m.at[qi].set(new_m)
+        l = l.at[qi].set(new_l)
+        acc = acc.at[qi].set(new_acc)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), pairs_arr)
+    out = acc / jnp.maximum(l, 1e-20)[..., None]  # (nq, B, KV, G, qc, hd)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, KV, G, hd)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, 1, H, hd)
+    k_cache: jnp.ndarray,  # (B, W, KV, hd)  (positions already roped)
+    v_cache: jnp.ndarray,  # (B, W, KV, hd)
+    cache_positions: jnp.ndarray,  # (W,) int32 absolute positions, -1 = empty
+    pos: jnp.ndarray,  # () int32 current position
+    window: int = 0,
+) -> jnp.ndarray:
+    B, _, H, hd = q.shape
+    W = k_cache.shape[1]
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, KV, G, hd)
+    # low-precision cache storage (e.g. f8) is upcast after the HBM read
+    k_cache = k_cache.astype(q.dtype)
+    v_cache = v_cache.astype(q.dtype)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32) * scale
+    valid = (cache_positions >= 0) & (cache_positions <= pos)
+    if window:
+        valid &= cache_positions > pos - window
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def add_mlp_params(b: ParamBuilder, path: str, cfg, layer_axes=()) -> None:
+    d, ff = cfg.d_model, cfg.d_ff
+    la = tuple([None] * len(layer_axes))
+    import numpy as _np
+
+    s_in, s_out = 1.0 / _np.sqrt(d), 1.0 / _np.sqrt(ff)
+    if cfg.mlp == "swiglu":
+        b.add(f"{path}/wi_gate", layer_axes + (d, ff), la + ("embed", "mlp"), scale=s_in)
+        b.add(f"{path}/wi_up", layer_axes + (d, ff), la + ("embed", "mlp"), scale=s_in)
+        b.add(f"{path}/wo", layer_axes + (ff, d), la + ("mlp", "embed"), scale=s_out)
+    else:  # squared_relu | gelu
+        b.add(f"{path}/wi", layer_axes + (d, ff), la + ("embed", "mlp"), scale=s_in)
+        b.add(f"{path}/wo", layer_axes + (ff, d), la + ("mlp", "embed"), scale=s_out)
+
+
+def mlp_block(p: dict, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(x.dtype))
+        u = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+    elif kind == "squared_relu":
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+        h = jnp.square(jax.nn.relu(h))
+    elif kind == "gelu":
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(kind)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))

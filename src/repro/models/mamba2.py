@@ -1,0 +1,208 @@
+"""Mamba-2 (SSD) block — chunked state-space scan (zamba2 backbone).
+
+Per head (head dim P, state dim N):
+
+    h_t = exp(Δ_t A) h_{t-1} + Δ_t · (B_t ⊗ x_t)        h ∈ R^{N×P}
+    y_t = C_tᵀ h_t + D ⊙ x_t
+
+with scalar A < 0 per head (Mamba-2's key simplification), Δ_t = softplus(dt),
+and a depthwise causal conv (kernel 4) on x/B/C before the scan.
+
+Chunked computation (chunk C): cumulative log-decays within a chunk give an
+attention-like lower-triangular intra-chunk term plus an inter-chunk carried
+state — the SSD duality from the paper.  All decay math in f32 log space.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamBuilder
+
+CONV_K = 4
+
+
+def add_mamba2_params(b: ParamBuilder, path: str, cfg, layer_axes=()) -> None:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    H = cfg.ssm_heads_eff  # inner // P
+    P = inner // H
+    N = cfg.ssm_state
+    la = tuple([None] * len(layer_axes))
+    import numpy as _np
+
+    s_in = 1.0 / _np.sqrt(d)
+    b.add(f"{path}/w_x", layer_axes + (d, inner), la + ("embed", "mlp"), scale=s_in)
+    b.add(f"{path}/w_z", layer_axes + (d, inner), la + ("embed", "mlp"), scale=s_in)
+    b.add(f"{path}/w_B", layer_axes + (d, N), la + ("embed", "ssm_state"), scale=s_in)
+    b.add(f"{path}/w_C", layer_axes + (d, N), la + ("embed", "ssm_state"), scale=s_in)
+    b.add(f"{path}/w_dt", layer_axes + (d, H), la + ("embed", "ssm_heads"), scale=s_in)
+    b.add(f"{path}/dt_bias", layer_axes + (H,), la + ("ssm_heads",), init="zeros")
+    b.add(f"{path}/A_log", layer_axes + (H,), la + ("ssm_heads",), init="zeros")
+    b.add(f"{path}/D_skip", layer_axes + (H,), la + ("ssm_heads",), init="ones")
+    b.add(f"{path}/conv_x", layer_axes + (CONV_K, inner), la + ("conv", "mlp"), scale=0.5)
+    b.add(f"{path}/conv_B", layer_axes + (CONV_K, N), la + ("conv", "ssm_state"), scale=0.5)
+    b.add(f"{path}/conv_C", layer_axes + (CONV_K, N), la + ("conv", "ssm_state"), scale=0.5)
+    b.add(f"{path}/norm_scale", layer_axes + (inner,), la + ("mlp",), init="ones")
+    b.add(f"{path}/w_out", layer_axes + (inner, d), la + ("mlp", "embed"), scale=1.0 / _np.sqrt(inner))
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, carry: jnp.ndarray):
+    """Depthwise causal conv, kernel CONV_K.
+
+    x: (B,S,Ch), w: (K,Ch), carry: (B,K-1,Ch) previous tokens.
+    Returns (y (B,S,Ch), new_carry (B,K-1,Ch))."""
+    B, S, Ch = x.shape
+    full = jnp.concatenate([carry.astype(x.dtype), x], axis=1)  # (B, S+K-1, Ch)
+    y = jnp.zeros_like(x)
+    for k in range(CONV_K):
+        y = y + full[:, k : k + S, :] * w[k][None, None, :].astype(x.dtype)
+    new_carry = full[:, S:, :] if False else full[:, -(CONV_K - 1) :, :]
+    return jax.nn.silu(y), new_carry
+
+
+def _project(p, x):
+    z = jnp.einsum("bsd,di->bsi", x, p["w_z"].astype(x.dtype))
+    xin = jnp.einsum("bsd,di->bsi", x, p["w_x"].astype(x.dtype))
+    Braw = jnp.einsum("bsd,dn->bsn", x, p["w_B"].astype(x.dtype))
+    Craw = jnp.einsum("bsd,dn->bsn", x, p["w_C"].astype(x.dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(x.dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )  # (B,S,H)
+    return z, xin, Braw, Craw, dt
+
+
+def _gated_norm(y, z, scale):
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + 1e-6) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba2_chunked(
+    p: dict,
+    x: jnp.ndarray,  # (B,S,D)
+    conv_state: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],  # per-stream (B,K-1,·)
+    ssm_state: jnp.ndarray,  # (B,H,N,P) f32
+    *,
+    chunk: int = 128,
+) -> Tuple[jnp.ndarray, tuple, jnp.ndarray]:
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    while S % chunk:  # largest divisor ≤ requested chunk
+        chunk -= 1
+    z, xin, Braw, Craw, dt = _project(p, x)
+    xin, cx = _causal_conv(xin, p["conv_x"], conv_state[0])
+    Bc, cb = _causal_conv(Braw, p["conv_B"], conv_state[1])
+    Cc, cc = _causal_conv(Craw, p["conv_C"], conv_state[2])
+    inner = xin.shape[-1]
+    H = p["A_log"].shape[-1]
+    P = inner // H
+    N = Bc.shape[-1]
+    xh = xin.reshape(B, S, H, P)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,) negative
+    la = dt * A[None, None, :]  # (B,S,H) log-decay per token
+    nC = S // chunk
+
+    def toc(a, shape):  # (B,S,...) -> (nC,B,chunk,...)
+        return a.reshape((B, nC, chunk) + shape).transpose((1, 0, 2) + tuple(range(3, 3 + len(shape))))
+
+    xc_ = toc(xh, (H, P))
+    Bc_ = toc(Bc, (N,))
+    Cc_ = toc(Cc, (N,))
+    dtc = toc(dt, (H,))
+    lac = toc(la, (H,))
+
+    def step(h_prev, inp):
+        xb, Bb, Cb, dtb, lab = inp  # (B,chunk,H,P), (B,chunk,N), ., (B,chunk,H)
+        xb32 = xb.astype(jnp.float32)
+        Bb32 = Bb.astype(jnp.float32)
+        Cb32 = Cb.astype(jnp.float32)
+        cum = jnp.cumsum(lab, axis=1)  # (B,chunk,H) inclusive
+        # intra-chunk: y_i += C_i · Σ_{j<=i} exp(cum_i - cum_j) Δ_j B_j x_jᵀ
+        scores = jnp.einsum("bin,bjn->bij", Cb32, Bb32)  # (B,chunk,chunk)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]  # (B,i,j,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        # mask the exponent BEFORE exp: in the untaken (j>i) region the
+        # exponent is positive and would overflow/NaN the backward pass.
+        decay = jnp.where(tri[None, :, :, None], decay, -jnp.inf)
+        gate = jnp.exp(decay)  # (B,i,j,H), exponents ≤ 0 in the taken region
+        w = scores[..., None] * gate * dtb[:, None, :, :]  # (B,i,j,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xb32)
+        # inter-chunk: y_i += C_i · exp(cum_i) h_prev
+        y_inter = jnp.einsum("bin,bhnp,bih->bihp", Cb32, h_prev, jnp.exp(cum))
+        # carry: h_new = exp(cum_last) h_prev + Σ_j exp(cum_last-cum_j) Δ_j B_j x_jᵀ
+        cl = cum[:, -1, :]  # (B,H)
+        carry_gate = jnp.exp(cl[:, None, :] - cum) * dtb  # (B,chunk,H)
+        h_new = jnp.exp(cl)[:, :, None, None] * h_prev + jnp.einsum(
+            "bjh,bjn,bjhp->bhnp", carry_gate, Bb32, xb32
+        )
+        return h_new, y_intra + y_inter
+
+    ssm_state, ys = jax.lax.scan(step, ssm_state.astype(jnp.float32), (xc_, Bc_, Cc_, dtc, lac))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    y = y + p["D_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, inner).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"].astype(x.dtype))
+    return out, (cx, cb, cc), ssm_state
+
+
+def mamba2_decode(
+    p: dict,
+    x: jnp.ndarray,  # (B,1,D)
+    conv_state: tuple,
+    ssm_state: jnp.ndarray,  # (B,H,N,P)
+):
+    """Single-token step: O(H·N·P) state update."""
+    B = x.shape[0]
+    z, xin, Braw, Craw, dt = _project(p, x)
+    xin, cx = _causal_conv(xin, p["conv_x"], conv_state[0])
+    Bc, cb = _causal_conv(Braw, p["conv_B"], conv_state[1])
+    Cc, cc = _causal_conv(Craw, p["conv_C"], conv_state[2])
+    inner = xin.shape[-1]
+    H = p["A_log"].shape[-1]
+    P = inner // H
+    xh = xin.reshape(B, 1, H, P).astype(jnp.float32)[:, 0]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    la = dt[:, 0] * A[None, :]  # (B,H)
+    decay = jnp.exp(la)
+    dB = dt[:, 0][:, :, None] * Bc[:, 0].astype(jnp.float32)[:, None, :]  # (B,H,N)
+    h_new = decay[:, :, None, None] * ssm_state + jnp.einsum("bhn,bhp->bhnp", dB, xh)
+    y = jnp.einsum("bn,bhnp->bhp", Cc[:, 0].astype(jnp.float32), h_new)
+    y = y + p["D_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, inner).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"].astype(x.dtype))
+    return out, (cx, cb, cc), h_new
+
+
+def mamba2_ref(p: dict, x: jnp.ndarray, conv_state: tuple, ssm_state: jnp.ndarray):
+    """Token-by-token oracle for property tests."""
+
+    def step(carry, xt):
+        cs, hs = carry
+        out, cs2, hs2 = mamba2_decode(p, xt[:, None, :], cs, hs)
+        return (cs2, hs2), out[:, 0]
+
+    (cs, hs), outs = jax.lax.scan(
+        step, (conv_state, ssm_state.astype(jnp.float32)), x.transpose(1, 0, 2)
+    )
+    return outs.transpose(1, 0, 2), cs, hs
+
+
+def init_mamba2_state(cfg, batch: int):
+    inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads_eff
+    P = inner // H
+    N = cfg.ssm_state
+    conv = (
+        jnp.zeros((batch, CONV_K - 1, inner), jnp.float32),
+        jnp.zeros((batch, CONV_K - 1, N), jnp.float32),
+        jnp.zeros((batch, CONV_K - 1, N), jnp.float32),
+    )
+    return conv, jnp.zeros((batch, H, N, P), jnp.float32)

@@ -1,0 +1,646 @@
+"""Model assembly: one scan-over-layers decoder skeleton, four families.
+
+``build_model(cfg, tp=...)`` returns a :class:`Model` with pure functions:
+
+- ``init(key)``            → params pytree (f32 masters)
+- ``axes``                 → parallel pytree of logical-axis tuples
+- ``forward(params, ids)`` → logits  (training; full-sequence mixers)
+- ``init_cache(B, max_len)``→ serving cache pytree (+ its logical axes)
+- ``prefill(params, ids, cache)`` → (logits_last, cache)
+- ``decode(params, ids_1, cache, pos)`` → (logits, cache)
+
+Scan-over-layers keeps the HLO one-layer-sized for 40+ layer configs (the
+dry-run compile-time bound).  KV heads are padded up to the tensor-parallel
+degree when ``cfg.pad_kv_to_tp`` (DESIGN.md §5) so GQA caches shard cleanly
+at TP=16; the padding cost is visible in the roofline — and is the target of
+one of the hillclimbs.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+from repro.models import rwkv6 as R6
+from repro.models.layers import ParamBuilder
+
+
+def _compute_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    kv_eff: int  # kv heads after TP padding
+    init: Callable[[jax.Array], Any]
+    axes: Any  # logical-axes pytree (matches params structure)
+    forward: Callable  # (params, ids) -> (logits, aux_loss)
+    init_cache: Callable  # (batch, max_len) -> cache
+    cache_axes: Callable  # (batch, max_len) -> logical-axes pytree for cache
+    prefill: Callable  # (params, ids, cache) -> (logits_last, cache)
+    decode: Callable  # (params, ids, cache, pos) -> (logits, cache)
+
+    def param_count(self, params=None) -> int:
+        if params is None:
+            shapes = jax.eval_shape(self.init, jax.random.PRNGKey(0))
+            return sum(int(np.prod(s.shape)) for s in jax.tree_util.tree_leaves(shapes))
+        return L.param_count(params)
+
+
+# ---------------------------------------------------------------------------
+# parameter init (all families)
+# ---------------------------------------------------------------------------
+
+
+def _init_params(cfg: ModelConfig, kv_eff: int, key: Optional[jax.Array], abstract: bool = False):
+    b = ParamBuilder(key, dtype=jnp.float32, abstract=abstract)
+    d, V = cfg.d_model, cfg.vocab_size
+    nl = cfg.num_layers
+    import dataclasses as _dc
+
+    cfg_kv = _dc.replace(cfg, num_kv_heads=kv_eff)
+    # embeddings
+    if cfg.num_codebooks:
+        b.add("embed", (cfg.num_codebooks, V, d), ("codebook", "vocab", "embed"), scale=0.02)
+        b.add("lm_head", (cfg.num_codebooks, d, V), ("codebook", "embed", "vocab"), scale=0.02)
+        # learned positions sized for the largest assigned serving shape (32k)
+        b.add("pos_embed", (32768, d), (None, "embed"), scale=0.02)
+    else:
+        b.add("embed", (V, d), ("vocab", "embed"), scale=0.02)
+        b.add("lm_head", (d, V), ("embed", "vocab"), scale=0.02)
+    # per-layer stacks: leading "layers" dim on every per-layer param
+    layer_axes = (nl,)
+
+    def la_path(p: str) -> str:
+        return f"layers/{p}"
+
+    if cfg.ssm == "rwkv6":
+        L.add_norm_params(b, la_path("ln_att"), d, cfg.norm, layer_axes)
+        R6.add_rwkv6_params(b, la_path("tmix"), cfg, layer_axes)
+        L.add_norm_params(b, la_path("ln_ffn"), d, cfg.norm, layer_axes)
+        # channel-mix (token-shifted relu^2 FFN with receptance gate)
+        la = (None,)
+        b.add(la_path("cmix/wk"), layer_axes + (d, cfg.d_ff), la + ("embed", "mlp"), scale=1.0 / np.sqrt(d))
+        b.add(la_path("cmix/wv"), layer_axes + (cfg.d_ff, d), la + ("mlp", "embed"), scale=1.0 / np.sqrt(cfg.d_ff))
+        b.add(la_path("cmix/wr"), layer_axes + (d, d), la + ("embed", None), scale=1.0 / np.sqrt(d))
+        b.add(la_path("cmix/mu_k"), layer_axes + (d,), la + ("embed",), init="zeros")
+        b.add(la_path("cmix/mu_r"), layer_axes + (d,), la + ("embed",), init="zeros")
+    elif cfg.ssm == "mamba2":
+        L.add_norm_params(b, la_path("ln"), d, cfg.norm, layer_axes)
+        M2.add_mamba2_params(b, la_path("mixer"), cfg, layer_axes)
+        if cfg.shared_attn_every:
+            # zamba2 shared attention + mlp block (params NOT stacked)
+            L.add_norm_params(b, "shared/ln_att", d, cfg.norm)
+            L.add_attention_params(b, "shared/attn", cfg_kv, (), kv_heads=kv_eff)
+            L.add_norm_params(b, "shared/ln_mlp", d, cfg.norm)
+            L.add_mlp_params(b, "shared/mlp", cfg)
+    else:
+        L.add_norm_params(b, la_path("ln_att"), d, cfg.norm, layer_axes)
+        L.add_attention_params(b, la_path("attn"), cfg_kv, layer_axes, kv_heads=kv_eff)
+        L.add_norm_params(b, la_path("ln_mlp"), d, cfg.norm, layer_axes)
+        if cfg.num_experts:
+            MOE.add_moe_params(b, la_path("moe"), cfg, layer_axes)
+        else:
+            L.add_mlp_params(b, la_path("mlp"), cfg, layer_axes)
+    L.add_norm_params(b, "final_norm", d, cfg.norm)
+    return b.params, b.axes
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, cfg: ModelConfig, ids: jnp.ndarray, dtype) -> jnp.ndarray:
+    if cfg.num_codebooks:
+        # ids: (B, S, CB)
+        tables = params["embed"].astype(dtype)  # (CB, V, D)
+        parts = [tables[cb][ids[..., cb]] for cb in range(cfg.num_codebooks)]
+        x = functools.reduce(jnp.add, parts)
+        S = ids.shape[1]
+        x = x + params["pos_embed"][:S][None, :, :].astype(dtype)
+        return x
+    return params["embed"].astype(dtype)[ids]
+
+
+def _embed_decode(params, cfg: ModelConfig, ids: jnp.ndarray, pos, dtype) -> jnp.ndarray:
+    if cfg.num_codebooks:
+        tables = params["embed"].astype(dtype)
+        parts = [tables[cb][ids[..., cb]] for cb in range(cfg.num_codebooks)]
+        x = functools.reduce(jnp.add, parts)
+        pe = jax.lax.dynamic_index_in_dim(params["pos_embed"], pos, axis=0)
+        return x + pe.astype(dtype)[None, :, :]
+    return params["embed"].astype(dtype)[ids]
+
+
+def _head(params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.num_codebooks:
+        return jnp.einsum("bsd,cdv->bscv", x, params["lm_head"].astype(x.dtype))
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# attention-family blocks (dense / moe / shared)
+# ---------------------------------------------------------------------------
+
+
+def _attn_full(p, cfg: ModelConfig, x, q_offset: int = 0):
+    q, k, v = L._project_qkv(p, cfg, x)
+    if cfg.rope != "none":
+        S = x.shape[1]
+        pos = q_offset + jnp.arange(S)
+        frac = cfg.rope_frac if cfg.rope == "partial" else 1.0
+        q = L.apply_rope(q, jnp.broadcast_to(pos, (x.shape[0], S)), frac, cfg.rope_theta)
+        k = L.apply_rope(k, jnp.broadcast_to(pos, (x.shape[0], S)), frac, cfg.rope_theta)
+    window = cfg.window if cfg.attention == "swa" else 0
+    attn = (
+        L.flash_attention_sparse if cfg.attn_impl == "sparse" else L.flash_attention
+    )
+    out = attn(q, k, v, q_offset=q_offset, causal=True, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), (k, v)
+
+
+def _attn_decode(p, cfg: ModelConfig, x, k_cache, v_cache, cache_positions, pos):
+    q, k, v = L._project_qkv(p, cfg, x)
+    if cfg.rope != "none":
+        frac = cfg.rope_frac if cfg.rope == "partial" else 1.0
+        posb = jnp.broadcast_to(pos[None], (x.shape[0], 1))
+        q = L.apply_rope(q, posb, frac, cfg.rope_theta)
+        k = L.apply_rope(k, posb, frac, cfg.rope_theta)
+    W = k_cache.shape[1]
+    slot = pos % W
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), slot, axis=1)
+    window = cfg.window if cfg.attention == "swa" else 0
+    out = L.decode_attention(q, k_cache, v_cache, cache_positions, pos, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# family: dense / moe transformer
+# ---------------------------------------------------------------------------
+
+
+def _make_transformer(cfg: ModelConfig, kv_eff: int) -> Dict[str, Callable]:
+    dtype = _compute_dtype(cfg)
+    import dataclasses as _dc
+
+    cfg_kv = _dc.replace(cfg, num_kv_heads=kv_eff)
+
+    def block_train(lp, x, q_offset=0):
+        h = L.apply_norm(cfg.norm, lp["ln_att"], x)
+        att, _ = _attn_full(lp["attn"], cfg_kv, h, q_offset)
+        x = x + att
+        h = L.apply_norm(cfg.norm, lp["ln_mlp"], x)
+        if cfg.num_experts:
+            out, aux = MOE.moe_block(
+                lp["moe"], h, num_experts=cfg.num_experts, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor,
+            )
+        else:
+            out, aux = L.mlp_block(lp["mlp"], h, cfg.mlp), 0.0
+        return x + out, aux
+
+    def forward(params, ids):
+        x = _embed(params, cfg, ids, dtype)
+
+        def body(carry, lp):
+            x, aux = carry
+            x, a = block_train(lp, x)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["layers"])
+        x = L.apply_norm(cfg.norm, params["final_norm"], x)
+        return _head(params, cfg, x), aux / cfg.num_layers
+
+    def init_cache(batch: int, max_len: int):
+        W = min(max_len, cfg.window) if cfg.attention == "swa" and cfg.window else max_len
+        shape = (cfg.num_layers, batch, W, kv_eff, cfg.head_dim)
+        cache_dt = jnp.dtype(cfg.cache_dtype) if cfg.cache_dtype else dtype
+        return {
+            "k": jnp.zeros(shape, cache_dt),
+            "v": jnp.zeros(shape, cache_dt),
+            "positions": jnp.full((W,), -1, jnp.int32),
+        }
+
+    def cache_axes(batch: int, max_len: int):
+        ax = ("layers", "cache_batch", "cache_seq", "cache_heads", "head_dim")
+        return {"k": ax, "v": ax, "positions": ("cache_seq",)}
+
+    def prefill(params, ids, cache):
+        """Run the full prompt, filling the cache; returns last-token logits."""
+        x = _embed(params, cfg, ids, dtype)
+        S = ids.shape[1]
+        W = cache["k"].shape[2]
+
+        def body(x, lp):
+            h = L.apply_norm(cfg.norm, lp["ln_att"], x)
+            att, (k, v) = _attn_full(lp["attn"], cfg_kv, h, 0)
+            x = x + att
+            h = L.apply_norm(cfg.norm, lp["ln_mlp"], x)
+            if cfg.num_experts:
+                out, _ = MOE.moe_block(
+                    lp["moe"], h, num_experts=cfg.num_experts, top_k=cfg.top_k,
+                    capacity_factor=cfg.capacity_factor,
+                )
+            else:
+                out = L.mlp_block(lp["mlp"], h, cfg.mlp)
+            # keep the last W positions of k/v for the cache
+            k_keep = k[:, -W:].astype(dtype)
+            v_keep = v[:, -W:].astype(dtype)
+            return x + out, (k_keep, v_keep)
+
+        x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+        x = L.apply_norm(cfg.norm, params["final_norm"], x)
+        logits = _head(params, cfg, x[:, -1:, :])
+        # ring layout: position p lives at slot p % W
+        W_ = cache["k"].shape[2]
+        kept = jnp.arange(W_)
+        pos_of_slot = jnp.where(
+            S >= W_,
+            # slots hold positions S-W .. S-1 at slot p%W
+            (S - W_) + (kept - (S - W_) % W_ + W_) % W_,
+            jnp.where(kept < S, kept, -1),
+        )
+        # scatter kept k/v into ring order
+        src_idx = jnp.clip(pos_of_slot - (S - W_ if S >= W_ else 0), 0, W_ - 1)
+        k_ring = jnp.take(ks, src_idx, axis=2)
+        v_ring = jnp.take(vs, src_idx, axis=2)
+        k_ring = jnp.where((pos_of_slot >= 0)[None, None, :, None, None], k_ring, 0)
+        v_ring = jnp.where((pos_of_slot >= 0)[None, None, :, None, None], v_ring, 0)
+        return logits, {"k": k_ring, "v": v_ring, "positions": pos_of_slot}
+
+    def decode(params, ids, cache, pos):
+        x = _embed_decode(params, cfg, ids, pos, dtype)
+        W = cache["k"].shape[2]
+        positions = cache["positions"]
+        positions = positions.at[pos % W].set(pos)
+
+        def body(x, inputs):
+            lp, kc, vc = inputs
+            h = L.apply_norm(cfg.norm, lp["ln_att"], x)
+            att, kc, vc = _attn_decode(lp["attn"], cfg_kv, h, kc, vc, positions, pos)
+            x = x + att
+            h = L.apply_norm(cfg.norm, lp["ln_mlp"], x)
+            if cfg.num_experts:
+                # decode is weight-read-bound: dense dispatch is exact (no
+                # capacity drops) and its extra FLOPs are negligible at S=1.
+                out = MOE.moe_block_dense_ref(
+                    lp["moe"], h, num_experts=cfg.num_experts, top_k=cfg.top_k
+                )
+            else:
+                out = L.mlp_block(lp["mlp"], h, cfg.mlp)
+            return x + out, (kc, vc)
+
+        x, (k_new, v_new) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+        x = L.apply_norm(cfg.norm, params["final_norm"], x)
+        logits = _head(params, cfg, x)
+        return logits, {"k": k_new, "v": v_new, "positions": positions}
+
+    return dict(
+        forward=forward, init_cache=init_cache, cache_axes=cache_axes,
+        prefill=prefill, decode=decode,
+    )
+
+
+# ---------------------------------------------------------------------------
+# family: rwkv6
+# ---------------------------------------------------------------------------
+
+
+def _make_rwkv(cfg: ModelConfig) -> Dict[str, Callable]:
+    dtype = _compute_dtype(cfg)
+    H, N = cfg.ssm_heads_eff, cfg.head_dim
+
+    def cmix(lp, x, x_prev):
+        xs = R6._token_shift(x, x_prev)
+        xk = R6._mix(x, xs, lp["mu_k"])
+        xr = R6._mix(x, xs, lp["mu_r"])
+        k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, lp["wk"].astype(x.dtype))))
+        r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, lp["wr"].astype(x.dtype)))
+        return r * jnp.einsum("bsf,fd->bsd", k, lp["wv"].astype(x.dtype)), x[:, -1, :]
+
+    def block(lp, x, carry, chunked=True):
+        xp_att, xp_ffn, st = carry
+        h = L.apply_norm(cfg.norm, lp["ln_att"], x)
+        if chunked:
+            att, xp_att2, st2 = R6.rwkv6_chunked(lp["tmix"], h, xp_att, st)
+        else:
+            att, xp_att2, st2 = R6.rwkv6_decode(lp["tmix"], h, xp_att, st)
+        x = x + att
+        h = L.apply_norm(cfg.norm, lp["ln_ffn"], x)
+        ff, xp_ffn2 = cmix(lp["cmix"], h, xp_ffn)
+        return x + ff, (xp_att2, xp_ffn2, st2)
+
+    def _zero_carry(batch):
+        return (
+            jnp.zeros((cfg.num_layers, batch, cfg.d_model), dtype),
+            jnp.zeros((cfg.num_layers, batch, cfg.d_model), dtype),
+            jnp.zeros((cfg.num_layers, batch, H, N, N), jnp.float32),
+        )
+
+    def forward(params, ids):
+        B = ids.shape[0]
+        x = _embed(params, cfg, ids, dtype)
+        carry0 = _zero_carry(B)
+
+        def body(x, inputs):
+            lp, ca, cf, st = inputs
+            x, _ = block(lp, x, (ca, cf, st))
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, (params["layers"],) + carry0)
+        x = L.apply_norm(cfg.norm, params["final_norm"], x)
+        return _head(params, cfg, x), jnp.float32(0.0)
+
+    def init_cache(batch: int, max_len: int):
+        ca, cf, st = _zero_carry(batch)
+        return {"x_att": ca, "x_ffn": cf, "wkv": st}
+
+    def cache_axes(batch: int, max_len: int):
+        return {
+            "x_att": ("layers", "cache_batch", "embed"),
+            "x_ffn": ("layers", "cache_batch", "embed"),
+            "wkv": ("layers", "cache_batch", "ssm_heads", None, None),
+        }
+
+    def _run(params, ids, cache, chunked, pos=None):
+        x = (
+            _embed(params, cfg, ids, dtype)
+            if chunked
+            else _embed_decode(params, cfg, ids, pos, dtype)
+        )
+
+        def body(x, inputs):
+            lp, ca, cf, st = inputs
+            x, (ca2, cf2, st2) = block(lp, x, (ca, cf, st), chunked=chunked)
+            return x, (ca2, cf2, st2)
+
+        x, (ca, cf, st) = jax.lax.scan(
+            body, x, (params["layers"], cache["x_att"], cache["x_ffn"], cache["wkv"])
+        )
+        x = L.apply_norm(cfg.norm, params["final_norm"], x)
+        take_last = x[:, -1:, :] if chunked else x
+        logits = _head(params, cfg, take_last)
+        return logits, {"x_att": ca, "x_ffn": cf, "wkv": st}
+
+    def prefill(params, ids, cache):
+        return _run(params, ids, cache, chunked=True)
+
+    def decode(params, ids, cache, pos):
+        return _run(params, ids, cache, chunked=False, pos=pos)
+
+    return dict(
+        forward=forward, init_cache=init_cache, cache_axes=cache_axes,
+        prefill=prefill, decode=decode,
+    )
+
+
+# ---------------------------------------------------------------------------
+# family: mamba2 (+ zamba2 hybrid shared attention)
+# ---------------------------------------------------------------------------
+
+
+def _make_mamba(cfg: ModelConfig, kv_eff: int) -> Dict[str, Callable]:
+    dtype = _compute_dtype(cfg)
+    import dataclasses as _dc
+
+    cfg_kv = _dc.replace(cfg, num_kv_heads=kv_eff)
+    every = cfg.shared_attn_every
+    n_shared = (cfg.num_layers // every) if every else 0
+    inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads_eff
+    P = inner // H
+    N = cfg.ssm_state
+    K = M2.CONV_K
+
+    def _zero_states(batch):
+        return (
+            jnp.zeros((cfg.num_layers, batch, K - 1, inner), dtype),
+            jnp.zeros((cfg.num_layers, batch, K - 1, N), dtype),
+            jnp.zeros((cfg.num_layers, batch, K - 1, N), dtype),
+            jnp.zeros((cfg.num_layers, batch, H, N, P), jnp.float32),
+        )
+
+    def _shared_attn_train(params, x, q_offset=0):
+        sp = params["shared"]
+        h = L.apply_norm(cfg.norm, sp["ln_att"], x)
+        att, _ = _attn_full(sp["attn"], cfg_kv, h, q_offset)
+        x = x + att
+        h = L.apply_norm(cfg.norm, sp["ln_mlp"], x)
+        return x + L.mlp_block(sp["mlp"], h, cfg.mlp)
+
+    # Layer groups: the shared attention block runs after every full group
+    # of ``every`` mamba layers.  Grouped scans (instead of a lax.cond inside
+    # one big scan) keep the dead branch out of the compiled body and make
+    # FLOP accounting exact — the shared block is compiled/counted once per
+    # invocation, not once per layer.
+    if every:
+        _bounds = list(range(0, cfg.num_layers, every)) + [cfg.num_layers]
+        _bounds = sorted(set(_bounds))
+    else:
+        _bounds = [0, cfg.num_layers]
+
+    def _group_slices(tree):
+        return [
+            jax.tree.map(lambda a: a[lo:hi], tree)
+            for lo, hi in zip(_bounds[:-1], _bounds[1:])
+        ]
+
+    def forward(params, ids):
+        B = ids.shape[0]
+        x = _embed(params, cfg, ids, dtype)
+        xs = (params["layers"],) + _zero_states(B)
+
+        def body(x, inputs):
+            lp, cx_i, cb_i, cc_i, st_i = inputs
+            h = L.apply_norm(cfg.norm, lp["ln"], x)
+            out, _, _ = M2.mamba2_chunked(lp["mixer"], h, (cx_i, cb_i, cc_i), st_i)
+            return x + out, None
+
+        for gi, xs_g in enumerate(_group_slices(xs)):
+            x, _ = jax.lax.scan(body, x, xs_g)
+            lo, hi = _bounds[gi], _bounds[gi + 1]
+            if every and (hi - lo) == every:
+                x = _shared_attn_train(params, x)
+        x = L.apply_norm(cfg.norm, params["final_norm"], x)
+        return _head(params, cfg, x), jnp.float32(0.0)
+
+    def init_cache(batch: int, max_len: int):
+        cx, cb, cc, st = _zero_states(batch)
+        cache = {"conv_x": cx, "conv_B": cb, "conv_C": cc, "ssm": st}
+        if every:
+            cache["shared_k"] = jnp.zeros(
+                (n_shared, batch, max_len, kv_eff, cfg.head_dim), dtype
+            )
+            cache["shared_v"] = jnp.zeros_like(cache["shared_k"])
+            cache["positions"] = jnp.full((max_len,), -1, jnp.int32)
+        return cache
+
+    def cache_axes(batch: int, max_len: int):
+        ax = {
+            "conv_x": ("layers", "cache_batch", "conv", "mlp"),
+            "conv_B": ("layers", "cache_batch", "conv", "ssm_state"),
+            "conv_C": ("layers", "cache_batch", "conv", "ssm_state"),
+            "ssm": ("layers", "cache_batch", "ssm_heads", "ssm_state", None),
+        }
+        if every:
+            ax["shared_k"] = (None, "cache_batch", "cache_seq", "cache_heads", "head_dim")
+            ax["shared_v"] = (None, "cache_batch", "cache_seq", "cache_heads", "head_dim")
+            ax["positions"] = ("cache_seq",)
+        return ax
+
+    def _shared_attn_decode(params, x, cache, sl_idx, positions, pos):
+        sp = params["shared"]
+        h = L.apply_norm(cfg.norm, sp["ln_att"], x)
+        kc = jax.lax.dynamic_index_in_dim(cache["shared_k"], sl_idx, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(cache["shared_v"], sl_idx, 0, keepdims=False)
+        att, kc, vc = _attn_decode(sp["attn"], cfg_kv, h, kc, vc, positions, pos)
+        x = x + att
+        h = L.apply_norm(cfg.norm, sp["ln_mlp"], x)
+        x = x + L.mlp_block(sp["mlp"], h, cfg.mlp)
+        return x, kc, vc
+
+    def _shared_prefill(params, x, sk, sv, gi):
+        sp = params["shared"]
+        h = L.apply_norm(cfg.norm, sp["ln_att"], x)
+        att, (k, v) = _attn_full(sp["attn"], cfg_kv, h, 0)
+        x = x + att
+        h = L.apply_norm(cfg.norm, sp["ln_mlp"], x)
+        x = x + L.mlp_block(sp["mlp"], h, cfg.mlp)
+        W = sk.shape[2]
+        k_keep = k[:, -W:].astype(sk.dtype)
+        v_keep = v[:, -W:].astype(sv.dtype)
+        padlen = W - k_keep.shape[1]
+        if padlen:
+            k_keep = jnp.pad(k_keep, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+            v_keep = jnp.pad(v_keep, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+        sk = sk.at[gi].set(k_keep)
+        sv = sv.at[gi].set(v_keep)
+        return x, sk, sv
+
+    def _run(params, ids, cache, chunked, pos=None):
+        x = (
+            _embed(params, cfg, ids, dtype)
+            if chunked
+            else _embed_decode(params, cfg, ids, pos, dtype)
+        )
+        if every:
+            positions = cache["positions"]
+            if not chunked:
+                W = cache["shared_k"].shape[2]
+                positions = positions.at[pos % W].set(pos)
+            sk, sv = cache["shared_k"], cache["shared_v"]
+        mix_fn = M2.mamba2_chunked if chunked else M2.mamba2_decode
+
+        def body(x, inputs):
+            lp, cx_i, cb_i, cc_i, st_i = inputs
+            h = L.apply_norm(cfg.norm, lp["ln"], x)
+            out, (cx2, cb2, cc2), st2 = mix_fn(lp["mixer"], h, (cx_i, cb_i, cc_i), st_i)
+            return x + out, (cx2, cb2, cc2, st2)
+
+        xs = (
+            params["layers"],
+            cache["conv_x"],
+            cache["conv_B"],
+            cache["conv_C"],
+            cache["ssm"],
+        )
+        group_outs = []
+        for gi, xs_g in enumerate(_group_slices(xs)):
+            x, ys = jax.lax.scan(body, x, xs_g)
+            group_outs.append(ys)
+            lo, hi = _bounds[gi], _bounds[gi + 1]
+            if every and (hi - lo) == every:
+                if chunked:
+                    x, sk, sv = _shared_prefill(params, x, sk, sv, gi)
+                else:
+                    x, kc, vc = _shared_attn_decode(
+                        params, x, {"shared_k": sk, "shared_v": sv}, gi, positions, pos
+                    )
+                    sk = sk.at[gi].set(kc)
+                    sv = sv.at[gi].set(vc)
+        cx2, cb2, cc2, st2 = (
+            jnp.concatenate([g[i] for g in group_outs], axis=0) for i in range(4)
+        )
+        x = L.apply_norm(cfg.norm, params["final_norm"], x)
+        take_last = x[:, -1:, :] if chunked else x
+        logits = _head(params, cfg, take_last)
+        new_cache = {"conv_x": cx2, "conv_B": cb2, "conv_C": cc2, "ssm": st2}
+        if every:
+            new_cache["shared_k"] = sk
+            new_cache["shared_v"] = sv
+            if chunked:
+                S = ids.shape[1]
+                W = sk.shape[2]
+                slots = jnp.arange(W)
+                new_cache["positions"] = jnp.where(slots < min(S, W), slots, -1)
+            else:
+                new_cache["positions"] = positions
+        return logits, new_cache
+
+    def prefill(params, ids, cache):
+        return _run(params, ids, cache, chunked=True)
+
+    def decode(params, ids, cache, pos):
+        return _run(params, ids, cache, chunked=False, pos=pos)
+
+    return dict(
+        forward=forward, init_cache=init_cache, cache_axes=cache_axes,
+        prefill=prefill, decode=decode,
+    )
+
+
+# ---------------------------------------------------------------------------
+# public factory
+# ---------------------------------------------------------------------------
+
+
+def build_model(cfg: ModelConfig, *, tp: int = 1) -> Model:
+    # Pad KV heads up to the TP degree so GQA caches shard cleanly — only
+    # when the padding keeps a valid grouping (KV | H) and is a true
+    # replication (kv | tp).  Archs like phi4-mini (H=24, tp=16) keep their
+    # native kv and fall back to replicated attention sharding instead
+    # (recorded per-arch in the dry-run; a hillclimb target).
+    kv_eff = cfg.num_kv_heads
+    if (
+        cfg.pad_kv_to_tp
+        and cfg.attention != "none"
+        and tp > cfg.num_kv_heads
+        and cfg.num_heads % tp == 0
+        and tp % cfg.num_kv_heads == 0
+    ):
+        kv_eff = tp
+    if cfg.ssm == "rwkv6":
+        fns = _make_rwkv(cfg)
+    elif cfg.ssm == "mamba2":
+        fns = _make_mamba(cfg, kv_eff)
+    else:
+        fns = _make_transformer(cfg, kv_eff)
+    axes = _init_params(cfg, kv_eff, None, abstract=True)[1]
+    return Model(
+        cfg=cfg,
+        kv_eff=kv_eff,
+        init=lambda key: _init_params(cfg, kv_eff, key)[0],
+        axes=axes,
+        forward=fns["forward"],
+        init_cache=fns["init_cache"],
+        cache_axes=fns["cache_axes"],
+        prefill=fns["prefill"],
+        decode=fns["decode"],
+    )
+
+
+def param_shapes(model: Model):
+    """ShapeDtypeStruct tree of the params (no allocation)."""
+    return _init_params(model.cfg, model.kv_eff, None, abstract=True)[0]

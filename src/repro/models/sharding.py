@@ -1,0 +1,178 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Params and activations are annotated with *logical* axis names; a rules
+table maps logical names to physical mesh axes.  Hillclimb variants swap
+individual rules (e.g. re-shard the KV cache sequence dim) without touching
+model code.
+
+Conventions:
+- a rule value may be ``None`` (replicate), a mesh-axis name, or a tuple of
+  mesh axes (e.g. batch over ``("pod", "data")``);
+- axes named in a rule but absent from the mesh are silently dropped, so the
+  same rules serve the single-pod (data, model) and multi-pod
+  (pod, data, model) meshes;
+- if a dim's size does not divide the product of its mapped mesh axes, the
+  mapping is dropped for that dim (with the ``strict`` flag raising
+  instead) — this is what lets kv_heads=2 fall back to replication instead
+  of a lowering error when a config forgets to pad.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+AxisRule = Union[None, str, Tuple[str, ...]]
+LogicalRules = Dict[str, AxisRule]
+
+# The baseline ruleset (paper-faithful megatron-style TP + DP):
+DEFAULT_RULES: LogicalRules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "qkv": None,
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    # Expert stacks must shard 2D to fit HBM (memory_analysis caught
+    # mixtral's E=8 experts replicating under 16-way TP: 542 GB/device).
+    # EP-style orientation won the §Perf comparison: when the expert count
+    # doesn't divide TP, shard expert d_model over 'model' (weights stay
+    # put; the contraction inserts activation reduces) rather than
+    # re-gathering expert weights over 'data' every microbatch.
+    "expert_embed": "model",
+    "expert_mlp": ("data",),
+    "capacity": None,
+    "layers": None,
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "conv": None,
+    "codebook": None,
+    # ANN-index logical axes (device-resident shard probe path)
+    "ann_shard": "data",
+    "ann_node": None,
+    "ann_degree": None,
+    "ann_pq_m": None,
+    # serving-specific
+    "cache_batch": "data",
+    "cache_seq": None,
+    "cache_heads": "model",
+}
+
+
+def resolve_rule(rule: AxisRule, mesh_axes: Sequence[str]) -> AxisRule:
+    """Drop mesh axes not present in the current mesh."""
+    if rule is None:
+        return None
+    if isinstance(rule, str):
+        return rule if rule in mesh_axes else None
+    kept = tuple(a for a in rule if a in mesh_axes)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def _axis_size(mesh: Mesh, rule: AxisRule) -> int:
+    if rule is None:
+        return 1
+    if isinstance(rule, str):
+        return mesh.shape[rule]
+    size = 1
+    for a in rule:
+        size *= mesh.shape[a]
+    return size
+
+
+def spec_for(
+    logical_axes: Sequence[Optional[str]],
+    rules: LogicalRules,
+    mesh: Mesh,
+    *,
+    dim_sizes: Optional[Sequence[int]] = None,
+    strict: bool = False,
+) -> PartitionSpec:
+    """Build a PartitionSpec for one array from its logical axis names."""
+    mesh_axes = list(mesh.axis_names)
+    used: set = set()
+    entries = []
+    for i, name in enumerate(logical_axes):
+        rule = resolve_rule(rules.get(name) if name else None, mesh_axes)
+        # each mesh axis may appear at most once in a PartitionSpec; drop the
+        # already-used axes from a tuple rule rather than the whole rule
+        if rule is not None:
+            flat = (rule,) if isinstance(rule, str) else rule
+            kept = tuple(a for a in flat if a not in used)
+            rule = None if not kept else (kept[0] if len(kept) == 1 else kept)
+        # divisibility check BEFORE marking axes used: a dropped rule must
+        # not block later dims from taking the axis (e.g. mixtral's 8
+        # experts can't take 'model'; the per-expert ff dim then can)
+        if rule is not None and dim_sizes is not None:
+            if dim_sizes[i] % _axis_size(mesh, rule) != 0:
+                if strict:
+                    raise ValueError(
+                        f"dim {i} (logical {name!r}, size {dim_sizes[i]}) not divisible "
+                        f"by mesh extent {_axis_size(mesh, rule)} of rule {rule!r}"
+                    )
+                # retry with a prefix of the tuple rule (partial sharding)
+                if not isinstance(rule, str):
+                    rule = next(
+                        (
+                            r
+                            for r in (rule[:k] for k in range(len(rule) - 1, 0, -1))
+                            if dim_sizes[i] % _axis_size(mesh, r if len(r) > 1 else r[0]) == 0
+                        ),
+                        None,
+                    )
+                    if rule is not None and len(rule) == 1:
+                        rule = rule[0]
+                else:
+                    rule = None
+        if rule is not None:
+            flat = (rule,) if isinstance(rule, str) else rule
+            used.update(flat)
+        entries.append(rule)
+    # trim trailing Nones for tidier specs
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PartitionSpec(*entries)
+
+
+def logical_to_sharding(
+    axes_tree,
+    rules: LogicalRules,
+    mesh: Mesh,
+    *,
+    shapes_tree=None,
+) -> object:
+    """Map a pytree of logical-axes tuples to a pytree of NamedShardings.
+
+    ``axes_tree`` leaves are tuples like ``("vocab", "embed")``; if
+    ``shapes_tree`` is given (same structure, leaves with ``.shape``),
+    divisibility is checked and non-dividing rules fall back to replication.
+    """
+
+    def one(axes, shaped=None):
+        sizes = None if shaped is None else shaped.shape
+        return NamedSharding(mesh, spec_for(axes, rules, mesh, dim_sizes=sizes))
+
+    if shapes_tree is None:
+        return jax.tree_util.tree_map(
+            one, axes_tree, is_leaf=lambda x: isinstance(x, tuple) or x is None
+        )
+    return jax.tree_util.tree_map(
+        one,
+        axes_tree,
+        shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) or x is None,
+    )
+
+
+def with_rules(base: LogicalRules, **overrides: AxisRule) -> LogicalRules:
+    out = dict(base)
+    out.update(overrides)
+    return out

@@ -1,0 +1,71 @@
+"""Local cluster factory: object store + catalog + executor fleet + coordinator.
+
+The in-process analogue of deploying FlockDB: one object store ("S3"), one
+REST catalog, N executors each with an SSD-cache directory, one coordinator.
+Used by examples, benchmarks, and integration tests.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import List
+
+from repro.iceberg.catalog import RestCatalog
+from repro.lakehouse.objectstore import ObjectStore
+from repro.runtime.coordinator import Coordinator
+from repro.runtime.executor import Executor
+from repro.runtime.scheduler import ExecutorPool
+
+
+@dataclass
+class LocalCluster:
+    root: str
+    store: ObjectStore
+    catalog: RestCatalog
+    executors: List[Executor]
+    pool: ExecutorPool
+    coordinator: Coordinator
+
+    def add_executor(self) -> Executor:
+        """Elastic scale-out: a brand new, empty-cache executor."""
+        eid = f"ex-{len(self.executors)}"
+        ex = Executor(
+            eid,
+            self.store,
+            os.path.join(self.root, "cache", eid),
+        )
+        self.executors.append(ex)
+        self.pool.add(ex)
+        return ex
+
+    def remove_executor(self, executor_id: str) -> None:
+        """Elastic scale-in (the executor's cache is disposable state)."""
+        self.pool.remove(executor_id)
+
+
+def make_local_cluster(
+    root: str,
+    num_executors: int = 4,
+    *,
+    enable_speculation: bool = False,
+    max_attempts: int = 4,
+) -> LocalCluster:
+    store = ObjectStore(os.path.join(root, "s3"))
+    catalog = RestCatalog(store)
+    executors = [
+        Executor(f"ex-{i}", store, os.path.join(root, "cache", f"ex-{i}"))
+        for i in range(num_executors)
+    ]
+    pool = ExecutorPool(executors)
+    coordinator = Coordinator(
+        catalog, pool, enable_speculation=enable_speculation, max_attempts=max_attempts
+    )
+    return LocalCluster(
+        root=root,
+        store=store,
+        catalog=catalog,
+        executors=executors,
+        pool=pool,
+        coordinator=coordinator,
+    )

@@ -1,0 +1,855 @@
+"""Coordinator: index lifecycle orchestration (paper §3.1, §5, §6, §7).
+
+Implements the paper's three protocols against the runtime substrate:
+
+- :meth:`Coordinator.create_index` — Stage 0 (sample + k-means + PQ train on
+  the coordinator), Stage 1 (parallel per-shard build on executors, with the
+  centroid-mode all-to-all exchange), Stage 2 (assemble the Puffin file,
+  optimistic-concurrency commit of ``statistics-file``).
+- :meth:`Coordinator.probe` — tiered probe placement: coordinator-local
+  centroid pruning below the size threshold, else the three-stage
+  distributed probe (Stage A shard beam search → Stage B exact rerank on
+  row-group masks → Stage C ordered merge).
+- :meth:`Coordinator.refresh_index` — manifest diff → per-shard greedy
+  insert + lazy tombstones → per-shard rebuild above the tombstone-ratio
+  threshold → metadata-only commit.  Unchanged shard blobs are byte-copied
+  into the new Puffin, never rebuilt or re-encoded.
+"""
+
+from __future__ import annotations
+
+import heapq
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.blobs import (
+    CENTROID_BLOB_TYPE,
+    ROUTING_BLOB_TYPE,
+    SHARD_BLOB_TYPE,
+    RoutingTable,
+    ShardInfo,
+    decode_routing_blob,
+    encode_routing_blob,
+)
+from repro.core.centroid_index import CentroidIndex, build_centroid_index
+from repro.core.kmeans import train_kmeans
+from repro.core.pq import train_pq
+from repro.iceberg.catalog import RestCatalog
+from repro.iceberg.diff import diff_snapshots
+from repro.iceberg.puffin import PuffinReader, PuffinWriter
+from repro.iceberg.snapshot import Snapshot, TableMetadata
+from repro.lakehouse.table import LakehouseTable
+from repro.lakehouse.vparquet import VParquetReader
+from repro.runtime import fragments as F
+from repro.runtime.scheduler import ExecutorPool, Scheduler
+
+TOMBSTONE_REBUILD_THRESHOLD = 0.20  # paper §7.3
+
+
+@dataclass
+class IndexConfig:
+    name: str
+    column: str = "vec"
+    R: int = 64
+    L: int = 100
+    alpha: float = 1.2
+    metric: str = "l2"
+    pq_m: int = 0  # 0 => full-precision graph only
+    pq_nbits: int = 8
+    num_shards: Optional[int] = None  # default: one per live executor
+    partitions_per_shard: int = 4
+    include_vectors: bool = True
+    sample_rate: float = 0.01
+    # PQ codebooks train on this sample: too small a floor measurably hurts
+    # ADC quality (EXPERIMENTS §1) — 8k ≈ 1% of the smallest bench corpus
+    min_sample: int = 8192
+    partition_mode: str = "centroid"  # centroid | file
+    coordinator_probe_threshold_mb: float = 100.0  # paper §3.3
+    oversample: int = 4  # paper §9.3
+    build_passes: int = 2
+    build_batch: int = 128
+
+
+@dataclass
+class BuildReport:
+    puffin_path: str
+    snapshot_id: int
+    base_snapshot_id: int
+    num_shards: int
+    vector_count: int
+    total_bytes: int
+    stage0_seconds: float
+    stage1_seconds: float
+    stage2_seconds: float
+    shard_results: List[F.IndexBuildResult] = field(default_factory=list)
+
+
+@dataclass
+class ProbeHit:
+    file_path: str
+    row_group: int
+    row_offset: int
+    distance: float
+
+
+@dataclass
+class ProbeReport:
+    hits: List[List[ProbeHit]]  # per query
+    strategy: str
+    files_scanned: int
+    bytes_read: int
+    stage_a_seconds: float = 0.0
+    stage_b_seconds: float = 0.0
+    stage_c_seconds: float = 0.0
+    shards_probed: int = 0
+    cache_hits: int = 0
+
+
+@dataclass
+class RefreshReport:
+    puffin_path: str
+    snapshot_id: int
+    base_snapshot_id: int
+    inserted: int
+    tombstoned: int
+    shards_refreshed: int
+    shards_rebuilt: int
+    shards_reused: int
+    seconds: float
+    noop: bool = False
+
+
+class Coordinator:
+    def __init__(
+        self,
+        catalog: RestCatalog,
+        pool: ExecutorPool,
+        *,
+        enable_speculation: bool = False,
+        max_attempts: int = 4,
+    ) -> None:
+        self.catalog = catalog
+        self.store = catalog.store
+        self.pool = pool
+        self.scheduler = Scheduler(
+            pool, enable_speculation=enable_speculation, max_attempts=max_attempts
+        )
+
+    # ------------------------------------------------------------------ build
+    def create_index(self, table_name: str, cfg: IndexConfig) -> BuildReport:
+        table = LakehouseTable(self.catalog, table_name)
+        meta = table.metadata()
+        snap = meta.current_snapshot()
+        if snap is None:
+            raise ValueError(f"table {table_name} has no snapshot")
+        files = [f.path for f in table.current_files()]
+        if not files:
+            raise ValueError(f"table {table_name} has no data files")
+        live = self.pool.live()
+        num_shards = cfg.num_shards or max(1, len(live))
+
+        # ---- Stage 0: sampling + centroid training (coordinator) --------
+        t0 = time.time()
+        sample = self._sample_vectors(table, files, cfg)
+        k = num_shards * cfg.partitions_per_shard
+        k = min(k, max(1, sample.shape[0] // 4))
+        centroids, _ = train_kmeans(sample, k, iters=15, seed=0)
+        shard_of_partition = self._pack_partitions(sample, centroids, num_shards)
+        pq_codebook = None
+        if cfg.pq_m:
+            pq_codebook = train_pq(
+                sample, m=cfg.pq_m, nbits=cfg.pq_nbits, metric=cfg.metric
+            ).codebook
+        stage0 = time.time() - t0
+
+        # ---- Stage 1: parallel shard build (executors) --------------------
+        t1 = time.time()
+        token = uuid.uuid4().hex[:8]
+        out_prefix = f"{meta.location}/metadata/ann-{cfg.name}-snap-{snap.snapshot_id}-{token}"
+        build_tasks: List[F.IndexBuildTaskInfo] = []
+        if cfg.partition_mode == "centroid":
+            exchanged = self._exchange(files, centroids, shard_of_partition, num_shards)
+            for sid in range(num_shards):
+                payload = exchanged.get(sid)
+                if payload is None:
+                    continue
+                build_tasks.append(
+                    F.IndexBuildTaskInfo(
+                        task_id=f"build-{cfg.name}-{sid}",
+                        shard_id=sid,
+                        assigned_files=[],
+                        partition_centroids=centroids,
+                        shard_of_partition=shard_of_partition,
+                        R=cfg.R,
+                        L=cfg.L,
+                        alpha=cfg.alpha,
+                        metric=cfg.metric,
+                        pq_m=cfg.pq_m,
+                        pq_nbits=cfg.pq_nbits,
+                        pq_codebook=pq_codebook,
+                        include_vectors=cfg.include_vectors,
+                        output_path=f"{out_prefix}-shard-{sid}.blob",
+                        partition_mode=cfg.partition_mode,
+                        build_passes=cfg.build_passes,
+                        build_batch=cfg.build_batch,
+                        exchanged=payload,
+                    )
+                )
+        else:  # file mode: each shard owns a file subset, no exchange
+            file_groups = [list(files[i::num_shards]) for i in range(num_shards)]
+            for sid, group in enumerate(file_groups):
+                if not group:
+                    continue
+                build_tasks.append(
+                    F.IndexBuildTaskInfo(
+                        task_id=f"build-{cfg.name}-{sid}",
+                        shard_id=sid,
+                        assigned_files=group,
+                        partition_centroids=centroids,
+                        shard_of_partition=shard_of_partition,
+                        R=cfg.R,
+                        L=cfg.L,
+                        alpha=cfg.alpha,
+                        metric=cfg.metric,
+                        pq_m=cfg.pq_m,
+                        pq_nbits=cfg.pq_nbits,
+                        pq_codebook=pq_codebook,
+                        include_vectors=cfg.include_vectors,
+                        output_path=f"{out_prefix}-shard-{sid}.blob",
+                        partition_mode="file",
+                        build_passes=cfg.build_passes,
+                        build_batch=cfg.build_batch,
+                    )
+                )
+        results: List[F.IndexBuildResult] = self.scheduler.run_wave(build_tasks)
+        stage1 = time.time() - t1
+
+        # ---- Stage 2: assemble Puffin + commit (coordinator) -----------------
+        t2 = time.time()
+        centroid_index = build_centroid_index(table, metric=cfg.metric)
+        puffin_path, total_bytes = self._assemble_puffin(
+            meta,
+            snap,
+            cfg,
+            centroids,
+            shard_of_partition,
+            results,
+            centroid_index,
+            files,
+            out_prefix,
+        )
+        new_meta = self.catalog.set_statistics_file(
+            table_name,
+            puffin_path,
+            expected_base_snapshot_id=snap.snapshot_id,
+            extra_summary={
+                "ann.index-name": cfg.name,
+                "ann.base-snapshot-id": str(snap.snapshot_id),
+                "ann.num-shards": str(len(results)),
+            },
+        )
+        stage2 = time.time() - t2
+        return BuildReport(
+            puffin_path=puffin_path,
+            snapshot_id=new_meta.current_snapshot_id,
+            base_snapshot_id=snap.snapshot_id,
+            num_shards=len(results),
+            vector_count=sum(r.vector_count for r in results),
+            total_bytes=total_bytes,
+            stage0_seconds=stage0,
+            stage1_seconds=stage1,
+            stage2_seconds=stage2,
+            shard_results=results,
+        )
+
+    # -- Stage-0 helpers ------------------------------------------------------
+    def _sample_vectors(
+        self, table: LakehouseTable, files: List[str], cfg: IndexConfig
+    ) -> np.ndarray:
+        rng = np.random.default_rng(0)
+        order = rng.permutation(len(files))
+        total_rows = 0
+        parts: List[np.ndarray] = []
+        for fi in order:
+            reader = table.reader(files[fi])
+            parts.append(reader.read_column("vec"))
+            total_rows += parts[-1].shape[0]
+            if total_rows >= cfg.min_sample / max(cfg.sample_rate, 1e-9) * cfg.sample_rate and len(
+                parts
+            ) >= max(1, int(0.1 * len(files))):
+                break
+        vecs = np.concatenate(parts)
+        want = max(cfg.min_sample, int(cfg.sample_rate * vecs.shape[0]))
+        if vecs.shape[0] > want:
+            vecs = vecs[rng.choice(vecs.shape[0], want, replace=False)]
+        return vecs
+
+    def _pack_partitions(
+        self, sample: np.ndarray, centroids: np.ndarray, num_shards: int
+    ) -> np.ndarray:
+        """Greedy bin-pack partitions onto shards by sampled mass."""
+        from repro.core.kmeans import assign
+
+        part = assign(sample, centroids)
+        counts = np.bincount(part, minlength=centroids.shape[0])
+        shard_of = np.zeros(centroids.shape[0], np.uint32)
+        loads = [(0, s) for s in range(num_shards)]
+        heapq.heapify(loads)
+        for p in np.argsort(-counts):
+            load, s = heapq.heappop(loads)
+            shard_of[p] = s
+            heapq.heappush(loads, (load + int(counts[p]), s))
+        return shard_of
+
+    def _exchange(
+        self,
+        files: List[str],
+        centroids: np.ndarray,
+        shard_of_partition: np.ndarray,
+        num_shards: int,
+    ) -> Dict[int, tuple]:
+        """Stage-1a all-to-all: executors scan their file subsets and group
+        vectors by owner shard; the coordinator merges the groups."""
+        live = self.pool.live()
+        n_scan = max(1, len(live))
+        scan_tasks = [
+            F.ScanPartitionTaskInfo(
+                task_id=f"scan-{i}",
+                assigned_files=list(files[i::n_scan]),
+                partition_centroids=centroids,
+                shard_of_partition=shard_of_partition,
+                num_shards=num_shards,
+            )
+            for i in range(n_scan)
+            if files[i::n_scan]
+        ]
+        scan_results: List[F.ScanPartitionResult] = self.scheduler.run_wave(scan_tasks)
+        merged: Dict[int, tuple] = {}
+        for sid in range(num_shards):
+            vec_parts, fidx_parts, rg_parts, ro_parts, paths = [], [], [], [], []
+            for res in scan_results:
+                if sid not in res.per_shard:
+                    continue
+                v, fi, rg, ro, p = res.per_shard[sid]
+                base = len(paths)
+                paths.extend(p)
+                vec_parts.append(v)
+                fidx_parts.append(fi.astype(np.uint32) + base)
+                rg_parts.append(rg)
+                ro_parts.append(ro)
+            if vec_parts:
+                merged[sid] = (
+                    np.concatenate(vec_parts),
+                    np.concatenate(fidx_parts),
+                    np.concatenate(rg_parts),
+                    np.concatenate(ro_parts),
+                    paths,
+                )
+        return merged
+
+    # -- Stage-2 helpers ----------------------------------------------------------
+    def _assemble_puffin(
+        self,
+        meta: TableMetadata,
+        snap: Snapshot,
+        cfg: IndexConfig,
+        centroids: np.ndarray,
+        shard_of_partition: np.ndarray,
+        results: List[F.IndexBuildResult],
+        centroid_index: CentroidIndex,
+        covered_files: List[str],
+        out_prefix: str,
+        tombstone_ratios: Optional[Dict[int, float]] = None,
+        raw_shard_bytes: Optional[Dict[int, bytes]] = None,
+    ) -> Tuple[str, int]:
+        writer = PuffinWriter(
+            file_properties={
+                "created-by": "repro-flockdb",
+                "ann.index-name": cfg.name,
+            }
+        )
+        ratios = tombstone_ratios or {}
+        shards = [
+            ShardInfo(
+                shard_id=r.shard_id,
+                blob_index=2 + i,  # 0 = routing, 1 = centroid index
+                vector_count=r.vector_count,
+                byte_size=r.byte_size,
+                tombstone_ratio=ratios.get(r.shard_id, 0.0),
+                executor_hint=r.executor_id,
+            )
+            for i, r in enumerate(results)
+        ]
+        routing = RoutingTable(
+            base_snapshot_id=snap.snapshot_id,
+            dims=centroids.shape[1],
+            metric=cfg.metric,
+            params={
+                "R": str(cfg.R),
+                "L": str(cfg.L),
+                "alpha": str(cfg.alpha),
+                "pq_m": str(cfg.pq_m),
+                "pq_nbits": str(cfg.pq_nbits),
+                "oversample": str(cfg.oversample),
+                "include_vectors": str(cfg.include_vectors),
+                "partition_mode": cfg.partition_mode,
+            },
+            shards=shards,
+            covered_files=covered_files,
+            partition_centroids=centroids,
+            shard_of_partition=shard_of_partition,
+        )
+        writer.add_blob(
+            encode_routing_blob(routing),
+            type=ROUTING_BLOB_TYPE,
+            snapshot_id=snap.snapshot_id,
+            properties={"ann.index-name": cfg.name},
+        )
+        writer.add_blob(
+            centroid_index.to_blob(),
+            type=CENTROID_BLOB_TYPE,
+            snapshot_id=snap.snapshot_id,
+            compression="zstd",
+            properties={
+                "dimensions": str(centroid_index.dim),
+                "metric": cfg.metric,
+                "entry-count": str(centroid_index.num_files),
+                "computed-against-snapshot": str(snap.snapshot_id),
+            },
+        )
+        for r in results:
+            if raw_shard_bytes and r.shard_id in raw_shard_bytes:
+                payload = raw_shard_bytes[r.shard_id]
+            else:
+                payload = self.store.get(r.output_path)
+            writer.add_blob(
+                payload,
+                type=SHARD_BLOB_TYPE,
+                snapshot_id=snap.snapshot_id,
+                properties={
+                    "shard-id": str(r.shard_id),
+                    "vector-count": str(r.vector_count),
+                    "tombstone-ratio": f"{ratios.get(r.shard_id, 0.0):.6f}",
+                },
+            )
+        data = writer.finish()
+        puffin_path = f"{out_prefix}.puffin"
+        self.store.put(puffin_path, data)
+        # the standalone shard blobs are now redundant: orphaned + GC-able
+        return puffin_path, len(data)
+
+    # ------------------------------------------------------------------ probe
+    def _resolve_index(
+        self,
+        table_name: str,
+        snapshot_id: Optional[int] = None,
+        as_of_ms: Optional[int] = None,
+    ) -> Tuple[TableMetadata, Snapshot, str, PuffinReader]:
+        meta = self.catalog.load_table(table_name)
+        if as_of_ms is not None:
+            snap = meta.snapshot_as_of(as_of_ms)
+        elif snapshot_id is not None:
+            snap = meta.snapshot_by_id(snapshot_id)
+        else:
+            snap = meta.current_snapshot()
+        if snap is None:
+            raise ValueError("no snapshot")
+        # Resolution order: a freshly-bound index, else the stale binding
+        # carried forward by append/delete commits (the index remains usable
+        # but covers only the files live at its base snapshot — the paper's
+        # freshness bound, §10 "update granularity is the snapshot").
+        path = snap.statistics_file or snap.summary.get("ann.stale-statistics-file")
+        if path is None:
+            raise LookupError(f"snapshot {snap.snapshot_id} has no ANN index bound")
+        reader = PuffinReader(self.store.stat(path).size, self.store.range_reader(path))
+        return meta, snap, path, reader
+
+    def probe(
+        self,
+        table_name: str,
+        queries: np.ndarray,
+        k: int,
+        *,
+        strategy: str = "auto",
+        n_probe: int = 16,
+        snapshot_id: Optional[int] = None,
+        as_of_ms: Optional[int] = None,
+        use_pq: Optional[bool] = None,
+        L: Optional[int] = None,
+    ) -> ProbeReport:
+        """Vector top-k query.  ``strategy``: auto | diskann | centroid | scan."""
+        queries = np.atleast_2d(np.asarray(queries, np.float32))
+        self.store.metrics.reset()
+        table = LakehouseTable(self.catalog, table_name)
+        if strategy == "scan":
+            return self._probe_scan(table, queries, k, snapshot_id)
+        meta, snap, puffin_path, reader = self._resolve_index(
+            table_name, snapshot_id, as_of_ms
+        )
+        routing = decode_routing_blob(reader.read_first(ROUTING_BLOB_TYPE))
+        shard_blobs = reader.blobs_of_type(SHARD_BLOB_TYPE)
+        centroid_meta = reader.blobs_of_type(CENTROID_BLOB_TYPE)
+        if strategy == "auto":
+            # tiered placement (paper §3.3): large sharded indexes go to
+            # executors; otherwise coordinator-local centroid probing.
+            threshold = 100.0 * 1024 * 1024
+            if shard_blobs and sum(b.length for b in shard_blobs) > 0:
+                total = sum(b.length for b in shard_blobs)
+                strategy = "diskann" if total > 0 else "centroid"
+                # small graphs still probe distributed if present; centroid
+                # path is chosen when only the centroid blob exists or the
+                # index is tiny enough to fit the coordinator budget.
+                if total <= threshold and not routing.shards:
+                    strategy = "centroid"
+            else:
+                strategy = "centroid"
+        if strategy == "centroid":
+            return self._probe_centroid(table, reader, queries, k, n_probe)
+        return self._probe_diskann(
+            table, routing, shard_blobs, puffin_path, queries, k, use_pq=use_pq, L=L
+        )
+
+    def _probe_scan(
+        self, table: LakehouseTable, queries: np.ndarray, k: int, snapshot_id=None
+    ) -> ProbeReport:
+        """No-index baseline (paper Table 2 column 1): full scan + exact."""
+        t0 = time.time()
+        files = [f.path for f in table.current_files(snapshot_id)]
+        masks = {}
+        for fp in files:
+            r = table.reader(fp)
+            masks[fp] = {
+                rg: list(range(r.row_groups[rg]["num_rows"]))
+                for rg in range(len(r.row_groups))
+            }
+        report = self._rerank_and_merge(table, masks, queries, k, "l2")
+        report.strategy = "scan"
+        report.files_scanned = len(files)
+        report.stage_b_seconds = time.time() - t0
+        report.bytes_read = self.store.metrics.bytes_read
+        return report
+
+    def _probe_centroid(
+        self,
+        table: LakehouseTable,
+        reader: PuffinReader,
+        queries: np.ndarray,
+        k: int,
+        n_probe: int,
+    ) -> ProbeReport:
+        """Coordinator-tier probe (paper Table 2 column 2): prune the file
+        list with the centroid index, then exact-rerank only those files."""
+        t0 = time.time()
+        ci = CentroidIndex.from_blob(reader.read_first(CENTROID_BLOB_TYPE))
+        pruned: List[str] = []
+        per_query_files: List[List[str]] = []
+        for q in queries:
+            fl = ci.probe_topk(q, n_probe)
+            per_query_files.append(fl)
+            pruned.extend(fl)
+        pruned = sorted(set(pruned))
+        stage_a = time.time() - t0
+        masks = {}
+        for fp in pruned:
+            r = table.reader(fp)
+            masks[fp] = {
+                rg: list(range(r.row_groups[rg]["num_rows"]))
+                for rg in range(len(r.row_groups))
+            }
+        report = self._rerank_and_merge(table, masks, queries, k, ci.metric)
+        report.strategy = "centroid"
+        report.files_scanned = len(pruned)
+        report.stage_a_seconds = stage_a
+        report.bytes_read = self.store.metrics.bytes_read
+        return report
+
+    def _probe_diskann(
+        self,
+        table: LakehouseTable,
+        routing: RoutingTable,
+        shard_blobs,
+        puffin_path: str,
+        queries: np.ndarray,
+        k: int,
+        *,
+        use_pq: Optional[bool] = None,
+        L: Optional[int] = None,
+    ) -> ProbeReport:
+        """Three-stage distributed probe (paper §6, Figure 3)."""
+        oversample = int(routing.params.get("oversample", "4"))
+        if use_pq is None:
+            use_pq = int(routing.params.get("pq_m", "0")) > 0
+        L_eff = L or int(routing.params.get("L", "100"))
+        # ---- Stage A: parallel shard beam search -------------------------
+        t0 = time.time()
+        blob_by_index = {i: b for i, b in enumerate(PuffinReader(
+            self.store.stat(puffin_path).size, self.store.range_reader(puffin_path)
+        ).blobs)}
+        tasks = []
+        for s in routing.shards:
+            b = blob_by_index[s.blob_index]
+            tasks.append(
+                F.ProbeTaskInfo(
+                    task_id=f"probe-{s.shard_id}",
+                    cache_key=f"{puffin_path}#shard{s.shard_id}",
+                    shard_id=s.shard_id,
+                    puffin_path=puffin_path,
+                    blob_offset=b.offset,
+                    blob_length=b.length,
+                    blob_codec=b.compression_codec,
+                    queries=queries,
+                    k=k,
+                    L=L_eff,
+                    use_pq=use_pq,
+                    oversample=oversample,
+                )
+            )
+        probe_results: List[F.ProbeResult] = self.scheduler.run_wave(tasks)
+        stage_a = time.time() - t0
+        # ---- merge + Stage B: exact rerank on row-group masks ---------------
+        t1 = time.time()
+        Q = queries.shape[0]
+        keep = k * oversample
+        merged: List[List[F.ProbeCandidate]] = []
+        for qi in range(Q):
+            cands: List[F.ProbeCandidate] = []
+            for r in probe_results:
+                cands.extend(r.candidates[qi])
+            cands.sort(key=lambda c: c.approx_distance)
+            merged.append(cands[:keep])
+        masks: Dict[str, Dict[int, set]] = {}
+        for qi in range(Q):
+            for c in merged[qi]:
+                masks.setdefault(c.file_path, {}).setdefault(c.row_group, set()).add(
+                    c.row_offset
+                )
+        masks_l = {
+            fp: {rg: sorted(rows) for rg, rows in groups.items()}
+            for fp, groups in masks.items()
+        }
+        report = self._rerank_and_merge(table, masks_l, queries, k, routing.metric)
+        report.strategy = "diskann"
+        report.files_scanned = len(masks_l)
+        report.stage_a_seconds = stage_a
+        report.stage_b_seconds = time.time() - t1 - report.stage_c_seconds
+        report.shards_probed = len(routing.shards)
+        report.cache_hits = sum(1 for r in probe_results if r.cache_hit)
+        report.bytes_read = self.store.metrics.bytes_read
+        return report
+
+    def _rerank_and_merge(
+        self,
+        table: LakehouseTable,
+        masks: Dict[str, Dict[int, List[int]]],
+        queries: np.ndarray,
+        k: int,
+        metric: str,
+    ) -> ProbeReport:
+        """Stage B (parallel rerank) + Stage C (ordered merge)."""
+        live = self.pool.live()
+        n_exec = max(1, len(live))
+        file_list = sorted(masks.keys())
+        groups = [file_list[i::n_exec] for i in range(n_exec)]
+        tasks = []
+        for gi, group in enumerate(groups):
+            if not group:
+                continue
+            tasks.append(
+                F.RerankTaskInfo(
+                    task_id=f"rerank-{gi}",
+                    cache_key=group[0],
+                    masks={fp: masks[fp] for fp in group},
+                    queries=queries,
+                    metric=metric,
+                )
+            )
+        results: List[F.RerankResult] = self.scheduler.run_wave(tasks) if tasks else []
+        # Stage C: streaming loser-tree merge (here: heap merge per query)
+        t2 = time.time()
+        Q = queries.shape[0]
+        hits: List[List[ProbeHit]] = []
+        for qi in range(Q):
+            rows = []
+            for r in results:
+                rows.extend(r.rows[qi])
+            best = heapq.nsmallest(k, rows, key=lambda x: x.distance)
+            hits.append(
+                [ProbeHit(b.file_path, b.row_group, b.row_offset, b.distance) for b in best]
+            )
+        stage_c = time.time() - t2
+        return ProbeReport(
+            hits=hits,
+            strategy="",
+            files_scanned=0,
+            bytes_read=0,
+            stage_c_seconds=stage_c,
+        )
+
+    # ------------------------------------------------------------------ refresh
+    def refresh_index(self, table_name: str, index_name: str) -> RefreshReport:
+        """REFRESH INDEX (paper §7): manifest diff → greedy insert + lazy
+        tombstones → selective shard rebuild → metadata-only commit."""
+        t_start = time.time()
+        meta, snap, puffin_path, reader = self._resolve_index(table_name)
+        routing = decode_routing_blob(reader.read_first(ROUTING_BLOB_TYPE))
+        base_id = routing.base_snapshot_id
+        # The index must be refreshed against the *current* data snapshot.
+        diff = diff_snapshots(self.store, meta, base_id, snap.snapshot_id)
+        if diff.is_empty:
+            return RefreshReport(
+                puffin_path=puffin_path,
+                snapshot_id=snap.snapshot_id,
+                base_snapshot_id=base_id,
+                inserted=0,
+                tombstoned=0,
+                shards_refreshed=0,
+                shards_rebuilt=0,
+                shards_reused=len(routing.shards),
+                seconds=time.time() - t_start,
+                noop=True,
+            )
+        added = [f.path for f in diff.added]
+        removed = [f.path for f in diff.deleted]
+        blob_metas = reader.blobs
+        token = uuid.uuid4().hex[:8]
+        out_prefix = (
+            f"{meta.location}/metadata/ann-{index_name}-snap-{snap.snapshot_id}-{token}"
+        )
+        tasks = []
+        for s in routing.shards:
+            b = blob_metas[s.blob_index]
+            tasks.append(
+                F.RefreshTaskInfo(
+                    task_id=f"refresh-{s.shard_id}",
+                    cache_key=f"{puffin_path}#shard{s.shard_id}",
+                    shard_id=s.shard_id,
+                    puffin_path=puffin_path,
+                    blob_offset=b.offset,
+                    blob_length=b.length,
+                    blob_codec=b.compression_codec,
+                    added_files=added,
+                    removed_files=removed,
+                    partition_centroids=routing.partition_centroids,
+                    shard_of_partition=routing.shard_of_partition,
+                    output_path=f"{out_prefix}-shard-{s.shard_id}.blob",
+                    include_vectors=routing.params.get("include_vectors", "True")
+                    == "True",
+                )
+            )
+        results: List[F.RefreshResult] = self.scheduler.run_wave(tasks)
+        # rebuild any shard past the tombstone threshold (paper §7.3: only
+        # that shard, at the next maintenance window — we do it inline)
+        rebuilt = 0
+        final: List[F.IndexBuildResult] = []
+        ratios: Dict[int, float] = {}
+        cfg = IndexConfig(
+            name=index_name,
+            R=int(routing.params["R"]),
+            L=int(routing.params["L"]),
+            alpha=float(routing.params["alpha"]),
+            metric=routing.metric,
+            pq_m=int(routing.params.get("pq_m", "0")),
+            pq_nbits=int(routing.params.get("pq_nbits", "8")),
+            include_vectors=routing.params.get("include_vectors", "True") == "True",
+            partition_mode=routing.params.get("partition_mode", "centroid"),
+        )
+        for r in results:
+            if r.tombstone_ratio > TOMBSTONE_REBUILD_THRESHOLD:
+                rb = self._rebuild_shard(r, cfg, routing, out_prefix)
+                final.append(rb)
+                ratios[rb.shard_id] = 0.0
+                rebuilt += 1
+            else:
+                final.append(
+                    F.IndexBuildResult(
+                        shard_id=r.shard_id,
+                        output_path=r.output_path,
+                        vector_count=r.vector_count,
+                        byte_size=r.byte_size,
+                        executor_id=r.executor_id,
+                        build_seconds=r.refresh_seconds,
+                    )
+                )
+                ratios[r.shard_id] = r.tombstone_ratio
+        table = LakehouseTable(self.catalog, table_name)
+        centroid_index = build_centroid_index(table, metric=routing.metric)
+        covered = [f.path for f in table.current_files()]
+        # snapshot to bind against is the CURRENT one (the diff target)
+        puffin_new, total_bytes = self._assemble_puffin(
+            meta,
+            snap,
+            cfg,
+            routing.partition_centroids,
+            routing.shard_of_partition,
+            final,
+            centroid_index,
+            covered,
+            out_prefix,
+            tombstone_ratios=ratios,
+        )
+        new_meta = self.catalog.set_statistics_file(
+            table_name,
+            puffin_new,
+            expected_base_snapshot_id=snap.snapshot_id,
+            extra_summary={
+                "ann.index-name": index_name,
+                "ann.base-snapshot-id": str(snap.snapshot_id),
+                "ann.num-shards": str(len(final)),
+                "ann.refreshed-from": str(base_id),
+            },
+        )
+        return RefreshReport(
+            puffin_path=puffin_new,
+            snapshot_id=new_meta.current_snapshot_id,
+            base_snapshot_id=snap.snapshot_id,
+            inserted=sum(r.inserted for r in results),
+            tombstoned=sum(r.tombstoned for r in results),
+            shards_refreshed=len(results),
+            shards_rebuilt=rebuilt,
+            shards_reused=0,
+            seconds=time.time() - t_start,
+        )
+
+    def _rebuild_shard(
+        self,
+        refresh_result: F.RefreshResult,
+        cfg: IndexConfig,
+        routing: RoutingTable,
+        out_prefix: str,
+    ) -> F.IndexBuildResult:
+        """Full rebuild of a single over-tombstoned shard from live vectors."""
+        from repro.core.blobs import decode_shard_blob
+
+        raw = self.store.get(refresh_result.output_path)
+        graph, locmap = decode_shard_blob(raw)
+        live_ids = np.flatnonzero(~graph.tombstones[: graph.n])
+        vectors = graph.vectors[live_ids]
+        pq_codebook = graph.pq.codebook if graph.pq is not None else None
+        task = F.IndexBuildTaskInfo(
+            task_id=f"rebuild-{refresh_result.shard_id}",
+            shard_id=refresh_result.shard_id,
+            partition_centroids=routing.partition_centroids,
+            shard_of_partition=routing.shard_of_partition,
+            R=cfg.R,
+            L=cfg.L,
+            alpha=cfg.alpha,
+            metric=cfg.metric,
+            pq_m=cfg.pq_m,
+            pq_nbits=cfg.pq_nbits,
+            pq_codebook=pq_codebook,
+            include_vectors=cfg.include_vectors,
+            output_path=f"{out_prefix}-shard-{refresh_result.shard_id}-rebuilt.blob",
+            exchanged=(
+                vectors,
+                locmap.file_idx[live_ids],
+                locmap.row_group[live_ids],
+                locmap.row_offset[live_ids],
+                list(locmap.file_paths),
+            ),
+        )
+        [result] = self.scheduler.run_wave([task])
+        return result

@@ -1,0 +1,429 @@
+"""Executor process model (paper §3.1): stateless worker + SSD/L1 caches.
+
+An executor owns:
+- an **SSD cache** directory keyed by ``(object_path, credential_fingerprint,
+  byte_range, etag)`` — raw blob bytes survive across tasks and are safe to
+  lose (the object store is the source of truth);
+- an **L1 cache** of deserialized Vamana graphs (bounded LRU);
+- task handlers for the five fragment kinds: partition scan, shard build,
+  shard probe, exact rerank, shard refresh.
+
+Failure-injection hooks (``kill()``, ``fail_next()``, ``delay_next()``)
+drive the fault-tolerance and straggler tests.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import threading
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import blobs as blobmod
+from repro.core.blobs import ShardLocationMap, decode_shard_blob, encode_shard_blob
+from repro.core.vamana import VamanaGraph, VamanaParams, build_vamana
+from repro.core.pq import PQCodebook, encode as pq_encode
+from repro.iceberg.puffin import _decompress  # codec shared with Puffin blobs
+from repro.kernels import ops
+from repro.lakehouse.objectstore import ObjectStore
+from repro.lakehouse.vparquet import VParquetReader
+from repro.runtime import fragments as F
+
+import jax.numpy as jnp
+
+
+class ExecutorDead(RuntimeError):
+    """Raised when a task lands on a dead executor (heartbeat timeout)."""
+
+
+class InjectedFailure(RuntimeError):
+    """Deterministic task failure for tests."""
+
+
+def _scan_files_with_locations(
+    store: ObjectStore, files: List[str]
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, List[str]]:
+    """Read the vector column of ``files`` with per-row locations.
+
+    Returns (vectors, file_idx, row_group, row_offset, file_paths)."""
+    vecs: List[np.ndarray] = []
+    fidx: List[np.ndarray] = []
+    rgrp: List[np.ndarray] = []
+    roff: List[np.ndarray] = []
+    for i, path in enumerate(files):
+        r = VParquetReader.from_store(store, path)
+        for rg_id, rg in enumerate(r.row_groups):
+            arr = r.read_column("vec", [rg_id])
+            n = arr.shape[0]
+            vecs.append(arr)
+            fidx.append(np.full(n, i, np.uint32))
+            rgrp.append(np.full(n, rg_id, np.uint32))
+            roff.append(np.arange(n, dtype=np.uint32))
+    if not vecs:
+        return (
+            np.empty((0, 0), np.float32),
+            np.empty(0, np.uint32),
+            np.empty(0, np.uint32),
+            np.empty(0, np.uint32),
+            list(files),
+        )
+    return (
+        np.concatenate(vecs),
+        np.concatenate(fidx),
+        np.concatenate(rgrp),
+        np.concatenate(roff),
+        list(files),
+    )
+
+
+def _owner_shards(
+    vectors: np.ndarray, centroids: np.ndarray, shard_of_partition: np.ndarray
+) -> np.ndarray:
+    part, _ = ops.kmeans_assign(
+        jnp.asarray(vectors), jnp.asarray(centroids), backend="ref"
+    )
+    return shard_of_partition[np.asarray(part)]
+
+
+class Executor:
+    def __init__(
+        self,
+        executor_id: str,
+        store: ObjectStore,
+        cache_dir: str,
+        *,
+        l1_capacity: int = 4,
+        credential_fingerprint: str = "default-cred",
+    ) -> None:
+        self.executor_id = executor_id
+        self.store = store
+        self.cache_dir = cache_dir
+        os.makedirs(cache_dir, exist_ok=True)
+        self.cred = credential_fingerprint
+        self._l1: "OrderedDict[str, Tuple[VamanaGraph, ShardLocationMap]]" = OrderedDict()
+        self._l1_capacity = l1_capacity
+        self._lock = threading.Lock()
+        # failure injection
+        self.dead = False
+        self._fail_budget = 0
+        self._delay_next = 0.0
+        # metrics
+        self.tasks_done = 0
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    # -- health -----------------------------------------------------------
+    def heartbeat(self) -> bool:
+        return not self.dead
+
+    def kill(self) -> None:
+        self.dead = True
+
+    def revive(self) -> None:
+        self.dead = False
+
+    def fail_next(self, count: int = 1) -> None:
+        self._fail_budget = count
+
+    def delay_next(self, seconds: float) -> None:
+        self._delay_next = seconds
+
+    def _gate(self) -> None:
+        if self.dead:
+            raise ExecutorDead(self.executor_id)
+        if self._fail_budget > 0:
+            self._fail_budget -= 1
+            raise InjectedFailure(f"injected failure on {self.executor_id}")
+        if self._delay_next > 0:
+            d, self._delay_next = self._delay_next, 0.0
+            time.sleep(d)
+
+    # -- SSD cache ------------------------------------------------------------
+    def _cache_path(self, object_path: str, offset: int, length: int) -> str:
+        etag = ""
+        try:
+            etag = self.store.stat(object_path).etag
+        except Exception:
+            pass
+        key = hashlib.sha1(
+            f"{object_path}|{self.cred}|{offset}|{length}|{etag}".encode()
+        ).hexdigest()
+        return os.path.join(self.cache_dir, key + ".blob")
+
+    def has_cached(self, cache_key: Optional[str]) -> bool:
+        if not cache_key:
+            return False
+        with self._lock:
+            if any(k.startswith(cache_key) for k in self._l1):
+                return True
+        # any SSD entry tagged with this logical key
+        marker = os.path.join(self.cache_dir, hashlib.sha1(cache_key.encode()).hexdigest() + ".key")
+        return os.path.exists(marker)
+
+    def _mark_cached(self, cache_key: Optional[str]) -> None:
+        if not cache_key:
+            return
+        marker = os.path.join(self.cache_dir, hashlib.sha1(cache_key.encode()).hexdigest() + ".key")
+        with open(marker, "wb") as f:
+            f.write(b"1")
+
+    def fetch_range_cached(self, object_path: str, offset: int, length: int) -> Tuple[bytes, bool]:
+        """Range-read through the SSD cache.  Returns (bytes, cache_hit)."""
+        cpath = self._cache_path(object_path, offset, length)
+        if os.path.exists(cpath):
+            with open(cpath, "rb") as f:
+                self.cache_hits += 1
+                return f.read(), True
+        data = self.store.get_range(object_path, offset, length)
+        tmp = cpath + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, cpath)
+        self.cache_misses += 1
+        return data, False
+
+    def _load_shard(
+        self, puffin_path: str, offset: int, length: int, codec: Optional[str], cache_key: Optional[str]
+    ) -> Tuple[VamanaGraph, ShardLocationMap, bool]:
+        l1_key = f"{cache_key or puffin_path}@{offset}"
+        with self._lock:
+            if l1_key in self._l1:
+                self._l1.move_to_end(l1_key)
+                self.cache_hits += 1
+                g, lm = self._l1[l1_key]
+                return g, lm, True
+        raw, hit = self.fetch_range_cached(puffin_path, offset, length)
+        payload = _decompress(codec, raw)
+        graph, locmap = decode_shard_blob(payload, lazy_vectors=True)
+        if not np.any(graph.vectors[: graph.n]):
+            # lean blob (paper §4.3 retention policy): full-precision vectors
+            # omitted — re-fetch them from Parquet through the location map
+            # (the "extra round trip" trade-off), then L1-cache as usual.
+            graph.vectors[: graph.n] = self._fetch_vectors(locmap, graph.n)
+        with self._lock:
+            self._l1[l1_key] = (graph, locmap)
+            while len(self._l1) > self._l1_capacity:
+                self._l1.popitem(last=False)
+        self._mark_cached(cache_key)
+        return graph, locmap, hit
+
+    def _fetch_vectors(self, locmap: ShardLocationMap, n: int) -> np.ndarray:
+        """Read each indexed vector's row from its source Parquet row group."""
+        readers: dict = {}
+        out = None
+        for vid in range(n):
+            fpath = locmap.file_paths[int(locmap.file_idx[vid])]
+            if fpath not in readers:
+                readers[fpath] = VParquetReader.from_store(self.store, fpath)
+            row = readers[fpath].read_rows(
+                "vec", int(locmap.row_group[vid]), [int(locmap.row_offset[vid])]
+            )[0]
+            if out is None:
+                out = np.empty((n, row.shape[0]), np.float32)
+            out[vid] = row
+        return out if out is not None else np.empty((0, 0), np.float32)
+
+    # -- dispatch ------------------------------------------------------------
+    def handle(self, task) -> object:
+        self._gate()
+        if isinstance(task, F.ScanPartitionTaskInfo):
+            result = self._scan_partition(task)
+        elif isinstance(task, F.IndexBuildTaskInfo):
+            result = self._build_shard(task)
+        elif isinstance(task, F.ProbeTaskInfo):
+            result = self._probe_shard(task)
+        elif isinstance(task, F.RerankTaskInfo):
+            result = self._rerank(task)
+        elif isinstance(task, F.RefreshTaskInfo):
+            result = self._refresh_shard(task)
+        else:
+            raise TypeError(f"unknown task type {type(task)}")
+        self.tasks_done += 1
+        return result
+
+    # -- handlers --------------------------------------------------------------
+    def _scan_partition(self, task: F.ScanPartitionTaskInfo) -> F.ScanPartitionResult:
+        vectors, fidx, rgrp, roff, paths = _scan_files_with_locations(
+            self.store, task.assigned_files
+        )
+        out = F.ScanPartitionResult(executor_id=self.executor_id)
+        if vectors.shape[0] == 0:
+            return out
+        owners = _owner_shards(vectors, task.partition_centroids, task.shard_of_partition)
+        for shard in range(task.num_shards):
+            sel = np.flatnonzero(owners == shard)
+            if len(sel) == 0:
+                continue
+            out.per_shard[shard] = (
+                vectors[sel],
+                fidx[sel],
+                rgrp[sel],
+                roff[sel],
+                paths,
+            )
+        return out
+
+    def _build_shard(self, task: F.IndexBuildTaskInfo) -> F.IndexBuildResult:
+        t0 = time.time()
+        if task.exchanged is not None:
+            vectors, fidx, rgrp, roff, paths = task.exchanged
+        else:
+            vectors, fidx, rgrp, roff, paths = _scan_files_with_locations(
+                self.store, task.assigned_files
+            )
+            if task.partition_mode == "centroid" and task.partition_centroids is not None:
+                owners = _owner_shards(
+                    vectors, task.partition_centroids, task.shard_of_partition
+                )
+                sel = np.flatnonzero(owners == task.shard_id)
+                vectors, fidx, rgrp, roff = vectors[sel], fidx[sel], rgrp[sel], roff[sel]
+        if vectors.shape[0] == 0:
+            raise ValueError(f"shard {task.shard_id}: no vectors to index")
+        params = VamanaParams(R=task.R, L=task.L, alpha=task.alpha, metric=task.metric)
+        graph = build_vamana(
+            vectors, params, passes=task.build_passes, batch=task.build_batch,
+            seed=task.shard_id,
+        )
+        if task.pq_m:
+            pq = PQCodebook(task.pq_codebook, task.metric)
+            graph.attach_pq(pq, pq_encode(pq, vectors))
+        # per-partition counts for the routing table
+        counts = None
+        if task.partition_centroids is not None:
+            part, _ = ops.kmeans_assign(
+                jnp.asarray(vectors), jnp.asarray(task.partition_centroids), backend="ref"
+            )
+            counts = np.bincount(
+                np.asarray(part), minlength=task.partition_centroids.shape[0]
+            )
+        locmap = ShardLocationMap(paths, fidx, rgrp, roff)
+        blob = encode_shard_blob(graph, locmap, include_vectors=task.include_vectors)
+        self.store.put(task.output_path, blob)
+        return F.IndexBuildResult(
+            shard_id=task.shard_id,
+            output_path=task.output_path,
+            vector_count=graph.n,
+            byte_size=len(blob),
+            executor_id=self.executor_id,
+            build_seconds=time.time() - t0,
+            partition_counts=counts,
+        )
+
+    def _probe_shard(self, task: F.ProbeTaskInfo) -> F.ProbeResult:
+        t0 = time.time()
+        graph, locmap, hit = self._load_shard(
+            task.puffin_path, task.blob_offset, task.blob_length, task.blob_codec, task.cache_key
+        )
+        k_eff = min(task.k * task.oversample, graph.num_live)
+        L = max(task.L, k_eff)
+        if task.use_pq and graph.pq is not None:
+            dists, ids = graph.search_pq(task.queries, k_eff, L=L)
+        else:
+            dists, ids = graph.search(task.queries, k_eff, L=L)
+        result = F.ProbeResult(
+            shard_id=task.shard_id, executor_id=self.executor_id, cache_hit=hit
+        )
+        for qi in range(task.queries.shape[0]):
+            cands: List[F.ProbeCandidate] = []
+            for d, vid in zip(dists[qi], ids[qi]):
+                if not np.isfinite(d) or vid < 0 or vid >= graph.n:
+                    continue
+                fpath, rg, ro = locmap.lookup(int(vid))
+                cands.append(
+                    F.ProbeCandidate(
+                        file_path=fpath,
+                        row_group=rg,
+                        row_offset=ro,
+                        approx_distance=float(d),
+                        vec_id=int(vid),
+                        shard_id=task.shard_id,
+                    )
+                )
+            result.candidates.append(cands)
+        result.probe_seconds = time.time() - t0
+        return result
+
+    def _rerank(self, task: F.RerankTaskInfo) -> F.RerankResult:
+        rows_flat: List[Tuple[str, int, int]] = []
+        vec_parts: List[np.ndarray] = []
+        for fpath, groups in task.masks.items():
+            reader = VParquetReader.from_store(self.store, fpath)
+            for rg_id, offsets in groups.items():
+                arr = reader.read_rows("vec", rg_id, offsets)
+                vec_parts.append(arr)
+                rows_flat.extend((fpath, rg_id, off) for off in offsets)
+        result = F.RerankResult(executor_id=self.executor_id)
+        q = np.ascontiguousarray(task.queries, np.float32)
+        if not rows_flat:
+            result.rows = [[] for _ in range(q.shape[0])]
+            return result
+        cands = np.concatenate(vec_parts)
+        d = np.asarray(
+            ops.exact_distances(
+                jnp.asarray(q), jnp.asarray(cands), metric=task.metric, backend="ref"
+            )
+        )
+        for qi in range(q.shape[0]):
+            result.rows.append(
+                [
+                    F.RerankRow(fp, rg, ro, float(d[qi, ci]))
+                    for ci, (fp, rg, ro) in enumerate(rows_flat)
+                ]
+            )
+        return result
+
+    def _refresh_shard(self, task: F.RefreshTaskInfo) -> F.RefreshResult:
+        t0 = time.time()
+        graph, locmap, _hit = self._load_shard(
+            task.puffin_path, task.blob_offset, task.blob_length, task.blob_codec, task.cache_key
+        )
+        # deletions first: tombstone every vector whose source file was removed
+        tombstoned = 0
+        if task.removed_files:
+            removed = set(task.removed_files)
+            path_arr = np.array(
+                [locmap.file_paths[int(i)] for i in locmap.file_idx[: graph.n]]
+            )
+            doomed = np.flatnonzero(np.isin(path_arr, list(removed)))
+            fresh = doomed[~graph.tombstones[doomed]]
+            graph.tombstone(fresh)
+            tombstoned = int(len(fresh))
+        # insertions: scan added files, filter to this shard's ownership
+        inserted = 0
+        if task.added_files:
+            vectors, fidx, rgrp, roff, paths = _scan_files_with_locations(
+                self.store, task.added_files
+            )
+            if vectors.shape[0]:
+                owners = _owner_shards(
+                    vectors, task.partition_centroids, task.shard_of_partition
+                )
+                sel = np.flatnonzero(owners == task.shard_id)
+                if len(sel):
+                    graph.insert_batch(vectors[sel])
+                    inserted = int(len(sel))
+                    # extend the location map
+                    base = len(locmap.file_paths)
+                    locmap.file_paths.extend(paths)
+                    locmap.file_idx = np.concatenate(
+                        [locmap.file_idx, fidx[sel] + base]
+                    )
+                    locmap.row_group = np.concatenate([locmap.row_group, rgrp[sel]])
+                    locmap.row_offset = np.concatenate([locmap.row_offset, roff[sel]])
+        blob = encode_shard_blob(graph, locmap, include_vectors=task.include_vectors)
+        self.store.put(task.output_path, blob)
+        return F.RefreshResult(
+            shard_id=task.shard_id,
+            output_path=task.output_path,
+            executor_id=self.executor_id,
+            inserted=inserted,
+            tombstoned=tombstoned,
+            vector_count=graph.n,
+            byte_size=len(blob),
+            tombstone_ratio=graph.tombstone_ratio,
+            refresh_seconds=time.time() - t0,
+        )

@@ -1,0 +1,171 @@
+"""PlanFragment / TaskInfo structs (paper §3.1, §5, §6).
+
+``IndexBuildTaskInfo`` rides alongside the engine's ordinary WriteTaskInfo —
+here they are the task vocabulary the scheduler dispatches.  Payloads carry
+numpy arrays directly (the in-process stand-in for Arrow IPC)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class TaskBase:
+    task_id: str
+    attempt: int = 0
+    # scheduler placement hint: executors caching this key are preferred
+    cache_key: Optional[str] = None
+
+
+# -- build (paper §5) ---------------------------------------------------------
+
+
+@dataclass
+class IndexBuildTaskInfo(TaskBase):
+    shard_id: int = 0
+    assigned_files: List[str] = field(default_factory=list)
+    # Stage-0 broadcast: partition centroids + which shard owns each partition
+    partition_centroids: Optional[np.ndarray] = None  # (P, D)
+    shard_of_partition: Optional[np.ndarray] = None  # (P,)
+    # algorithm parameters
+    R: int = 64
+    L: int = 100
+    alpha: float = 1.2
+    metric: str = "l2"
+    pq_m: int = 0  # 0 => no PQ
+    pq_nbits: int = 8
+    pq_codebook: Optional[np.ndarray] = None  # (m, K, dsub) broadcast from Stage 0
+    include_vectors: bool = True
+    # destination object for the serialized shard blob
+    output_path: str = ""
+    partition_mode: str = "centroid"  # centroid | file
+    build_passes: int = 2
+    build_batch: int = 128
+    # pre-exchanged payload (centroid-mode all-to-all):
+    # (vectors, file_idx, row_group, row_offset, file_paths)
+    exchanged: Optional[tuple] = None
+
+
+@dataclass
+class IndexBuildResult:
+    shard_id: int
+    output_path: str
+    vector_count: int
+    byte_size: int
+    executor_id: str
+    build_seconds: float
+    # per-partition vector counts (routing-table population, paper §5 Stage 1)
+    partition_counts: Optional[np.ndarray] = None
+
+
+@dataclass
+class ScanPartitionTaskInfo(TaskBase):
+    """Pre-build exchange: scan assigned files, group vectors by owner shard."""
+
+    assigned_files: List[str] = field(default_factory=list)
+    partition_centroids: Optional[np.ndarray] = None
+    shard_of_partition: Optional[np.ndarray] = None
+    num_shards: int = 0
+
+
+@dataclass
+class ScanPartitionResult:
+    executor_id: str
+    # per-shard: (vectors, file_idx, row_group, row_offset, file_paths)
+    per_shard: Dict[int, Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, List[str]]] = field(
+        default_factory=dict
+    )
+
+
+# -- probe (paper §6) ------------------------------------------------------------
+
+
+@dataclass
+class ProbeTaskInfo(TaskBase):
+    shard_id: int = 0
+    puffin_path: str = ""
+    blob_offset: int = 0
+    blob_length: int = 0
+    blob_codec: Optional[str] = None
+    queries: Optional[np.ndarray] = None  # (Q, D)
+    k: int = 10
+    L: int = 100
+    use_pq: bool = True
+    oversample: int = 4
+
+
+@dataclass
+class ProbeCandidate:
+    file_path: str
+    row_group: int
+    row_offset: int
+    approx_distance: float
+    vec_id: int
+    shard_id: int
+
+
+@dataclass
+class ProbeResult:
+    shard_id: int
+    executor_id: str
+    # per query: list of candidates
+    candidates: List[List[ProbeCandidate]] = field(default_factory=list)
+    cache_hit: bool = False
+    probe_seconds: float = 0.0
+
+
+@dataclass
+class RerankTaskInfo(TaskBase):
+    # file -> row_group -> row offsets
+    masks: Dict[str, Dict[int, List[int]]] = field(default_factory=dict)
+    queries: Optional[np.ndarray] = None
+    metric: str = "l2"
+
+
+@dataclass
+class RerankRow:
+    file_path: str
+    row_group: int
+    row_offset: int
+    distance: float
+
+
+@dataclass
+class RerankResult:
+    executor_id: str
+    # per query: list of reranked rows
+    rows: List[List[RerankRow]] = field(default_factory=list)
+
+
+# -- refresh (paper §7) -------------------------------------------------------------
+
+
+@dataclass
+class RefreshTaskInfo(TaskBase):
+    shard_id: int = 0
+    puffin_path: str = ""
+    blob_offset: int = 0
+    blob_length: int = 0
+    blob_codec: Optional[str] = None
+    added_files: List[str] = field(default_factory=list)
+    removed_files: List[str] = field(default_factory=list)
+    partition_centroids: Optional[np.ndarray] = None
+    shard_of_partition: Optional[np.ndarray] = None
+    output_path: str = ""
+    include_vectors: bool = True
+
+
+@dataclass
+class RefreshResult:
+    shard_id: int
+    output_path: str
+    executor_id: str
+    inserted: int
+    tombstoned: int
+    vector_count: int
+    byte_size: int
+    tombstone_ratio: float
+    refresh_seconds: float = 0.0

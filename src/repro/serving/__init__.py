@@ -1,0 +1,5 @@
+"""Serving substrate: prefill/decode steps, device-resident ANN probe,
+retrieval-augmented decoding (the paper's index fused into serve_step)."""
+
+from repro.serving.serve_loop import make_serve_fns, ServeConfig  # noqa: F401
+from repro.serving.device_index import DeviceAnnIndex, make_probe_fn  # noqa: F401

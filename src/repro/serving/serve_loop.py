@@ -1,0 +1,138 @@
+"""Serving: pjit'd prefill/decode steps + retrieval-augmented decoding.
+
+``make_serve_fns`` builds jit'd ``prefill_step`` and ``serve_step`` with
+shardings from the logical rules.  With ``retrieval=`` an ANN probe
+(:func:`repro.serving.device_index.make_probe_fn`) is fused into the decode
+step: the last-layer hidden state queries the snapshot-bound index and the
+retrieved neighbor tokens interpolate the output distribution (kNN-LM) —
+the paper's index as a first-class serving feature.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.model import Model, param_shapes
+from repro.models.sharding import DEFAULT_RULES, LogicalRules, logical_to_sharding, spec_for
+from repro.serving.device_index import DeviceAnnIndex
+
+
+@dataclass
+class ServeConfig:
+    knn_lambda: float = 0.25  # kNN-LM interpolation weight
+    knn_temperature: float = 1.0
+    greedy: bool = True
+    param_dtype: str = "bfloat16"  # serving params are bf16 (no masters)
+
+
+def make_serve_fns(
+    model: Model,
+    mesh: Mesh,
+    rules: Optional[LogicalRules] = None,
+    cfg: ServeConfig = ServeConfig(),
+    retrieval: Optional[Callable] = None,  # probe fn from make_probe_fn
+    index_template: Optional[DeviceAnnIndex] = None,  # structure for shardings
+    batch_hint: int = 1,
+    max_len_hint: int = 1,
+):
+    rules = rules or DEFAULT_RULES
+    # serving rules: batch shards over (pod, data) — pods are replica groups
+    param_sharding = logical_to_sharding(
+        model.axes, rules, mesh, shapes_tree=param_shapes(model)
+    )
+    cache_ax = model.cache_axes(batch_hint, max_len_hint)
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(batch_hint, max_len_hint))
+    cache_sharding = jax.tree_util.tree_map(
+        lambda ax, shp: NamedSharding(mesh, spec_for(ax, rules, mesh, dim_sizes=shp.shape)),
+        cache_ax,
+        cache_shapes,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+    ids_rank = 3 if model.cfg.num_codebooks else 2
+    batch_logical = ("batch", "seq") + (("codebook",) if ids_rank == 3 else ())
+    ids_sharding = NamedSharding(
+        mesh,
+        spec_for(batch_logical, rules, mesh, dim_sizes=(batch_hint, 1) + ((model.cfg.num_codebooks,) if ids_rank == 3 else ())),
+    )
+
+    def prefill_step(params, ids, cache):
+        logits, cache = model.prefill(params, ids, cache)
+        return logits, cache
+
+    def serve_step(params, ids, cache, pos, index=None):
+        """One decode step: logits for the new token (+ cache update),
+        optionally kNN-LM-interpolated against the ANN index."""
+        logits, cache = model.decode(params, ids, cache, pos)
+        if retrieval is not None and index is not None:
+            # Query vector: the probability-weighted lm_head embedding of the
+            # output distribution ("soft embedding", dim = d_model).  The
+            # corpus index is built in the same space, so query and keys are
+            # commensurate regardless of architecture family.
+            probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+            if model.cfg.num_codebooks:
+                q = jnp.einsum("bscv,cdv->bsd", probs.astype(params["lm_head"].dtype),
+                               params["lm_head"].transpose(0, 1, 2))
+                q = q[:, 0]
+            else:
+                q = jnp.einsum("bsv,dv->bsd", probs.astype(params["lm_head"].dtype),
+                               params["lm_head"])[:, 0]
+            dists, neigh_tokens = retrieval(index, q)  # (B,k), (B,k)
+            # scatter neighbor tokens into a vocab distribution
+            w = jax.nn.softmax(-dists / cfg.knn_temperature, axis=-1)  # (B,k)
+            V = logits.shape[-1]
+            knn_probs = jnp.zeros((q.shape[0], V), jnp.float32)
+            knn_probs = knn_probs.at[
+                jnp.arange(q.shape[0])[:, None], jnp.clip(neigh_tokens, 0, V - 1)
+            ].add(w * (neigh_tokens >= 0))
+            if model.cfg.num_codebooks:
+                base = probs[:, 0]
+                mixed = (1 - cfg.knn_lambda) * base + cfg.knn_lambda * knn_probs[:, None, :]
+                logits = jnp.log(jnp.maximum(mixed, 1e-20))[:, None]
+            else:
+                base = probs[:, 0]
+                mixed = (1 - cfg.knn_lambda) * base + cfg.knn_lambda * knn_probs
+                logits = jnp.log(jnp.maximum(mixed, 1e-20))[:, None, :]
+        return logits, cache
+
+    def sample(logits, key):
+        if cfg.greedy:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(key, logits.astype(jnp.float32), axis=-1)
+
+    jit_prefill = jax.jit(
+        prefill_step,
+        in_shardings=(param_sharding, ids_sharding, cache_sharding),
+        out_shardings=(None, cache_sharding),
+        donate_argnums=(2,),
+    )
+    if retrieval is not None:
+        if index_template is None:
+            raise ValueError("retrieval requires index_template for shardings")
+        idx_sharding = index_template.shardings(mesh)
+        jit_decode = jax.jit(
+            serve_step,
+            in_shardings=(param_sharding, ids_sharding, cache_sharding, None, idx_sharding),
+            out_shardings=(None, cache_sharding),
+            donate_argnums=(2,),
+        )
+    else:
+        jit_decode = jax.jit(
+            functools.partial(serve_step, index=None),
+            in_shardings=(param_sharding, ids_sharding, cache_sharding, None),
+            out_shardings=(None, cache_sharding),
+            donate_argnums=(2,),
+        )
+
+    class Shardings:
+        params = param_sharding
+        cache = cache_sharding
+        ids = ids_sharding
+
+    return jit_prefill, jit_decode, sample, Shardings

@@ -1,0 +1,5 @@
+"""Training substrate: optimizer, train-step factory, checkpoints, compression."""
+
+from repro.training.optimizer import adamw_init, adamw_update  # noqa: F401
+from repro.training.train_loop import make_train_step, TrainStepConfig  # noqa: F401
+from repro.training.checkpoint import CheckpointManager  # noqa: F401

@@ -1,0 +1,42 @@
+import os
+import sys
+
+# Tests run on the real single CPU device — the 512-device override is ONLY
+# for launch/dryrun.py (see system design note).  Keep allocations small.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture()
+def rng():
+    # function-scoped: each test sees the same stream regardless of which
+    # other tests ran (a session-scoped generator made borderline tests
+    # depend on suite composition)
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def tmp_store(tmp_path):
+    from repro.lakehouse.objectstore import ObjectStore
+
+    return ObjectStore(str(tmp_path / "s3"))
+
+
+@pytest.fixture()
+def cluster(tmp_path):
+    from repro.runtime.cluster import make_local_cluster
+
+    return make_local_cluster(str(tmp_path), num_executors=3)
+
+
+def clustered_vectors(rng, n_clusters=16, per_cluster=100, dim=32, scale=4.0):
+    centers = rng.normal(size=(n_clusters, dim)) * scale
+    X = np.concatenate(
+        [c + rng.normal(size=(per_cluster, dim)) for c in centers]
+    ).astype(np.float32)
+    perm = rng.permutation(len(X))
+    return X[perm], centers.astype(np.float32)

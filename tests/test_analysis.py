@@ -1,0 +1,115 @@
+"""Roofline analysis machinery: jaxpr FLOP counter + HLO collective parser."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.flops import count_jaxpr_flops
+from repro.analysis.hlo import _shape_bytes, _trip_count, collective_bytes_from_hlo
+
+
+def test_flops_plain_matmul():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    f = lambda x, y: x @ y
+    got = count_jaxpr_flops(f, a, b)
+    assert got == 2 * 64 * 128 * 32
+
+
+def test_flops_scan_multiplies_by_length():
+    w = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+
+    def f(w, x):
+        def body(c, _):
+            return c @ w, None
+
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    x = jax.ShapeDtypeStruct((4, 16), jnp.float32)
+    got = count_jaxpr_flops(f, w, x)
+    assert got >= 10 * 2 * 4 * 16 * 16
+
+
+def test_flops_includes_backward():
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+
+    def loss(w, x):
+        return jnp.sum((x @ w) ** 2)
+
+    fwd = count_jaxpr_flops(loss, w, x)
+    both = count_jaxpr_flops(jax.grad(loss), w, x)
+    assert both > 2 * fwd  # bwd matmuls ≈ 2× fwd
+
+
+_FAKE_HLO = """\
+HloModule test
+
+%cond (p: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(7)
+  ROOT %cmp = pred[] compare(%iv, %c), direction=LT
+}
+
+%body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]) parameter(0)
+  %x = f32[4] get-tuple-element(%p), index=1
+  %ar = f32[4] all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %iv = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[4]) tuple(%iv, %ar)
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %a = f32[4] parameter(0)
+  %ag = f32[8] all-gather(%a), replica_groups=[2,4]<=[8], dimensions={0}
+  %w = (s32[], f32[4]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[4] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_parser_trip_counts_and_groups():
+    stats = collective_bytes_from_hlo(_FAKE_HLO)
+    # raw: one all-gather (8*4=32B) + one all-reduce (4*4=16B)
+    assert stats.raw_bytes == 32 + 16
+    # corrected: while body ×7
+    assert stats.corrected_bytes == 32 + 7 * 16
+    # global: ag ×4 participants, ar ×4 participants
+    assert stats.global_bytes == 32 * 4 + 7 * 16 * 4
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,512,128]") == 16 * 512 * 128 * 2
+    assert _shape_bytes("(f32[4], f32[2,2])") == 16 + 16
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_trip_count_le_direction():
+    lines = ["%c = s32[] constant(5)", "ROOT %cmp = pred[] compare(%iv, %c), direction=LE"]
+    assert _trip_count(lines) == 6
+
+
+def test_dryrun_results_complete():
+    """The committed dry-run table must cover all 40 cells × 2 meshes."""
+    import json
+    import os
+
+    path = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.jsonl")
+    if not os.path.exists(path):
+        pytest.skip("dry-run results not generated yet")
+    rows = [json.loads(l) for l in open(path)]
+    seen = {(r["arch"], r["shape"], r["mesh"]) for r in rows}
+    from repro.configs import ARCH_IDS
+
+    missing = []
+    for arch in ARCH_IDS:
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            for mesh in ("single", "multi"):
+                if (arch, shape, mesh) not in seen:
+                    missing.append((arch, shape, mesh))
+    assert not missing, missing
+    errors = [r for r in rows if r.get("kind") == "error"]
+    assert not errors, [(r["arch"], r["shape"], r["mesh"]) for r in errors]

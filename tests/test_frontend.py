@@ -1,0 +1,63 @@
+"""SQL frontend: DDL parsing + vector query routing (paper §6, §8)."""
+
+import numpy as np
+import pytest
+
+from repro.lakehouse.table import LakehouseTable
+from repro.runtime.frontend import IndexDDLInfo, SqlError, SqlFrontend
+from conftest import clustered_vectors
+
+
+@pytest.fixture(scope="module")
+def fe(tmp_path_factory):
+    from repro.runtime.cluster import make_local_cluster
+
+    rng = np.random.default_rng(0)
+    c = make_local_cluster(str(tmp_path_factory.mktemp("sql")), num_executors=2)
+    t = LakehouseTable(c.catalog, "docs")
+    t.create(dim=16)
+    X, _ = clustered_vectors(rng, n_clusters=8, per_cluster=100, dim=16)
+    t.append_vectors(X, num_files=4, rows_per_group=128)
+    return SqlFrontend(c.coordinator), X
+
+
+def test_parse_create_with_options(fe):
+    frontend, _ = fe
+    stmt = frontend.parse(
+        "CREATE VECTOR INDEX idx ON docs (vec) WITH (R=16, L=32, PQ_M=4, passes=1);"
+    )
+    assert isinstance(stmt, IndexDDLInfo)
+    assert stmt.action == "create" and stmt.index_name == "idx"
+    assert stmt.options["r"] == "16"
+
+
+def test_parse_rejects_garbage(fe):
+    frontend, _ = fe
+    with pytest.raises(SqlError):
+        frontend.parse("SELECT COUNT(*) FROM docs")
+
+
+def test_ddl_and_query_roundtrip(fe):
+    frontend, X = fe
+    rep = frontend.execute(
+        "CREATE VECTOR INDEX idx ON docs (vec) WITH (R=16, L=32, passes=1)"
+    )
+    assert rep.num_shards >= 1
+    q = ",".join(str(float(v)) for v in X[0])
+    hits = frontend.execute(f"SELECT * FROM docs ORDER BY L2_DISTANCE(vec, [{q}]) LIMIT 5")
+    assert len(hits) == 5
+    assert hits[0].distance < 1e-3  # the query point itself
+
+    # threshold query: exact pruning bound, results all within the bound
+    hits = frontend.execute(f"SELECT * FROM docs WHERE L2_DISTANCE(vec, [{q}]) < 2.0")
+    assert hits, "neighbors within radius 2 exist (the point itself)"
+    assert all(h.distance <= 4.0 + 1e-3 for h in hits)  # squared bound
+
+    # refresh is a no-op right after build
+    rr = frontend.execute("REFRESH INDEX idx ON docs")
+    assert rr.noop
+
+    # drop unbinds the statistics file
+    frontend.execute("DROP INDEX idx ON docs")
+    meta = frontend.coordinator.catalog.load_table("docs")
+    assert meta.current_snapshot().statistics_file is None

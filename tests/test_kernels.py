@@ -1,0 +1,123 @@
+"""Per-kernel validation: shape/dtype sweeps, Pallas(interpret) vs ref oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _np(*shape, seed=0, scale=1.0):
+    return (np.random.default_rng(seed).normal(size=shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# exact distances (rerank kernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("q,n,d", [(1, 1, 1), (7, 33, 5), (37, 301, 100), (128, 256, 768), (3, 500, 17)])
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_rerank_matches_ref(q, n, d, metric):
+    Q, X = _np(q, d, seed=1), _np(n, d, seed=2)
+    got = ops.exact_distances(jnp.asarray(Q), jnp.asarray(X), metric=metric, backend="pallas")
+    want = ops.exact_distances(jnp.asarray(Q), jnp.asarray(X), metric=metric, backend="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-3)
+
+
+def test_rerank_topk_order():
+    Q, X = _np(4, 16, seed=3), _np(100, 16, seed=4)
+    d, i = ops.exact_topk(jnp.asarray(Q), jnp.asarray(X), 5, backend="pallas")
+    full = np.asarray(ops.exact_distances(jnp.asarray(Q), jnp.asarray(X), backend="ref"))
+    for qi in range(4):
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(i)[qi]), np.sort(np.argsort(full[qi])[:5])
+        )
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_rerank_dtypes(dtype):
+    Q = _np(8, 32, seed=5).astype(dtype)
+    X = _np(64, 32, seed=6).astype(dtype)
+    got = ops.exact_distances(jnp.asarray(Q), jnp.asarray(X), backend="pallas")
+    want = ref.l2_distances(jnp.asarray(Q, jnp.float32), jnp.asarray(X, jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-3, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# PQ ADC scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("q,n,m,K", [(1, 1, 1, 2), (5, 77, 8, 16), (16, 300, 48, 256), (2, 130, 4, 64)])
+def test_pq_scan_matches_ref(q, n, m, K):
+    rng = np.random.default_rng(7)
+    luts = rng.normal(size=(q, m, K)).astype(np.float32)
+    codes = rng.integers(0, K, size=(n, m)).astype(np.int32)
+    got = ops.pq_scan(jnp.asarray(luts), jnp.asarray(codes), backend="pallas", tile_q=4, tile_n=32)
+    want = ops.pq_scan(jnp.asarray(luts), jnp.asarray(codes), backend="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_pq_scan_topk():
+    rng = np.random.default_rng(8)
+    luts = rng.normal(size=(3, 8, 32)).astype(np.float32)
+    codes = rng.integers(0, 32, size=(50, 8)).astype(np.int32)
+    d, i = ops.pq_scan_topk(jnp.asarray(luts), jnp.asarray(codes), 7, backend="pallas")
+    full = np.asarray(ref.pq_adc_scores(jnp.asarray(luts), jnp.asarray(codes)))
+    for qi in range(3):
+        np.testing.assert_array_equal(np.sort(np.asarray(i)[qi]), np.sort(np.argsort(full[qi])[:7]))
+
+
+# ---------------------------------------------------------------------------
+# k-means assignment
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k,d", [(1, 1, 1), (100, 10, 8), (555, 100, 48), (1000, 257, 16)])
+def test_kmeans_assign_matches_ref(n, k, d):
+    X = _np(n, d, seed=9)
+    C = _np(k, d, seed=10)
+    ip, dp = ops.kmeans_assign(jnp.asarray(X), jnp.asarray(C), backend="pallas", tile_n=128, tile_k=32)
+    ir, dr = ops.kmeans_assign(jnp.asarray(X), jnp.asarray(C), backend="ref")
+    np.testing.assert_array_equal(np.asarray(ip), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(dr), rtol=2e-4, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# property-based sweeps
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    q=st.integers(1, 24),
+    n=st.integers(1, 200),
+    d=st.integers(1, 64),
+)
+def test_property_rerank(q, n, d):
+    Q, X = _np(q, d, seed=q * 7 + n), _np(n, d, seed=d)
+    got = np.asarray(
+        ops.exact_distances(jnp.asarray(Q), jnp.asarray(X), backend="pallas")
+    )
+    want = np.asarray(ops.exact_distances(jnp.asarray(Q), jnp.asarray(X), backend="ref"))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)
+    # metric properties: non-negative, d(x,x)=0
+    self_d = np.asarray(
+        ops.exact_distances(jnp.asarray(X[:5]), jnp.asarray(X[:5]), backend="pallas")
+    )
+    assert np.all(self_d > -1e-2)
+    np.testing.assert_allclose(np.diag(self_d), 0.0, atol=1e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 150),
+    m=st.integers(1, 16),
+    nbits=st.integers(1, 8),
+)
+def test_property_pq_scan(n, m, nbits):
+    K = 1 << nbits
+    rng = np.random.default_rng(n * 31 + m)
+    luts = rng.normal(size=(3, m, K)).astype(np.float32)
+    codes = rng.integers(0, K, size=(n, m)).astype(np.int32)
+    got = np.asarray(ops.pq_scan(jnp.asarray(luts), jnp.asarray(codes), backend="pallas", tile_q=4, tile_n=32))
+    want = np.asarray(ref.pq_adc_scores(jnp.asarray(luts), jnp.asarray(codes)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)

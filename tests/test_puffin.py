@@ -1,0 +1,125 @@
+"""Puffin container: spec conformance, roundtrips, range-read access."""
+
+import struct
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.iceberg.puffin import (
+    MAGIC,
+    PuffinError,
+    PuffinReader,
+    PuffinWriter,
+    read_footer,
+)
+
+
+def _file(blobs, **kw):
+    w = PuffinWriter(**kw)
+    metas = [w.add_blob(payload, **meta) for payload, meta in blobs]
+    return w.finish(), metas
+
+
+def test_layout_magic_and_footer():
+    data, _ = _file([(b"hello", dict(type="t1"))])
+    assert data[:4] == MAGIC
+    assert data[-4:] == MAGIC
+    # footer payload length field
+    (ln,) = struct.unpack("<i", data[-12:-8])
+    assert 0 < ln < len(data)
+
+
+def test_roundtrip_multiple_blobs():
+    data, _ = _file(
+        [
+            (b"a" * 1000, dict(type="flockdb-ann-routing-v1", properties={"x": "1"})),
+            (b"b" * 5000, dict(type="flockdb-ann-index-v1", snapshot_id=42)),
+            (b"c" * 10, dict(type="unknown-type")),
+        ]
+    )
+    r = PuffinReader.from_bytes(data)
+    assert [b.type for b in r.blobs] == [
+        "flockdb-ann-routing-v1",
+        "flockdb-ann-index-v1",
+        "unknown-type",
+    ]
+    assert r.read_blob(r.blobs[0]) == b"a" * 1000
+    assert r.read_blob(r.blobs[1]) == b"b" * 5000
+    assert r.blobs[1].snapshot_id == 42
+    assert r.blobs[0].properties == {"x": "1"}
+
+
+@pytest.mark.parametrize("codec", [None, "zstd", "zlib"])
+def test_compression_codecs(codec):
+    payload = b"z" * 100_000
+    data, metas = _file([(payload, dict(type="t", compression=codec))])
+    if codec:
+        assert metas[0].length < len(payload)
+    r = PuffinReader.from_bytes(data)
+    assert r.read_first("t") == payload
+
+
+def test_range_read_access_pattern():
+    """Reader must touch only the footer + requested blob ranges."""
+    data, _ = _file(
+        [(b"x" * 100_000, dict(type="big")), (b"y" * 10, dict(type="small"))]
+    )
+    reads = []
+
+    def tracked(off, ln):
+        reads.append((off, ln))
+        return data[off : off + ln]
+
+    r = PuffinReader(len(data), tracked)
+    footer_bytes = sum(ln for _, ln in reads)
+    assert footer_bytes < 1000  # header magic + footer only
+    r.read_first("small")
+    assert reads[-1][1] == 10  # exactly the small blob's stored length
+
+
+def test_unknown_blob_types_ignored():
+    data, _ = _file([(b"q", dict(type="future-type-v9"))])
+    r = PuffinReader.from_bytes(data)
+    assert r.blobs_of_type("flockdb-ann-index-v1") == []
+
+
+def test_corrupt_magic_rejected():
+    data, _ = _file([(b"p", dict(type="t"))])
+    with pytest.raises(PuffinError):
+        PuffinReader.from_bytes(b"XXXX" + data[4:])
+    with pytest.raises(PuffinError):
+        PuffinReader.from_bytes(data[:-4] + b"XXXX")
+
+
+def test_compressed_footer():
+    data, _ = _file([(b"p" * 100, dict(type="t"))], compress_footer=True)
+    r = PuffinReader.from_bytes(data)
+    assert r.read_first("t") == b"p" * 100
+
+
+def test_precompressed_blob_passthrough():
+    import zstandard
+
+    payload = b"w" * 50_000
+    stored = zstandard.ZstdCompressor().compress(payload)
+    w = PuffinWriter()
+    w.add_blob(stored, type="t", compression="zstd", precompressed=True)
+    data = w.finish()
+    r = PuffinReader.from_bytes(data)
+    assert r.read_first("t") == payload
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    payloads=st.lists(st.binary(min_size=0, max_size=2048), min_size=1, max_size=6),
+    codec=st.sampled_from([None, "zstd"]),
+)
+def test_property_roundtrip(payloads, codec):
+    w = PuffinWriter()
+    for i, p in enumerate(payloads):
+        w.add_blob(p, type=f"t{i}", compression=codec, properties={"i": str(i)})
+    data = w.finish()
+    r = PuffinReader.from_bytes(data)
+    assert len(r.blobs) == len(payloads)
+    for i, p in enumerate(payloads):
+        assert r.read_first(f"t{i}") == p

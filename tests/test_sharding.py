@@ -1,0 +1,80 @@
+"""Logical-axis sharding rules + mesh factory."""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_debug_mesh
+from repro.models.sharding import (
+    DEFAULT_RULES,
+    logical_to_sharding,
+    resolve_rule,
+    spec_for,
+    with_rules,
+)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_debug_mesh(1, 1)
+
+
+def test_resolve_drops_missing_axes(mesh):
+    assert resolve_rule(("pod", "data"), ["data", "model"]) == "data"
+    assert resolve_rule("pod", ["data", "model"]) is None
+    assert resolve_rule(None, ["data"]) is None
+
+
+def test_spec_for_basic(mesh):
+    spec = spec_for(("batch", "seq", "embed"), DEFAULT_RULES, mesh)
+    assert spec == P("data")  # pod dropped, seq/embed None trimmed
+
+
+def test_spec_for_divisibility_fallback(mesh):
+    # dim size 3 can't shard over data axis -> falls back to replicated
+    spec = spec_for(("batch",), DEFAULT_RULES, mesh, dim_sizes=(3,))
+    # with a size-1 mesh everything divides; simulate via strict flag on a
+    # fake mesh of 2 below — here just assert no crash
+    assert isinstance(spec, P)
+
+
+def test_no_duplicate_mesh_axes(mesh):
+    # two logical dims mapping to the same mesh axis: second must drop
+    rules = with_rules(DEFAULT_RULES, embed="model")
+    spec = spec_for(("heads", "embed"), rules, mesh)
+    flat = [a for a in spec if a is not None]
+    assert len(flat) == len(set(flat))
+
+
+def test_logical_to_sharding_tree(mesh):
+    axes = {"w": ("embed", "mlp"), "b": ("mlp",), "nested": {"v": ("vocab", "embed")}}
+    sh = logical_to_sharding(axes, DEFAULT_RULES, mesh)
+    assert sh["w"].spec == P(None, "model")
+    assert sh["nested"]["v"].spec == P("model")
+
+
+def test_with_rules_override():
+    rules = with_rules(DEFAULT_RULES, cache_seq="model")
+    assert rules["cache_seq"] == "model"
+    assert DEFAULT_RULES["cache_seq"] is None  # original untouched
+
+
+def test_mesh_factory_requires_devices():
+    from repro.launch.mesh import make_production_mesh
+
+    with pytest.raises(RuntimeError):
+        make_production_mesh()  # only 1 CPU device in tests
+
+
+def test_divisibility_fallback_with_shapes(mesh):
+    import jax.numpy as jnp
+
+    axes = {"w": ("kv_heads", "head_dim")}
+    shapes = {"w": jax.ShapeDtypeStruct((2, 128), jnp.float32)}
+    sh = logical_to_sharding(axes, DEFAULT_RULES, mesh, shapes_tree=shapes)
+    # mesh model axis = 1 here so it divides; the dryrun covers the 16-way
+    # case — this asserts the API accepts shape trees
+    assert sh["w"].spec is not None
