@@ -1,11 +1,19 @@
-"""Paper Table 2: query cost by strategy (no index / centroid / DiskANN).
+"""Paper Table 2: query cost by strategy (no index / centroid / DiskANN),
+plus the batched multi-query pipeline (sequential probes vs probe_batch).
 
 Measurable scale: ~32k vectors, 32 files, 4 executors.  Reports files
 scanned, bytes read from the object store, cold/warm latency, and recall —
 the same columns as the paper's table; the derived field carries the
-probe-vs-scan reduction ratios.
+probe-vs-scan reduction ratios.  The ``table2.batched`` row compares warm
+per-query sequential probes against one ``probe_batch`` over the same
+queries: the batch shares ≤ one shard fragment per shard and one rerank
+wave, so its throughput must come out strictly higher.
+
+``--tiny`` shrinks everything to a seconds-scale smoke run (used by
+scripts/ci.sh to catch query-path regressions).
 """
 
+import argparse
 import time
 
 import numpy as np
@@ -16,13 +24,25 @@ from repro.lakehouse.table import LakehouseTable
 from repro.runtime.coordinator import IndexConfig
 
 
-def main() -> None:
+def main(tiny: bool = False) -> None:
     rng = np.random.default_rng(0)
-    c = make_cluster(4)
+    if tiny:
+        n_vec, n_files, n_exec, D, n_clusters = 2_048, 8, 2, 32, 16
+        cfg = IndexConfig(name="idx", R=16, L=32, pq_m=8, pq_nbits=8,
+                          partitions_per_shard=2, build_passes=1, build_batch=128)
+        n_q, rows_per_group, n_probe = 8, 128, 3
+    else:
+        n_vec, n_files, n_exec, D, n_clusters = 32_000, 32, 4, 96, 64
+        # paper-style search params: PQ traversal needs L ≳ 100 (DiskANN
+        # ships L_search 100+; at L=48 PQ-guided beams misroute on
+        # well-separated clusters — measured in EXPERIMENTS §1)
+        cfg = IndexConfig(name="idx", R=24, L=128, pq_m=24, pq_nbits=8,
+                          partitions_per_shard=4, build_passes=2, build_batch=256)
+        n_q, rows_per_group, n_probe = 12, 512, 6
+    c = make_cluster(n_exec)
     t = LakehouseTable(c.catalog, "bench")
-    D = 96
     t.create(dim=D)
-    X = clustered(rng, 32_000, D, n_clusters=64)
+    X = clustered(rng, n_vec, D, n_clusters=n_clusters)
     # cluster-correlated file layout: the paper's §10 states recall (and
     # centroid pruning) depend on the data-partition correlation; writing
     # shuffled files makes every file centroid ≈ the global mean and
@@ -30,19 +50,12 @@ def main() -> None:
     # recall 0.27 at n_probe=6 — a §10 validation).  Real ingest pipelines
     # cluster by time/key, which the sorted layout models.
     from repro.core.kmeans import assign, train_kmeans
-    cents, _ = train_kmeans(X[:8192], 64, iters=8, seed=0)
+    cents, _ = train_kmeans(X[:8192], n_clusters, iters=8, seed=0)
     order = np.argsort(assign(X, cents), kind="stable")
     X = X[order]
-    t.append_vectors(X, num_files=32, rows_per_group=512)
-    c.coordinator.create_index(
-        "bench",
-        # paper-style search params: PQ traversal needs L ≳ 100 (DiskANN
-        # ships L_search 100+; at L=48 PQ-guided beams misroute on
-        # well-separated clusters — measured in EXPERIMENTS §1)
-        IndexConfig(name="idx", R=24, L=128, pq_m=24, pq_nbits=8,
-                    partitions_per_shard=4, build_passes=2, build_batch=256),
-    )
-    Q = X[rng.choice(len(X), 12)] + 0.05 * rng.normal(size=(12, D)).astype(np.float32)
+    t.append_vectors(X, num_files=n_files, rows_per_group=rows_per_group)
+    c.coordinator.create_index("bench", cfg)
+    Q = X[rng.choice(len(X), n_q)] + 0.05 * rng.normal(size=(n_q, D)).astype(np.float32)
     _, truth = brute_force_topk(X, Q, 10)
     vecs_all, locs_all = t.scan_vectors()
     truth_locs = [
@@ -60,7 +73,7 @@ def main() -> None:
     results = {}
     for strat, kw in (
         ("scan", {}),
-        ("centroid", {"n_probe": 6}),
+        ("centroid", {"n_probe": n_probe}),
         ("diskann", {}),
         ("diskann_fp", {"use_pq": False}),
     ):
@@ -96,6 +109,45 @@ def main() -> None:
         f"_paper_25x_200x",
     )
 
+    # ---- batched multi-query pipeline -----------------------------------
+    # warm both paths (jit + caches already hot from the loop above), then
+    # time B sequential probes against ONE probe_batch over the same block
+    c.coordinator.probe_batch("bench", Q, 10, strategy="diskann")
+    t0 = time.perf_counter()
+    seq_hits = [
+        c.coordinator.probe("bench", Q[qi], 10, strategy="diskann").hits[0]
+        for qi in range(len(Q))
+    ]
+    seq_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pr_b = c.coordinator.probe_batch("bench", Q, 10, strategy="diskann")
+    batch_s = time.perf_counter() - t0
+    seq_qps = len(Q) / seq_s
+    batch_qps = len(Q) / batch_s
+    # parity check rides along: the batch must return the sequential hits
+    same = all(
+        [(h.file_path, h.row_group, h.row_offset) for h in a]
+        == [(h.file_path, h.row_group, h.row_offset) for h in b]
+        for a, b in zip(seq_hits, pr_b.hits)
+    )
+    emit(
+        "table2.batched",
+        batch_s / len(Q) * 1e6,
+        f"B_{len(Q)}_seq_qps_{seq_qps:.1f}_batch_qps_{batch_qps:.1f}"
+        f"_speedup_{batch_qps/seq_qps:.2f}x_fragments_{pr_b.probe_fragments}"
+        f"_recall_{recall(pr_b.hits):.3f}_parity_{'ok' if same else 'BROKEN'}",
+    )
+    if not same:
+        raise SystemExit("regression: batched hits diverge from sequential probes")
+    if batch_qps <= seq_qps:
+        raise SystemExit(
+            f"regression: batched probe throughput {batch_qps:.1f} qps is not "
+            f"above the sequential path {seq_qps:.1f} qps"
+        )
+
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-scale smoke run (CI)")
+    main(**vars(ap.parse_args()))

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + a query-path benchmark smoke.
+#
+# The benchmark smoke runs bench_query_paths in --tiny mode; it exits
+# non-zero if the batched probe pipeline is not faster than sequential
+# probes, so throughput regressions on the hot query path fail CI too.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== benchmark smoke (batched query path) =="
+python -m benchmarks.bench_query_paths --tiny

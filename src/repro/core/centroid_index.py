@@ -45,16 +45,27 @@ class CentroidIndex:
 
     # -- probes ---------------------------------------------------------------
     def _centroid_dists(self, query: np.ndarray) -> np.ndarray:
+        return self._centroid_dists_batch(query[None, :])[0]
+
+    def _centroid_dists_batch(self, queries: np.ndarray) -> np.ndarray:
+        """(B, D) → (B, F) centroid distances, one vectorized pass."""
+        q = np.asarray(queries, np.float32)
         if self.metric == "ip":
-            return -self.centroids @ query
-        diff = self.centroids - query[None, :]
-        return np.sqrt(np.maximum(np.einsum("fd,fd->f", diff, diff), 0.0))
+            return -(q @ self.centroids.T)
+        diff = self.centroids[None, :, :] - q[:, None, :]  # (B, F, D)
+        return np.sqrt(np.maximum(np.einsum("bfd,bfd->bf", diff, diff), 0.0))
 
     def probe_topk(self, query: np.ndarray, n_probe: int) -> List[str]:
         """The ``n_probe`` most promising files for a top-K query."""
-        d = self._centroid_dists(np.asarray(query, np.float32))
-        order = np.argsort(d)[: min(n_probe, self.num_files)]
-        return [self.file_paths[i] for i in order]
+        return self.probe_topk_batch(np.asarray(query, np.float32)[None, :], n_probe)[0]
+
+    def probe_topk_batch(self, queries: np.ndarray, n_probe: int) -> List[List[str]]:
+        """Batched routing: per-query ``n_probe`` file lists from a single
+        (B, F) distance computation instead of B sequential passes."""
+        d = self._centroid_dists_batch(queries)
+        keep = min(n_probe, self.num_files)
+        order = np.argsort(d, axis=1)[:, :keep]
+        return [[self.file_paths[i] for i in row] for row in order]
 
     def probe_threshold(self, query: np.ndarray, threshold: float) -> List[str]:
         """Exact pruning for ``WHERE dist < threshold`` queries (L2 only)."""

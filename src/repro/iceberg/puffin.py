@@ -52,6 +52,14 @@ class PuffinError(ValueError):
     """Malformed Puffin file."""
 
 
+def preferred_codec() -> str:
+    """Best codec available in this environment: zstd (the paper's choice)
+    when the ``zstandard`` package is importable, else zlib.  Writers that
+    don't care about a specific codec should use this so the blob footer
+    records whatever was actually applied."""
+    return "zstd" if _HAVE_ZSTD else "zlib"
+
+
 def _compress(codec: Optional[str], data: bytes) -> bytes:
     if codec is None or codec == "none":
         return data

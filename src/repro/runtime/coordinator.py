@@ -10,6 +10,15 @@ Implements the paper's three protocols against the runtime substrate:
   centroid pruning below the size threshold, else the three-stage
   distributed probe (Stage A shard beam search → Stage B exact rerank on
   row-group masks → Stage C ordered merge).
+- :meth:`Coordinator.probe_batch` — the batched multi-query pipeline:
+  centroid routing and tiered placement are vectorized over the whole
+  batch, the scheduler coalesces per-(query, shard) probe fragments into
+  at most ONE fragment per shard (each executor runs a single batched
+  beam search + rerank kernel call for all queries routed to it), Stage B
+  reads the union of every query's candidate rows once with per-query
+  ownership, and Stage C does a per-query ordered merge.  Per-query
+  results are identical to sequential :meth:`probe` calls; dispatch,
+  kernel-launch, and I/O costs amortize across the batch.
 - :meth:`Coordinator.refresh_index` — manifest diff → per-shard greedy
   insert + lazy tombstones → per-shard rebuild above the tombstone-ratio
   threshold → metadata-only commit.  Unchanged shard blobs are byte-copied
@@ -40,7 +49,7 @@ from repro.core.kmeans import train_kmeans
 from repro.core.pq import train_pq
 from repro.iceberg.catalog import RestCatalog
 from repro.iceberg.diff import diff_snapshots
-from repro.iceberg.puffin import PuffinReader, PuffinWriter
+from repro.iceberg.puffin import PuffinReader, PuffinWriter, preferred_codec
 from repro.iceberg.snapshot import Snapshot, TableMetadata
 from repro.lakehouse.table import LakehouseTable
 from repro.lakehouse.vparquet import VParquetReader
@@ -107,6 +116,10 @@ class ProbeReport:
     stage_c_seconds: float = 0.0
     shards_probed: int = 0
     cache_hits: int = 0
+    # batched pipeline: how many queries rode this probe and how many
+    # shard-probe fragments were actually dispatched after coalescing
+    batch_size: int = 0
+    probe_fragments: int = 0
 
 
 @dataclass
@@ -413,7 +426,9 @@ class Coordinator:
             centroid_index.to_blob(),
             type=CENTROID_BLOB_TYPE,
             snapshot_id=snap.snapshot_id,
-            compression="zstd",
+            # zstd when available, zlib otherwise — the footer records the
+            # codec actually applied, so readers stay environment-agnostic
+            compression=preferred_codec(),
             properties={
                 "dimensions": str(centroid_index.dim),
                 "metric": cfg.metric,
@@ -492,26 +507,88 @@ class Coordinator:
         )
         routing = decode_routing_blob(reader.read_first(ROUTING_BLOB_TYPE))
         shard_blobs = reader.blobs_of_type(SHARD_BLOB_TYPE)
-        centroid_meta = reader.blobs_of_type(CENTROID_BLOB_TYPE)
-        if strategy == "auto":
-            # tiered placement (paper §3.3): large sharded indexes go to
-            # executors; otherwise coordinator-local centroid probing.
-            threshold = 100.0 * 1024 * 1024
-            if shard_blobs and sum(b.length for b in shard_blobs) > 0:
-                total = sum(b.length for b in shard_blobs)
-                strategy = "diskann" if total > 0 else "centroid"
-                # small graphs still probe distributed if present; centroid
-                # path is chosen when only the centroid blob exists or the
-                # index is tiny enough to fit the coordinator budget.
-                if total <= threshold and not routing.shards:
-                    strategy = "centroid"
-            else:
-                strategy = "centroid"
+        strategy = self._choose_strategy(strategy, routing, shard_blobs)
         if strategy == "centroid":
             return self._probe_centroid(table, reader, queries, k, n_probe)
         return self._probe_diskann(
             table, routing, shard_blobs, puffin_path, queries, k, use_pq=use_pq, L=L
         )
+
+    @staticmethod
+    def _choose_strategy(strategy: str, routing: RoutingTable, shard_blobs) -> str:
+        """Tiered placement (paper §3.3): large sharded indexes go to
+        executors; otherwise coordinator-local centroid probing.  The
+        decision is per-index, so one evaluation covers a whole batch."""
+        if strategy != "auto":
+            return strategy
+        threshold = 100.0 * 1024 * 1024
+        if shard_blobs and sum(b.length for b in shard_blobs) > 0:
+            total = sum(b.length for b in shard_blobs)
+            strategy = "diskann" if total > 0 else "centroid"
+            # small graphs still probe distributed if present; centroid
+            # path is chosen when only the centroid blob exists or the
+            # index is tiny enough to fit the coordinator budget.
+            if total <= threshold and not routing.shards:
+                strategy = "centroid"
+        else:
+            strategy = "centroid"
+        return strategy
+
+    def probe_batch(
+        self,
+        table_name: str,
+        queries: np.ndarray,
+        k: int,
+        *,
+        strategy: str = "auto",
+        n_probe: int = 16,
+        snapshot_id: Optional[int] = None,
+        as_of_ms: Optional[int] = None,
+        use_pq: Optional[bool] = None,
+        L: Optional[int] = None,
+        n_route: Optional[int] = None,
+    ) -> ProbeReport:
+        """Batched vector top-k over ``queries (B, dim)``.
+
+        Semantics match ``[probe(q) for q in queries]`` exactly, but the
+        whole batch moves through the pipeline together: routing and tiered
+        placement are vectorized, the scheduler coalesces shard probes to at
+        most one fragment per shard, executors answer all of a fragment's
+        queries with batched kernels, and Stage B reads the union of the
+        batch's candidate rows once (per-query ownership keeps results
+        independent).  ``n_route`` optionally restricts each query to the
+        shards owning its ``n_route`` nearest partitions (recall dial; the
+        default probes every shard, preserving exact parity with ``probe``).
+        """
+        queries = np.atleast_2d(np.asarray(queries, np.float32))
+        self.store.metrics.reset()
+        table = LakehouseTable(self.catalog, table_name)
+        if strategy == "scan":
+            report = self._probe_scan(table, queries, k, snapshot_id)
+            report.batch_size = queries.shape[0]
+            return report
+        meta, snap, puffin_path, reader = self._resolve_index(
+            table_name, snapshot_id, as_of_ms
+        )
+        routing = decode_routing_blob(reader.read_first(ROUTING_BLOB_TYPE))
+        shard_blobs = reader.blobs_of_type(SHARD_BLOB_TYPE)
+        strategy = self._choose_strategy(strategy, routing, shard_blobs)
+        if strategy == "centroid":
+            report = self._probe_centroid_batch(table, reader, queries, k, n_probe)
+        else:
+            report = self._probe_diskann_batch(
+                table,
+                routing,
+                reader,
+                puffin_path,
+                queries,
+                k,
+                use_pq=use_pq,
+                L=L,
+                n_route=n_route,
+            )
+        report.batch_size = queries.shape[0]
+        return report
 
     def _probe_scan(
         self, table: LakehouseTable, queries: np.ndarray, k: int, snapshot_id=None
@@ -561,6 +638,43 @@ class Coordinator:
                 for rg in range(len(r.row_groups))
             }
         report = self._rerank_and_merge(table, masks, queries, k, ci.metric)
+        report.strategy = "centroid"
+        report.files_scanned = len(pruned)
+        report.stage_a_seconds = stage_a
+        report.bytes_read = self.store.metrics.bytes_read
+        return report
+
+    def _probe_centroid_batch(
+        self,
+        table: LakehouseTable,
+        reader: PuffinReader,
+        queries: np.ndarray,
+        k: int,
+        n_probe: int,
+    ) -> ProbeReport:
+        """Batched coordinator-tier probe: ONE vectorized centroid-routing
+        pass produces every query's file list; the union of those files is
+        read and reranked once, with per-file ownership keeping each query's
+        result set identical to its sequential probe."""
+        t0 = time.time()
+        ci = CentroidIndex.from_blob(reader.read_first(CENTROID_BLOB_TYPE))
+        per_query_files = ci.probe_topk_batch(queries, n_probe)
+        file_owners: Dict[str, set] = {}
+        for qi, fl in enumerate(per_query_files):
+            for fp in fl:
+                file_owners.setdefault(fp, set()).add(qi)
+        pruned = sorted(file_owners)
+        stage_a = time.time() - t0
+        masks = {}
+        for fp in pruned:
+            r = table.reader(fp)
+            masks[fp] = {
+                rg: list(range(r.row_groups[rg]["num_rows"]))
+                for rg in range(len(r.row_groups))
+            }
+        report = self._rerank_and_merge(
+            table, masks, queries, k, ci.metric, file_owners=file_owners
+        )
         report.strategy = "centroid"
         report.files_scanned = len(pruned)
         report.stage_a_seconds = stage_a
@@ -641,6 +755,133 @@ class Coordinator:
         report.bytes_read = self.store.metrics.bytes_read
         return report
 
+    def _route_queries(
+        self, routing: RoutingTable, queries: np.ndarray, n_route: Optional[int]
+    ) -> List[List[int]]:
+        """Vectorized shard routing for a batch: per query, the shards to
+        probe.  Default (``n_route`` unset) routes every query to every
+        shard — exact parity with the sequential probe.  With ``n_route``,
+        one batched distance pass against the partition centroids keeps only
+        the shards owning each query's nearest partitions."""
+        shard_ids = [s.shard_id for s in routing.shards]
+        B = queries.shape[0]
+        cents = routing.partition_centroids
+        if n_route is None or cents is None or routing.shard_of_partition is None:
+            return [list(shard_ids) for _ in range(B)]
+        # (B, P) distances in one pass, under the index's own metric
+        if routing.metric == "ip":
+            d = -(queries @ cents.T)
+        else:
+            d = (
+                np.sum(queries * queries, axis=1)[:, None]
+                - 2.0 * queries @ cents.T
+                + np.sum(cents * cents, axis=1)[None, :]
+            )
+        keep = min(n_route, cents.shape[0])
+        nearest = np.argsort(d, axis=1)[:, :keep]  # (B, keep) partition ids
+        owner = np.asarray(routing.shard_of_partition)
+        available = set(shard_ids)
+        out: List[List[int]] = []
+        for qi in range(B):
+            shards = {int(owner[p]) for p in nearest[qi]} & available
+            # a query must probe at least one shard even if its nearest
+            # partitions all map to shards that produced no blob
+            out.append(sorted(shards) if shards else list(shard_ids))
+        return out
+
+    def _probe_diskann_batch(
+        self,
+        table: LakehouseTable,
+        routing: RoutingTable,
+        reader: PuffinReader,
+        puffin_path: str,
+        queries: np.ndarray,
+        k: int,
+        *,
+        use_pq: Optional[bool] = None,
+        L: Optional[int] = None,
+        n_route: Optional[int] = None,
+    ) -> ProbeReport:
+        """Batched three-stage distributed probe.
+
+        Stage A: per-(query, shard) fragments are handed to the scheduler,
+        which coalesces them into ≤ one fragment per shard; each executor
+        answers its fragment with one batched beam-search pass.  Stage B:
+        the union of every query's surviving candidates is reranked in one
+        wave with per-row ownership.  Stage C: per-query ordered merge."""
+        oversample = int(routing.params.get("oversample", "4"))
+        if use_pq is None:
+            use_pq = int(routing.params.get("pq_m", "0")) > 0
+        L_eff = L or int(routing.params.get("L", "100"))
+        t0 = time.time()
+        # the already-open reader has the footer parsed — no re-read
+        blob_by_index = dict(enumerate(reader.blobs))
+        route = self._route_queries(routing, queries, n_route)
+        B = queries.shape[0]
+        tasks: List[F.BatchProbeTaskInfo] = []
+        for s in routing.shards:
+            b = blob_by_index[s.blob_index]
+            for qi in range(B):
+                if s.shard_id not in route[qi]:
+                    continue
+                tasks.append(
+                    F.BatchProbeTaskInfo(
+                        task_id=f"probe-{s.shard_id}-q{qi}",
+                        cache_key=f"{puffin_path}#shard{s.shard_id}",
+                        shard_id=s.shard_id,
+                        puffin_path=puffin_path,
+                        blob_offset=b.offset,
+                        blob_length=b.length,
+                        blob_codec=b.compression_codec,
+                        queries=queries[qi : qi + 1],
+                        query_index=np.array([qi], np.int64),
+                        k=k,
+                        L=L_eff,
+                        use_pq=use_pq,
+                        oversample=oversample,
+                    )
+                )
+        probe_results: List[F.BatchProbeResult] = self.scheduler.run_coalesced_wave(
+            tasks
+        )
+        stage_a = time.time() - t0
+        # ---- merge + Stage B: exact rerank with per-row ownership ----------
+        t1 = time.time()
+        keep = k * oversample
+        merged: List[List[F.ProbeCandidate]] = []
+        for qi in range(B):
+            cands: List[F.ProbeCandidate] = []
+            for r in probe_results:  # shard order == routing order
+                cands.extend(r.candidates.get(qi, []))
+            cands.sort(key=lambda c: c.approx_distance)
+            merged.append(cands[:keep])
+        masks: Dict[str, Dict[int, set]] = {}
+        row_owners: Dict[str, Dict[int, Dict[int, set]]] = {}
+        for qi in range(B):
+            for c in merged[qi]:
+                masks.setdefault(c.file_path, {}).setdefault(c.row_group, set()).add(
+                    c.row_offset
+                )
+                row_owners.setdefault(c.file_path, {}).setdefault(
+                    c.row_group, {}
+                ).setdefault(c.row_offset, set()).add(qi)
+        masks_l = {
+            fp: {rg: sorted(rows) for rg, rows in groups.items()}
+            for fp, groups in masks.items()
+        }
+        report = self._rerank_and_merge(
+            table, masks_l, queries, k, routing.metric, row_owners=row_owners
+        )
+        report.strategy = "diskann"
+        report.files_scanned = len(masks_l)
+        report.stage_a_seconds = stage_a
+        report.stage_b_seconds = time.time() - t1 - report.stage_c_seconds
+        report.shards_probed = len(probe_results)
+        report.probe_fragments = len(probe_results)
+        report.cache_hits = sum(1 for r in probe_results if r.cache_hit)
+        report.bytes_read = self.store.metrics.bytes_read
+        return report
+
     def _rerank_and_merge(
         self,
         table: LakehouseTable,
@@ -648,8 +889,14 @@ class Coordinator:
         queries: np.ndarray,
         k: int,
         metric: str,
+        file_owners: Optional[Dict[str, set]] = None,
+        row_owners: Optional[Dict[str, Dict[int, Dict[int, set]]]] = None,
     ) -> ProbeReport:
-        """Stage B (parallel rerank) + Stage C (ordered merge)."""
+        """Stage B (parallel rerank) + Stage C (ordered merge).
+
+        ``file_owners`` / ``row_owners`` carry batched-probe ownership: each
+        query's Stage-C merge sees only the rows it routed to, even though
+        the union of the batch's rows is read and scored once."""
         live = self.pool.live()
         n_exec = max(1, len(live))
         file_list = sorted(masks.keys())
@@ -665,6 +912,16 @@ class Coordinator:
                     masks={fp: masks[fp] for fp in group},
                     queries=queries,
                     metric=metric,
+                    file_owners=(
+                        {fp: file_owners[fp] for fp in group if fp in file_owners}
+                        if file_owners
+                        else None
+                    ),
+                    row_owners=(
+                        {fp: row_owners[fp] for fp in group if fp in row_owners}
+                        if row_owners
+                        else None
+                    ),
                 )
             )
         results: List[F.RerankResult] = self.scheduler.run_wave(tasks) if tasks else []

@@ -236,6 +236,8 @@ class Executor:
             result = self._build_shard(task)
         elif isinstance(task, F.ProbeTaskInfo):
             result = self._probe_shard(task)
+        elif isinstance(task, F.BatchProbeTaskInfo):
+            result = self._probe_shard_batch(task)
         elif isinstance(task, F.RerankTaskInfo):
             result = self._rerank(task)
         elif isinstance(task, F.RefreshTaskInfo):
@@ -313,55 +315,96 @@ class Executor:
             partition_counts=counts,
         )
 
+    def _shard_search(self, task, graph) -> Tuple[np.ndarray, np.ndarray]:
+        """Shared Stage-A search: batched beam search (PQ ADC when the shard
+        carries codes) over however many queries the fragment brought."""
+        k_eff = min(task.k * task.oversample, graph.num_live)
+        L = max(task.L, k_eff)
+        if task.use_pq and graph.pq is not None:
+            return graph.search_pq(task.queries, k_eff, L=L)
+        return graph.search(task.queries, k_eff, L=L)
+
+    def _row_candidates(
+        self, graph, locmap, dists_row, ids_row, shard_id: int
+    ) -> List[F.ProbeCandidate]:
+        cands: List[F.ProbeCandidate] = []
+        for d, vid in zip(dists_row, ids_row):
+            if not np.isfinite(d) or vid < 0 or vid >= graph.n:
+                continue
+            fpath, rg, ro = locmap.lookup(int(vid))
+            cands.append(
+                F.ProbeCandidate(
+                    file_path=fpath,
+                    row_group=rg,
+                    row_offset=ro,
+                    approx_distance=float(d),
+                    vec_id=int(vid),
+                    shard_id=shard_id,
+                )
+            )
+        return cands
+
     def _probe_shard(self, task: F.ProbeTaskInfo) -> F.ProbeResult:
         t0 = time.time()
         graph, locmap, hit = self._load_shard(
             task.puffin_path, task.blob_offset, task.blob_length, task.blob_codec, task.cache_key
         )
-        k_eff = min(task.k * task.oversample, graph.num_live)
-        L = max(task.L, k_eff)
-        if task.use_pq and graph.pq is not None:
-            dists, ids = graph.search_pq(task.queries, k_eff, L=L)
-        else:
-            dists, ids = graph.search(task.queries, k_eff, L=L)
+        dists, ids = self._shard_search(task, graph)
         result = F.ProbeResult(
             shard_id=task.shard_id, executor_id=self.executor_id, cache_hit=hit
         )
         for qi in range(task.queries.shape[0]):
-            cands: List[F.ProbeCandidate] = []
-            for d, vid in zip(dists[qi], ids[qi]):
-                if not np.isfinite(d) or vid < 0 or vid >= graph.n:
-                    continue
-                fpath, rg, ro = locmap.lookup(int(vid))
-                cands.append(
-                    F.ProbeCandidate(
-                        file_path=fpath,
-                        row_group=rg,
-                        row_offset=ro,
-                        approx_distance=float(d),
-                        vec_id=int(vid),
-                        shard_id=task.shard_id,
-                    )
-                )
-            result.candidates.append(cands)
+            result.candidates.append(
+                self._row_candidates(graph, locmap, dists[qi], ids[qi], task.shard_id)
+            )
+        result.probe_seconds = time.time() - t0
+        return result
+
+    def _probe_shard_batch(self, task: F.BatchProbeTaskInfo) -> F.BatchProbeResult:
+        """Coalesced Stage A: one shard load + one batched beam-search pass
+        for every query the scheduler merged into this fragment."""
+        t0 = time.time()
+        graph, locmap, hit = self._load_shard(
+            task.puffin_path, task.blob_offset, task.blob_length, task.blob_codec, task.cache_key
+        )
+        dists, ids = self._shard_search(task, graph)
+        result = F.BatchProbeResult(
+            shard_id=task.shard_id, executor_id=self.executor_id, cache_hit=hit
+        )
+        for bi, qi in enumerate(np.asarray(task.query_index, np.int64)):
+            result.candidates[int(qi)] = self._row_candidates(
+                graph, locmap, dists[bi], ids[bi], task.shard_id
+            )
         result.probe_seconds = time.time() - t0
         return result
 
     def _rerank(self, task: F.RerankTaskInfo) -> F.RerankResult:
         rows_flat: List[Tuple[str, int, int]] = []
+        # per flat row: None => every query owns it, else the owning set
+        owners_flat: List[Optional[set]] = []
         vec_parts: List[np.ndarray] = []
         for fpath, groups in task.masks.items():
             reader = VParquetReader.from_store(self.store, fpath)
+            f_own = task.file_owners.get(fpath) if task.file_owners else None
+            r_own = task.row_owners.get(fpath) if task.row_owners else None
             for rg_id, offsets in groups.items():
                 arr = reader.read_rows("vec", rg_id, offsets)
                 vec_parts.append(arr)
-                rows_flat.extend((fpath, rg_id, off) for off in offsets)
+                rg_own = r_own.get(rg_id) if r_own is not None else None
+                for off in offsets:
+                    rows_flat.append((fpath, rg_id, off))
+                    if rg_own is not None:
+                        owners_flat.append(rg_own.get(off, set()))
+                    else:
+                        owners_flat.append(f_own)
         result = F.RerankResult(executor_id=self.executor_id)
         q = np.ascontiguousarray(task.queries, np.float32)
         if not rows_flat:
             result.rows = [[] for _ in range(q.shape[0])]
             return result
         cands = np.concatenate(vec_parts)
+        # the union of every query's rows is read and scored ONCE — a single
+        # batched kernel call; ownership filters the (Q, N) matrix afterwards
         d = np.asarray(
             ops.exact_distances(
                 jnp.asarray(q), jnp.asarray(cands), metric=task.metric, backend="ref"
@@ -372,6 +415,7 @@ class Executor:
                 [
                     F.RerankRow(fp, rg, ro, float(d[qi, ci]))
                     for ci, (fp, rg, ro) in enumerate(rows_flat)
+                    if owners_flat[ci] is None or qi in owners_flat[ci]
                 ]
             )
         return result

@@ -6,8 +6,8 @@ numpy arrays directly (the in-process stand-in for Arrow IPC)."""
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -118,11 +118,100 @@ class ProbeResult:
 
 
 @dataclass
+class BatchProbeTaskInfo(TaskBase):
+    """Coalesced shard probe (batched pipeline): ONE fragment per shard
+    carrying every batch query routed to it, instead of one fragment per
+    (query, shard).  ``query_index`` maps each row of ``queries`` back to its
+    position in the coordinator's batch so results merge per query."""
+
+    shard_id: int = 0
+    puffin_path: str = ""
+    blob_offset: int = 0
+    blob_length: int = 0
+    blob_codec: Optional[str] = None
+    queries: Optional[np.ndarray] = None  # (B_sub, D)
+    query_index: Optional[np.ndarray] = None  # (B_sub,) positions in the batch
+    k: int = 10
+    L: int = 100
+    use_pq: bool = True
+    oversample: int = 4
+
+    def coalesce_key(self) -> tuple:
+        """Fragments with equal keys search the same shard blob with the
+        same parameters and may be merged into one dispatch."""
+        return (
+            self.puffin_path,
+            self.shard_id,
+            self.blob_offset,
+            self.k,
+            self.L,
+            self.use_pq,
+            self.oversample,
+        )
+
+
+@dataclass
+class BatchProbeResult:
+    shard_id: int
+    executor_id: str
+    # original batch position -> candidates for that query
+    candidates: Dict[int, List[ProbeCandidate]] = field(default_factory=dict)
+    cache_hit: bool = False
+    probe_seconds: float = 0.0
+
+
+def coalesce_batch_probes(tasks: Sequence[object]) -> List[object]:
+    """Merge :class:`BatchProbeTaskInfo` fragments sharing a coalesce key
+    into one fragment whose query block is the concatenation of the group's
+    queries.  Non-batchable tasks pass through unchanged; output order is the
+    order of first appearance (so shard-ordered input stays shard-ordered)."""
+    groups: Dict[tuple, List[BatchProbeTaskInfo]] = {}
+    order: List[tuple] = []  # ("task", obj) | ("group", key)
+    for t in tasks:
+        if isinstance(t, BatchProbeTaskInfo):
+            key = t.coalesce_key()
+            if key not in groups:
+                groups[key] = []
+                order.append(("group", key))
+            groups[key].append(t)
+        else:
+            order.append(("task", t))
+    out: List[object] = []
+    for kind, item in order:
+        if kind == "task":
+            out.append(item)
+            continue
+        group = groups[item]
+        if len(group) == 1:
+            out.append(group[0])
+            continue
+        first = group[0]
+        out.append(
+            replace(
+                first,
+                task_id=f"{first.task_id}x{len(group)}",
+                queries=np.concatenate([g.queries for g in group]),
+                query_index=np.concatenate(
+                    [np.asarray(g.query_index, np.int64) for g in group]
+                ),
+            )
+        )
+    return out
+
+
+@dataclass
 class RerankTaskInfo(TaskBase):
     # file -> row_group -> row offsets
     masks: Dict[str, Dict[int, List[int]]] = field(default_factory=dict)
     queries: Optional[np.ndarray] = None
     metric: str = "l2"
+    # Batched-probe ownership: which batch queries may receive each row.
+    # ``file_owners[fp]`` grants every row of ``fp`` to a query subset
+    # (centroid routing); ``row_owners[fp][rg][off]`` grants a single row
+    # (per-query DiskANN candidates).  Both None => every query owns every
+    # row (single-query probes and full scans — the pre-batching semantics).
+    file_owners: Optional[Dict[str, Set[int]]] = None
+    row_owners: Optional[Dict[str, Dict[int, Dict[int, Set[int]]]]] = None
 
 
 @dataclass

@@ -79,8 +79,14 @@ def _parse_vector(raw: str) -> np.ndarray:
 
 
 class SqlFrontend:
-    def __init__(self, coordinator: Coordinator) -> None:
+    """Parses + routes statements.  ``batcher`` (optional) is a
+    :class:`repro.serving.serve_loop.ProbeMicroBatcher`: when attached,
+    single top-k SELECTs are submitted to it so concurrent frontend threads
+    share coalesced batch probes instead of issuing one probe each."""
+
+    def __init__(self, coordinator: Coordinator, batcher=None) -> None:
         self.coordinator = coordinator
+        self.batcher = batcher
 
     def parse(self, sql: str):
         if m := _CREATE.match(sql):
@@ -104,6 +110,8 @@ class SqlFrontend:
             return self._execute_ddl(stmt)
         kind, table, metric, _col, vec, arg = stmt
         if kind == "topk":
+            if self.batcher is not None and self.batcher.table_name == table:
+                return self.batcher.submit(vec, k=arg).result()
             report = self.coordinator.probe(table, vec, arg, strategy="auto")
             return report.hits[0]
         # threshold query: centroid index gives *exact* file pruning
@@ -113,6 +121,48 @@ class SqlFrontend:
         )
         thresh_sq = arg * arg if metric == "l2" else arg  # probe returns squared L2
         return [h for h in report.hits[0] if h.distance <= thresh_sq]
+
+    def execute_many(self, sqls: List[str]) -> List[object]:
+        """Micro-batched execution of a statement block.
+
+        Consecutive runs of top-k SELECTs against the same table with the
+        same LIMIT drain into ONE ``Coordinator.probe_batch`` call (the
+        batched pipeline: coalesced shard fragments, batched kernels);
+        every other statement executes exactly as :meth:`execute` would.
+        Results come back in statement order."""
+        parsed = [self.parse(s) for s in sqls]
+        results: List[object] = [None] * len(sqls)
+        run: List[int] = []  # indices of the current coalescible run
+
+        def flush() -> None:
+            if not run:
+                return
+            if len(run) == 1:
+                results[run[0]] = self.execute(sqls[run[0]])
+            else:
+                _, table, _, _, _, k = parsed[run[0]]
+                queries = np.stack([parsed[i][4] for i in run])
+                report = self.coordinator.probe_batch(
+                    table, queries, k, strategy="auto"
+                )
+                for i, hits in zip(run, report.hits):
+                    results[i] = hits
+            run.clear()
+
+        for i, stmt in enumerate(parsed):
+            coalescible = not isinstance(stmt, IndexDDLInfo) and stmt[0] == "topk"
+            if coalescible and run:
+                _, t0, m0, _, v0, k0 = parsed[run[0]]
+                _, t1, m1, _, v1, k1 = stmt
+                if (t1, m1, k1) != (t0, m0, k0) or v1.shape != v0.shape:
+                    flush()
+            if coalescible:
+                run.append(i)
+            else:
+                flush()
+                results[i] = self.execute(sqls[i])
+        flush()
+        return results
 
     def _execute_ddl(self, ddl: IndexDDLInfo):
         if ddl.action == "create":

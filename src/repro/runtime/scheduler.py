@@ -25,6 +25,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
+from repro.runtime import fragments as F
 from repro.runtime.executor import Executor, ExecutorDead, InjectedFailure
 
 
@@ -35,6 +36,10 @@ class SchedulerStats:
     speculative: int = 0
     failures_seen: int = 0
     cache_preferred_hits: int = 0
+    # batched-probe coalescing: fragments offered to run_coalesced_wave vs
+    # fragments eliminated by merging same-shard probes
+    probe_fragments_offered: int = 0
+    probe_fragments_coalesced: int = 0
 
 
 class ExecutorPool:
@@ -90,6 +95,18 @@ class Scheduler:
         self.speculation_factor = speculation_factor
         self.poll_interval = poll_interval
         self.stats = SchedulerStats()
+
+    def run_coalesced_wave(self, tasks: List[object]) -> List[object]:
+        """Coalesce batchable shard-probe fragments, then dispatch the wave.
+
+        Per-(query, shard) probe fragments targeting the same shard blob with
+        the same search parameters merge into a single fragment carrying the
+        stacked query block — ≤ one dispatch per shard for a whole batch
+        instead of B × shards.  Results align to the MERGED fragment list."""
+        merged = F.coalesce_batch_probes(tasks)
+        self.stats.probe_fragments_offered += len(tasks)
+        self.stats.probe_fragments_coalesced += len(tasks) - len(merged)
+        return self.run_wave(merged)
 
     def run_wave(self, tasks: List[object]) -> List[object]:
         """Dispatch a wave of fragments; returns results aligned to tasks.

@@ -6,13 +6,24 @@ shardings from the logical rules.  With ``retrieval=`` an ANN probe
 step: the last-layer hidden state queries the snapshot-bound index and the
 retrieved neighbor tokens interpolate the output distribution (kNN-LM) —
 the paper's index as a first-class serving feature.
+
+:class:`ProbeMicroBatcher` is the front door for concurrent probe traffic:
+callers ``submit()`` single queries from any thread; a drainer collects a
+micro-batch (bounded by ``max_batch`` / ``max_wait_s``) and issues ONE
+``Coordinator.probe_batch`` call, so coordinator routing, fragment
+dispatch, and kernel launches amortize across whatever concurrency the
+serving tier sees.
 """
 
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
-from typing import Any, Callable, Optional, Tuple
+import queue as queue_mod
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +33,143 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.models.model import Model, param_shapes
 from repro.models.sharding import DEFAULT_RULES, LogicalRules, logical_to_sharding, spec_for
 from repro.serving.device_index import DeviceAnnIndex
+
+
+@dataclass
+class MicroBatchStats:
+    batches: int = 0
+    queries: int = 0
+    max_batch_seen: int = 0
+
+
+class ProbeMicroBatcher:
+    """Drain a queue of concurrent single-query probes into ``probe_batch``.
+
+    Usage::
+
+        with ProbeMicroBatcher(coordinator, "docs", max_batch=64) as mb:
+            fut = mb.submit(q, k=10)        # from any number of threads
+            hits = fut.result()             # per-query ProbeHit list
+            hits_lists = mb.probe_many(Q, k=10)   # sync convenience
+
+    The drainer waits ``max_wait_s`` after the first pending request (or
+    until ``max_batch`` accumulate), groups requests by ``k`` (a batch probe
+    shares one k), and resolves each Future with its query's hits.  Errors
+    propagate to every Future in the failed batch.
+
+    Caveat: the coordinator's per-probe I/O accounting
+    (``ProbeReport.bytes_read``) resets a store-global counter, so byte
+    attribution is best-effort when OTHER threads probe the same
+    coordinator concurrently with the drainer; hits are unaffected.
+    """
+
+    def __init__(
+        self,
+        coordinator,
+        table_name: str,
+        *,
+        strategy: str = "auto",
+        max_batch: int = 64,
+        max_wait_s: float = 0.002,
+        **probe_kwargs,
+    ) -> None:
+        self.coordinator = coordinator
+        self.table_name = table_name
+        self.strategy = strategy
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.probe_kwargs = probe_kwargs
+        self.stats = MicroBatchStats()
+        self._queue: "queue_mod.Queue" = queue_mod.Queue()
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # -- lifecycle --------------------------------------------------------
+    def start(self) -> "ProbeMicroBatcher":
+        if self._thread is None:
+            self._stop.clear()
+            self._thread = threading.Thread(target=self._drain_loop, daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._thread is not None:
+            self._stop.set()
+            self._thread.join(timeout=5.0)
+            self._thread = None
+        # requests enqueued before stop() but never drained must not strand
+        # their waiters — fail them loudly
+        while True:
+            try:
+                _, _, fut = self._queue.get_nowait()
+            except queue_mod.Empty:
+                break
+            if not fut.done():
+                fut.set_exception(RuntimeError("micro-batcher stopped"))
+
+    def __enter__(self) -> "ProbeMicroBatcher":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- submission -------------------------------------------------------
+    def submit(self, query, k: int = 10) -> Future:
+        """Enqueue one query; the Future resolves to its ProbeHit list."""
+        if self._thread is None:
+            raise RuntimeError("micro-batcher is not running (call start())")
+        fut: Future = Future()
+        self._queue.put((np.asarray(query, np.float32).reshape(-1), k, fut))
+        return fut
+
+    def probe_many(self, queries, k: int = 10) -> List[list]:
+        """Submit a block of queries and wait for all results (in order)."""
+        futs = [self.submit(q, k) for q in queries]
+        return [f.result() for f in futs]
+
+    # -- drainer ----------------------------------------------------------
+    def _drain_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                first = self._queue.get(timeout=0.05)
+            except queue_mod.Empty:
+                continue
+            pending = [first]
+            deadline = time.monotonic() + self.max_wait_s
+            while len(pending) < self.max_batch:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                try:
+                    pending.append(self._queue.get(timeout=remaining))
+                except queue_mod.Empty:
+                    break
+            self._flush(pending)
+
+    def _flush(self, pending: list) -> None:
+        by_k: Dict[int, list] = {}
+        for item in pending:
+            by_k.setdefault(item[1], []).append(item)
+        for k, items in by_k.items():
+            queries = np.stack([q for q, _, _ in items])
+            futures = [f for _, _, f in items]
+            try:
+                report = self.coordinator.probe_batch(
+                    self.table_name,
+                    queries,
+                    k,
+                    strategy=self.strategy,
+                    **self.probe_kwargs,
+                )
+            except Exception as exc:  # propagate to every waiter
+                for f in futures:
+                    f.set_exception(exc)
+                continue
+            self.stats.batches += 1
+            self.stats.queries += len(items)
+            self.stats.max_batch_seen = max(self.stats.max_batch_seen, len(items))
+            for f, hits in zip(futures, report.hits):
+                f.set_result(hits)
 
 
 @dataclass

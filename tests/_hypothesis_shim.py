@@ -1,0 +1,140 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` package.
+
+The suite's property tests use a small slice of the hypothesis API:
+``@settings(max_examples=N, deadline=None)``, ``@given(**strategies)`` and
+the strategies ``integers``, ``floats``, ``lists``, ``binary`` and
+``sampled_from``.  When the real package is installed, conftest.py leaves it
+alone; when it is missing, this module is registered under
+``sys.modules["hypothesis"]`` so the test modules collect and run unchanged.
+
+Semantics: ``@given`` draws ``max_examples`` example dicts from a
+numpy-seeded generator (deterministic per test name, so failures reproduce)
+and calls the test once per example.  There is no shrinking and no coverage
+feedback — this is a fallback sampler, not a replacement for hypothesis —
+but every property still runs against a spread of random inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class SearchStrategy:
+    """A strategy is just a draw(rng) callable here."""
+
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return SearchStrategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value, max_value):
+    return SearchStrategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def binary(min_size=0, max_size=64):
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return rng.integers(0, 256, size=n, dtype=np.uint8).tobytes()
+
+    return SearchStrategy(draw)
+
+
+def lists(element_strategy, min_size=0, max_size=8):
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [element_strategy.draw(rng) for _ in range(n)]
+
+    return SearchStrategy(draw)
+
+
+def sampled_from(options):
+    options = list(options)
+
+    def draw(rng):
+        return options[int(rng.integers(0, len(options)))]
+
+    return SearchStrategy(draw)
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def decorate(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def given(**strategies):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # @settings may sit above @given (it then marks the wrapper) or
+            # below it (it then marks fn) — honor either order
+            max_examples = getattr(
+                wrapper,
+                "_shim_max_examples",
+                getattr(fn, "_shim_max_examples", DEFAULT_MAX_EXAMPLES),
+            )
+            # deterministic per-test stream: same examples on every run
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for i in range(max_examples):
+                drawn = {name: s.draw(rng) for name, s in strategies.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except _Unsatisfied:
+                    continue
+                except Exception as exc:  # annotate with the failing example
+                    raise AssertionError(
+                        f"property falsified on example {i}: {drawn!r}"
+                    ) from exc
+
+        # pytest must not treat the drawn kwargs as fixtures: expose a
+        # signature holding only the params @given does not supply
+        del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for n, p in sig.parameters.items() if n not in strategies]
+        )
+        return wrapper
+
+    return decorate
+
+
+def assume(condition):
+    """Real hypothesis retries; the shim just skips the rest via exception."""
+    if not condition:
+        raise _Unsatisfied()
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def install():
+    """Register the shim as ``hypothesis`` / ``hypothesis.strategies``."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.SearchStrategy = SearchStrategy
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "binary", "lists", "sampled_from"):
+        setattr(strategies, name, globals()[name])
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

@@ -7,6 +7,13 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:  # property tests prefer real hypothesis; fall back to the local shim
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_shim
+
+    _hypothesis_shim.install()
+
 import numpy as np
 import pytest
 
@@ -40,3 +47,33 @@ def clustered_vectors(rng, n_clusters=16, per_cluster=100, dim=32, scale=4.0):
     ).astype(np.float32)
     perm = rng.permutation(len(X))
     return X[perm], centers.astype(np.float32)
+
+
+# index params shared by the integration fixtures/tests (small but structured)
+BUILT_CFG = dict(R=16, L=32, partitions_per_shard=3, build_passes=1, build_batch=128)
+
+
+@pytest.fixture(scope="session")
+def built_cluster(tmp_path_factory):
+    """Session-shared cluster with table "emb" and a built index "idx".
+
+    Shared by test_runtime and test_probe_batch — building a cluster + index
+    dominates suite wall-clock, so it happens once.  Tests may mutate the
+    table (append/refresh); assertions must not depend on table contents
+    beyond what each test arranges itself."""
+    from repro.lakehouse.table import LakehouseTable
+    from repro.runtime.cluster import make_local_cluster
+    from repro.runtime.coordinator import IndexConfig
+
+    rng = np.random.default_rng(0)
+    root = str(tmp_path_factory.mktemp("cluster"))
+    c = make_local_cluster(root, num_executors=3)
+    t = LakehouseTable(c.catalog, "emb")
+    t.create(dim=32)
+    # geometry matters: row groups small enough that warm index probes read
+    # far less than a scan, table big enough that recall thresholds are
+    # meaningful — but ~half the seed's vector count for suite speed
+    X, centers = clustered_vectors(rng, n_clusters=24, per_cluster=80, dim=32)
+    t.append_vectors(X, num_files=9, rows_per_group=128)
+    rep = c.coordinator.create_index("emb", IndexConfig(name="idx", **BUILT_CFG))
+    return c, t, X, centers, rep

@@ -86,6 +86,7 @@ def test_kmeans_assign_matches_ref(n, k, d):
 # property-based sweeps
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow  # every drawn shape pays a fresh Pallas-interpret compile
 @settings(max_examples=20, deadline=None)
 @given(
     q=st.integers(1, 24),
@@ -107,6 +108,7 @@ def test_property_rerank(q, n, d):
     np.testing.assert_allclose(np.diag(self_d), 0.0, atol=1e-2)
 
 
+@pytest.mark.slow  # every drawn shape pays a fresh Pallas-interpret compile
 @settings(max_examples=20, deadline=None)
 @given(
     n=st.integers(1, 150),

@@ -41,6 +41,7 @@ def test_forward_shapes_and_finite(arch_setup):
     assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
 
 
+@pytest.mark.slow  # ~10 archs × jit'd train step dominates suite wall-clock
 def test_train_step_runs_and_loss_finite(arch_setup):
     arch, cfg, model, params = arch_setup
     from repro.launch.mesh import make_debug_mesh
@@ -62,6 +63,7 @@ def test_train_step_runs_and_loss_finite(arch_setup):
     assert l0.dtype == jnp.float32
 
 
+@pytest.mark.slow  # per-token jit'd decode loop × 10 archs
 def test_prefill_decode_matches_forward(arch_setup):
     arch, cfg, model, params = arch_setup
     B, S, P = 2, 32, 24

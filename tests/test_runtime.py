@@ -11,25 +11,9 @@ import pytest
 from repro.core.vamana import brute_force_topk
 from repro.lakehouse.table import LakehouseTable
 from repro.runtime.coordinator import IndexConfig
-from conftest import clustered_vectors
+from conftest import BUILT_CFG as CFG, clustered_vectors
 
-
-CFG = dict(R=16, L=32, partitions_per_shard=3, build_passes=1, build_batch=128)
-
-
-@pytest.fixture(scope="module")
-def built_cluster(tmp_path_factory):
-    from repro.runtime.cluster import make_local_cluster
-
-    rng = np.random.default_rng(0)
-    root = str(tmp_path_factory.mktemp("cluster"))
-    c = make_local_cluster(root, num_executors=3)
-    t = LakehouseTable(c.catalog, "emb")
-    t.create(dim=32)
-    X, centers = clustered_vectors(rng, n_clusters=24, per_cluster=150, dim=32)
-    t.append_vectors(X, num_files=9, rows_per_group=256)
-    rep = c.coordinator.create_index("emb", IndexConfig(name="idx", **CFG))
-    return c, t, X, centers, rep
+# the shared session-scoped ``built_cluster`` fixture lives in conftest.py
 
 
 def _recall(table, X, hits_lists, truth_ids):
@@ -85,7 +69,7 @@ def test_executor_failure_reassignment(tmp_path):
     c = make_local_cluster(str(tmp_path), num_executors=3, max_attempts=5)
     t = LakehouseTable(c.catalog, "emb")
     t.create(dim=16)
-    X, _ = clustered_vectors(rng, n_clusters=8, per_cluster=100, dim=16)
+    X, _ = clustered_vectors(rng, n_clusters=8, per_cluster=60, dim=16)
     t.append_vectors(X, num_files=6)
     # one executor dies mid-wave: its fragments must be reassigned
     c.executors[1].fail_next(1)
@@ -121,13 +105,13 @@ def test_straggler_speculation(tmp_path):
     c.coordinator.scheduler.speculation_factor = 2.0
     t = LakehouseTable(c.catalog, "emb")
     t.create(dim=16)
-    X, _ = clustered_vectors(rng, n_clusters=8, per_cluster=80, dim=16)
+    X, _ = clustered_vectors(rng, n_clusters=8, per_cluster=60, dim=16)
     t.append_vectors(X, num_files=6)
     rep = c.coordinator.create_index("emb", IndexConfig(name="idx", **CFG))
     # warm up first (jit compile + caches) so the wave's median latency is
-    # small; then a 4 s straggler is far beyond speculation_factor × median
+    # small; then a 2 s straggler is far beyond speculation_factor × median
     c.coordinator.probe("emb", X[:2], 5, strategy="diskann")
-    c.executors[2].delay_next(4.0)
+    c.executors[2].delay_next(2.0)
     pr = c.coordinator.probe("emb", X[:2], 5, strategy="diskann")
     assert len(pr.hits) == 2
     assert c.coordinator.scheduler.stats.speculative >= 1
@@ -146,12 +130,12 @@ def test_elastic_scale_out_and_in(built_cluster):
 def test_refresh_insert_and_tombstone(built_cluster):
     c, t, X, centers, rep = built_cluster
     rng = np.random.default_rng(4)
-    Y = (centers[3] + rng.normal(size=(300, 32))).astype(np.float32)
+    Y = (centers[3] + rng.normal(size=(150, 32))).astype(np.float32)
     t.append_vectors(Y, num_files=1, file_prefix="delta")
     doomed = t.current_files()[0].path
     t.delete_files([doomed])
     rr = c.coordinator.refresh_index("emb", "idx")
-    assert rr.inserted == 300
+    assert rr.inserted == 150
     assert rr.tombstoned > 0
     # new vectors findable; deleted file gone
     Q = Y[:6]
@@ -171,9 +155,11 @@ def test_tombstone_threshold_triggers_shard_rebuild(tmp_path):
     c = make_local_cluster(str(tmp_path), num_executors=2)
     t = LakehouseTable(c.catalog, "emb")
     t.create(dim=16)
-    X, _ = clustered_vectors(rng, n_clusters=4, per_cluster=200, dim=16)
+    X, _ = clustered_vectors(rng, n_clusters=4, per_cluster=120, dim=16)
     t.append_vectors(X, num_files=4)
-    c.coordinator.create_index("emb", IndexConfig(name="idx", R=12, L=24,
+    # R/L match CFG so the jit'd beam-search compilations are shared with
+    # the rest of the suite (a distinct L would recompile per shape)
+    c.coordinator.create_index("emb", IndexConfig(name="idx", R=16, L=32,
                                                   partitions_per_shard=2, build_passes=1))
     # delete half the files -> some shard crosses the 20% tombstone ratio
     files = [f.path for f in t.current_files()]

@@ -25,8 +25,8 @@ def test_full_lifecycle(tmp_path):
     c = make_local_cluster(str(tmp_path), num_executors=3)
     t = LakehouseTable(c.catalog, "docs")
     t.create(dim=24)
-    X, centers = clustered_vectors(rng, n_clusters=12, per_cluster=120, dim=24)
-    t.append_vectors(X, num_files=6, rows_per_group=256)
+    X, centers = clustered_vectors(rng, n_clusters=12, per_cluster=90, dim=24)
+    t.append_vectors(X, num_files=6, rows_per_group=128)
 
     # -- CREATE INDEX ------------------------------------------------------
     rep = c.coordinator.create_index(
@@ -61,12 +61,12 @@ def test_full_lifecycle(tmp_path):
     assert pr_warm.cache_hits == pr_warm.shards_probed
 
     # -- data churn + REFRESH ------------------------------------------------
-    Y = (centers[0] + rng.normal(size=(240, 24))).astype(np.float32)
+    Y = (centers[0] + rng.normal(size=(160, 24))).astype(np.float32)
     t.append_vectors(Y, num_files=2, file_prefix="new")
     doomed = t.current_files()[0].path
     t.delete_files([doomed])
     rr = c.coordinator.refresh_index("docs", "docs_vec")
-    assert rr.inserted == 240 and rr.tombstoned > 0
+    assert rr.inserted == 160 and rr.tombstoned > 0
     meta = c.catalog.load_table("docs")
     assert meta.current_snapshot().statistics_file == rr.puffin_path
     assert rr.puffin_path != rep.puffin_path  # new object, old superseded

@@ -44,6 +44,7 @@ def test_read_rows(tmp_store, rng):
 
 
 def test_zstd_codec(tmp_store):
+    pytest.importorskip("zstandard")
     vecs = np.zeros((5000, 64), np.float32)  # compressible
     n_plain = write_vector_file(tmp_store, "p.vpq", vecs)
     n_zstd = write_vector_file(tmp_store, "z.vpq", vecs, codec="zstd")
