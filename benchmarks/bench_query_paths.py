@@ -1,5 +1,6 @@
 """Paper Table 2: query cost by strategy (no index / centroid / DiskANN),
-plus the batched multi-query pipeline (sequential probes vs probe_batch).
+plus the batched multi-query pipeline (sequential probes vs probe_batch)
+and the filtered-search path (attribute predicate vs brute-force oracle).
 
 Measurable scale: ~32k vectors, 32 files, 4 executors.  Reports files
 scanned, bytes read from the object store, cold/warm latency, and recall —
@@ -51,9 +52,19 @@ def main(tiny: bool = False) -> None:
     # cluster by time/key, which the sorted layout models.
     from repro.core.kmeans import assign, train_kmeans
     cents, _ = train_kmeans(X[:8192], n_clusters, iters=8, seed=0)
-    order = np.argsort(assign(X, cents), kind="stable")
+    labels = assign(X, cents)
+    order = np.argsort(labels, kind="stable")
     X = X[order]
-    t.append_vectors(X, num_files=n_files, rows_per_group=rows_per_group)
+    # attribute columns ride along: category follows the cluster layout
+    # (zone maps get tight per-row-group tags), price is uncorrelated
+    category = np.asarray([f"cat{int(l)}" for l in labels[order]])
+    price = rng.integers(0, 100, size=len(X)).astype(np.int64)
+    t.append_vectors(
+        X,
+        num_files=n_files,
+        rows_per_group=rows_per_group,
+        attributes={"category": category, "price": price},
+    )
     c.coordinator.create_index("bench", cfg)
     Q = X[rng.choice(len(X), n_q)] + 0.05 * rng.normal(size=(n_q, D)).astype(np.float32)
     _, truth = brute_force_topk(X, Q, 10)
@@ -143,6 +154,46 @@ def main(tiny: bool = False) -> None:
         raise SystemExit(
             f"regression: batched probe throughput {batch_qps:.1f} qps is not "
             f"above the sequential path {seq_qps:.1f} qps"
+        )
+
+    # ---- filtered probe vs brute-force post-filter oracle ----------------
+    # High-selectivity predicate on the cluster-correlated attribute: the
+    # zone map must prune shards (fewer fragments than the unfiltered
+    # batch), and recall against the scan+post-filter oracle must stay
+    # ≥ 0.95 (scripts/ci.sh fails otherwise).
+    target = f"cat{int(labels[order][len(X) // 2])}"
+    flt = f"category = '{target}' AND price < 90"
+    t0 = time.perf_counter()
+    oracle = c.coordinator.probe("bench", Q, 10, strategy="scan", filter=flt)
+    oracle_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pr_f = c.coordinator.probe_batch("bench", Q, 10, strategy="diskann", filter=flt)
+    filt_s = time.perf_counter() - t0
+    truth_f = [
+        {(h.file_path, h.row_group, h.row_offset) for h in hits} for hits in oracle.hits
+    ]
+    scores = [
+        len({(h.file_path, h.row_group, h.row_offset) for h in hits} & tf) / max(len(tf), 1)
+        for hits, tf in zip(pr_f.hits, truth_f)
+    ]
+    recall_f = float(np.mean(scores))
+    emit(
+        "table2.filtered",
+        filt_s / len(Q) * 1e6,
+        f"B_{len(Q)}_plan_{pr_f.filter_plan.replace(',', '+')}_sel_{pr_f.est_selectivity:.3f}"
+        f"_pruned_{pr_f.shards_pruned}_fragments_{pr_f.probe_fragments}"
+        f"_vs_unfiltered_{pr_b.probe_fragments}_oracle_ms_{oracle_s*1e3:.0f}"
+        f"_filtered_ms_{filt_s*1e3:.0f}_recall_vs_oracle_{recall_f:.3f}",
+    )
+    if recall_f < 0.95:
+        raise SystemExit(
+            f"regression: filtered-probe recall vs oracle {recall_f:.3f} < 0.95"
+        )
+    if pr_f.probe_fragments >= pr_b.probe_fragments and pr_f.shards_pruned == 0:
+        raise SystemExit(
+            "regression: zone-map pruning dispatched no fewer shard fragments "
+            f"({pr_f.probe_fragments} vs {pr_b.probe_fragments}) on a "
+            "high-selectivity predicate"
         )
 
 

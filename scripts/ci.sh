@@ -3,7 +3,10 @@
 #
 # The benchmark smoke runs bench_query_paths in --tiny mode; it exits
 # non-zero if the batched probe pipeline is not faster than sequential
-# probes, so throughput regressions on the hot query path fail CI too.
+# probes, if filtered-probe recall against the brute-force post-filter
+# oracle drops below 0.95 on the smoke corpus, or if zone-map pruning
+# stops reducing dispatched shard fragments on a high-selectivity
+# predicate — so regressions on both hot query paths fail CI.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -12,5 +15,5 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
-echo "== benchmark smoke (batched query path) =="
+echo "== benchmark smoke (batched + filtered query paths) =="
 python -m benchmarks.bench_query_paths --tiny

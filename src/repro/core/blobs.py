@@ -13,6 +13,11 @@
 - ``flockdb-ann-routing-v1`` (:func:`encode_routing_blob`) — JSON metadata
   (shard table, tombstone ratios, base snapshot id, params) + binary
   partition-centroid codebook.
+- ``repro.attr-zonemap-v1`` (:func:`encode_zonemap_blob`) — filtered
+  search: per-(file, row-group) attribute zones (min/max for numeric
+  columns, value→count tags for dictionary columns) plus per-shard
+  row-group membership, so the coordinator can prune shards and row
+  groups against WHERE predicates before dispatch.
 
 Deviation from the paper, recorded per DESIGN.md: the shard blob carries the
 PQ **codes** section explicitly.  The paper lists only the codebook, but the
@@ -53,6 +58,7 @@ except Exception:  # pragma: no cover
 CENTROID_BLOB_TYPE = "flockdb-ann-centroid-v1"
 SHARD_BLOB_TYPE = "flockdb-ann-index-v1"
 ROUTING_BLOB_TYPE = "flockdb-ann-routing-v1"
+ATTR_ZONEMAP_BLOB_TYPE = "repro.attr-zonemap-v1"
 
 _METRIC_CODE = {"l2": 0, "ip": 1}
 _METRIC_NAME = {v: k for k, v in _METRIC_CODE.items()}
@@ -394,6 +400,117 @@ def decode_shard_blob(
         graph.attach_pq(pq, codes)
     locmap = _decode_locmap(data[off_locmap:off_tombstones])
     return graph, locmap
+
+
+# ---------------------------------------------------------------------------
+# attribute zone-map blob (repro.attr-zonemap-v1)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class AttrZoneMap:
+    """Per-(file, row_group) attribute zones + per-shard row-group membership.
+
+    ``zones[file][rg][column]`` is a :class:`repro.runtime.predicates.ZoneStats`
+    — min/max for numeric columns, value→count tags for dictionary columns.
+    ``shard_membership[shard_id]`` lists the (file, row_group) pairs whose
+    rows the shard indexed, so the coordinator can skip a whole shard when no
+    member zone can satisfy a predicate; ``None`` (e.g. after a refresh that
+    didn't recompute membership) disables pruning for that shard but keeps
+    the row-group statistics usable for planning."""
+
+    columns: Dict[str, str]  # column name -> "int" | "dict"
+    zones: Dict[str, List[Dict[str, "ZoneStats"]]]
+    shard_membership: Optional[Dict[int, List[Tuple[str, int]]]] = None
+
+    def shard_zones(self, shard_id: int) -> Optional[List[Dict[str, "ZoneStats"]]]:
+        """The member zones of one shard (None = membership unknown)."""
+        if self.shard_membership is None or shard_id not in self.shard_membership:
+            return None
+        out = []
+        for fp, rg in self.shard_membership[shard_id]:
+            per_file = self.zones.get(fp)
+            if per_file is None or rg >= len(per_file):
+                return None  # stale membership: never prune on partial info
+            out.append(per_file[rg])
+        return out
+
+
+def encode_zonemap_blob(zm: AttrZoneMap) -> bytes:
+    meta = {
+        "version": 1,
+        "columns": dict(zm.columns),
+        "zones": {
+            fp: [{c: z.to_json() for c, z in rg.items()} for rg in per_file]
+            for fp, per_file in zm.zones.items()
+        },
+        "shard-membership": (
+            {str(sid): [[fp, rg] for fp, rg in pairs] for sid, pairs in zm.shard_membership.items()}
+            if zm.shard_membership is not None
+            else None
+        ),
+    }
+    return _c(json.dumps(meta, separators=(",", ":")).encode("utf-8"))
+
+
+def decode_zonemap_blob(data: bytes) -> AttrZoneMap:
+    from repro.runtime.predicates import ZoneStats
+
+    meta = json.loads(_d(data).decode("utf-8"))
+    membership = meta.get("shard-membership")
+    return AttrZoneMap(
+        columns=dict(meta["columns"]),
+        zones={
+            fp: [{c: ZoneStats.from_json(z) for c, z in rg.items()} for rg in per_file]
+            for fp, per_file in meta["zones"].items()
+        },
+        shard_membership=(
+            {int(sid): [(fp, int(rg)) for fp, rg in pairs] for sid, pairs in membership.items()}
+            if membership is not None
+            else None
+        ),
+    )
+
+
+def build_zonemap(store, file_paths: List[str]) -> Optional[AttrZoneMap]:
+    """Scan the attribute columns of ``file_paths`` into an AttrZoneMap.
+
+    Returns None when the table carries no attribute columns (pure-vector
+    tables get no zone-map blob at all)."""
+    from repro.lakehouse.vparquet import VParquetReader
+    from repro.runtime.predicates import ZoneStats
+
+    columns: Dict[str, str] = {}
+    zones: Dict[str, List[Dict[str, ZoneStats]]] = {}
+    for fp in file_paths:
+        reader = VParquetReader.from_store(store, fp)
+        attr_specs = reader.attribute_specs()
+        per_file: List[Dict[str, ZoneStats]] = []
+        for rg_id in range(reader.num_row_groups):
+            rg_zones: Dict[str, ZoneStats] = {}
+            for name, spec in attr_specs.items():
+                arr = reader.read_column(name, [rg_id])
+                if spec.dictionary is not None:
+                    columns[name] = "dict"
+                    codes, counts = np.unique(arr, return_counts=True)
+                    rg_zones[name] = ZoneStats(
+                        count=int(arr.shape[0]),
+                        values={
+                            spec.dictionary[int(c)]: int(n) for c, n in zip(codes, counts)
+                        },
+                    )
+                else:
+                    columns[name] = "int"
+                    rg_zones[name] = ZoneStats(
+                        count=int(arr.shape[0]),
+                        min=(arr.min().item() if arr.shape[0] else 0),
+                        max=(arr.max().item() if arr.shape[0] else 0),
+                    )
+            per_file.append(rg_zones)
+        zones[fp] = per_file
+    if not columns:
+        return None
+    return AttrZoneMap(columns=columns, zones=zones)
 
 
 # ---------------------------------------------------------------------------

@@ -234,6 +234,19 @@ class RestCatalog:
 
         return self.commit_with_retries(name, mutate)
 
+    def expire_snapshots(self, name: str, keep_last: int = 1) -> TableMetadata:
+        """Metadata-only commit dropping all but the last ``keep_last``
+        snapshots.  This is what makes superseded index Puffin files (and
+        their snapshots' manifests) orphaned *in the served metadata*, so a
+        subsequent orphan sweep can safely delete them (paper §7.4)."""
+        from repro.iceberg.gc import expire_snapshots  # lazy: gc imports snapshot only
+
+        if keep_last < 1:
+            raise ValueError("must keep at least one snapshot")
+        return self.commit_with_retries(
+            name, lambda meta: expire_snapshots(meta, keep_last)
+        )
+
     def set_statistics_file(
         self,
         name: str,

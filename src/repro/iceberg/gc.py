@@ -11,12 +11,20 @@ An object under the table location is *referenced* if it is:
 
 Everything else is an orphan.  ``collect_orphans`` returns them;
 ``expire_and_collect`` additionally drops old snapshots first, which is how
-superseded index Puffins become orphaned.
+superseded index Puffins (e.g. the pre-refresh index) become orphaned.
+
+Passing ``catalog=`` to ``expire_and_collect`` COMMITS the expiration as a
+new metadata version before collecting.  Without it the expiration exists
+only in the caller's in-memory copy: the catalog keeps serving the expired
+snapshots, and deleting their now-orphaned objects leaves the served
+metadata pointing at missing manifests/Puffins (time travel crashes with
+NoSuchKey).  Deleting orphans is therefore only safe with the committed
+form — the uncommitted form remains for dry-run inspection.
 """
 
 from __future__ import annotations
 
-from typing import List, Set
+from typing import List, Optional, Set
 
 from repro.iceberg.snapshot import (
     Manifest,
@@ -60,9 +68,28 @@ def expire_snapshots(meta: TableMetadata, keep_last: int = 1) -> TableMetadata:
 
 
 def expire_and_collect(
-    store: ObjectStore, meta: TableMetadata, keep_last: int = 1, delete: bool = False
+    store: ObjectStore,
+    meta: TableMetadata,
+    keep_last: int = 1,
+    delete: bool = False,
+    catalog=None,
+    table_name: Optional[str] = None,
 ) -> List[str]:
-    meta = expire_snapshots(meta, keep_last)
+    """Expire old snapshots, then list (optionally delete) orphans.
+
+    With ``catalog`` (a :class:`repro.iceberg.catalog.RestCatalog`) and
+    ``table_name``, the expiration is committed as a metadata-only new
+    version first, so the catalog's served snapshot list agrees with what
+    remains in storage — required before ``delete=True`` or readers can
+    load snapshots whose backing objects are gone."""
+    if catalog is not None:
+        if table_name is None:
+            # the location basename only happens to equal the catalog name
+            # today — don't commit against a guessed table
+            raise ValueError("table_name is required when catalog is given")
+        meta = catalog.expire_snapshots(table_name, keep_last=keep_last)
+    else:
+        meta = expire_snapshots(meta, keep_last)
     orphans = collect_orphans(store, meta)
     if delete:
         for key in orphans:

@@ -21,7 +21,7 @@ import numpy as np
 from typing import TYPE_CHECKING
 
 from repro.lakehouse.objectstore import ObjectStore
-from repro.lakehouse.vparquet import VParquetReader, write_vector_file
+from repro.lakehouse.vparquet import ColumnSpec, VParquetReader, write_vector_file
 
 if TYPE_CHECKING:  # avoid a lakehouse <-> iceberg import cycle at runtime
     from repro.iceberg.catalog import RestCatalog
@@ -56,13 +56,22 @@ class LakehouseTable:
         num_files: int = 4,
         rows_per_group: int = 4096,
         file_prefix: str = "data",
+        attributes: Optional[Dict[str, np.ndarray]] = None,
     ) -> TableMetadata:
-        """Write ``vectors`` as ``num_files`` data files and commit an append."""
+        """Write ``vectors`` as ``num_files`` data files and commit an append.
+
+        ``attributes`` adds per-row attribute columns alongside ``vec``:
+        int64 (or any numeric) arrays are stored directly, string arrays are
+        dictionary-encoded per file — the substrate filtered search scans."""
         from repro.iceberg.snapshot import DataFile  # lazy: avoid import cycle
 
         vectors = np.ascontiguousarray(vectors, dtype=np.float32)
         meta = self.catalog.load_table(self.name)
         n = vectors.shape[0]
+        attrs = {k: np.asarray(v) for k, v in (attributes or {}).items()}
+        for name, arr in attrs.items():
+            if arr.shape[0] != n:
+                raise ValueError(f"attribute {name}: {arr.shape[0]} rows != {n}")
         splits = np.array_split(np.arange(n), num_files)
         existing = len(self.current_files()) if meta.current_snapshot_id else 0
         files: List[DataFile] = []
@@ -71,7 +80,11 @@ class LakehouseTable:
                 continue
             key = f"{meta.location}/data/{file_prefix}-{existing + i:05d}.vpq"
             size = write_vector_file(
-                self.store, key, vectors[idx], rows_per_group=rows_per_group
+                self.store,
+                key,
+                vectors[idx],
+                rows_per_group=rows_per_group,
+                extra_columns={k: v[idx] for k, v in attrs.items()} or None,
             )
             files.append(DataFile(path=key, record_count=len(idx), file_size_bytes=size))
         return self.catalog.append_files(self.name, files)
@@ -126,6 +139,49 @@ class LakehouseTable:
         if not vecs:
             return np.empty((0, 0), np.float32), []
         return np.concatenate(vecs, axis=0), locs
+
+    def attribute_schema(self) -> Dict[str, "ColumnSpec"]:
+        """Scalar attribute columns across all live data files — the
+        filterable surface of the table (mixed-schema appends contribute
+        their union; the first file carrying a column defines its spec)."""
+        out: Dict[str, ColumnSpec] = {}
+        for f in self.current_files():
+            for name, spec in self.reader(f.path).attribute_specs().items():
+                out.setdefault(name, spec)
+        return out
+
+    def scan_attributes(
+        self,
+        columns: Optional[Sequence[str]] = None,
+        snapshot_id: Optional[int] = None,
+    ) -> Dict[str, np.ndarray]:
+        """Scan attribute columns, row-aligned with :meth:`scan_vectors`.
+
+        Dictionary-encoded string columns come back as decoded value arrays
+        (each file's codes mapped through its own dictionary).  Files
+        written without a column (mixed-schema appends) keep the alignment:
+        their rows are filled with ``None`` and the column comes back as an
+        object array — never a float promotion, which would silently round
+        int64 values above 2^53.  Homogeneous tables keep native dtypes."""
+        files = self.current_files(snapshot_id)
+        readers = [self.reader(f.path) for f in files]
+        names = (
+            list(columns)
+            if columns is not None
+            else sorted({n for r in readers for n in r.attribute_specs()})
+        )
+        out: Dict[str, List[np.ndarray]] = {name: [] for name in names}
+        for r in readers:
+            for name in names:
+                spec = r.columns.get(name)
+                if spec is None:
+                    out[name].append(np.full(r.num_rows, None, dtype=object))
+                    continue
+                arr = r.read_column(name)
+                if spec.dictionary is not None:
+                    arr = np.asarray(spec.dictionary, dtype=object)[arr]
+                out[name].append(arr)
+        return {k: np.concatenate(v) for k, v in out.items() if v}
 
     def fetch_rows(
         self, masks: Dict[str, Dict[int, List[int]]]

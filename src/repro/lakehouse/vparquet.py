@@ -27,7 +27,7 @@ from __future__ import annotations
 import json
 import struct
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -60,6 +60,9 @@ class ColumnSpec:
     name: str
     dtype: str  # numpy dtype string
     vlen: int  # vector length per row (0 => scalar column)
+    # dictionary-encoded string column: the stored ints are codes into this
+    # per-file value table (attribute columns for filtered search)
+    dictionary: Optional[List[str]] = None
 
 
 class VParquetWriter:
@@ -101,7 +104,9 @@ class VParquetWriter:
         footer = json.dumps(
             {
                 "columns": [
-                    {"name": c.name, "dtype": c.dtype, "vlen": c.vlen} for c in self.columns
+                    {"name": c.name, "dtype": c.dtype, "vlen": c.vlen}
+                    | ({"dictionary": c.dictionary} if c.dictionary is not None else {})
+                    for c in self.columns
                 ],
                 "row_groups": self._row_groups,
             },
@@ -123,7 +128,10 @@ class VParquetReader:
         if tail[4:8] != MAGIC:
             raise ValueError("bad vparquet trailing magic")
         footer = json.loads(range_reader(size - 8 - footer_len, footer_len).decode("utf-8"))
-        self.columns = {c["name"]: ColumnSpec(c["name"], c["dtype"], c["vlen"]) for c in footer["columns"]}
+        self.columns = {
+            c["name"]: ColumnSpec(c["name"], c["dtype"], c["vlen"], c.get("dictionary"))
+            for c in footer["columns"]
+        }
         self.row_groups: List[dict] = footer["row_groups"]
 
     @classmethod
@@ -137,6 +145,16 @@ class VParquetReader:
     @property
     def num_rows(self) -> int:
         return sum(rg["num_rows"] for rg in self.row_groups)
+
+    def attribute_specs(self) -> Dict[str, ColumnSpec]:
+        """Scalar attribute columns — everything but the reserved ``vec``
+        and ``id`` columns.  The single definition of "filterable column"
+        shared by zone-map construction and the table scan paths."""
+        return {
+            name: spec
+            for name, spec in self.columns.items()
+            if spec.vlen == 0 and name not in ("vec", "id")
+        }
 
     @property
     def num_row_groups(self) -> int:
@@ -177,6 +195,13 @@ class VParquetReader:
 
 # -- convenience helpers used throughout tests/benchmarks -------------------
 
+def dictionary_encode(values: np.ndarray) -> Tuple[np.ndarray, List[str]]:
+    """String array → (int32 codes, sorted value dictionary)."""
+    strs = np.asarray(values).astype(str)
+    dictionary, codes = np.unique(strs, return_inverse=True)
+    return codes.astype(np.int32), [str(v) for v in dictionary]
+
+
 def write_vector_file(
     store: ObjectStore,
     key: str,
@@ -186,12 +211,22 @@ def write_vector_file(
     codec: Optional[str] = None,
     extra_columns: Optional[Dict[str, np.ndarray]] = None,
 ) -> int:
-    """Write an embedding table file with a ``vec`` column (+ row ``id``)."""
+    """Write an embedding table file with a ``vec`` column (+ row ``id``).
+
+    ``extra_columns`` carries attribute columns for filtered search: numeric
+    arrays are stored as-is; string arrays are dictionary-encoded (int32
+    codes + per-file value table in the footer's ``ColumnSpec``)."""
     vectors = np.ascontiguousarray(vectors, dtype=np.float32)
     n, d = vectors.shape
     cols = [ColumnSpec("vec", "float32", d), ColumnSpec("id", "int64", 0)]
     extra = dict(extra_columns or {})
-    for name, arr in extra.items():
+    for name, arr in list(extra.items()):
+        arr = np.asarray(arr)
+        if arr.dtype.kind in ("U", "S", "O"):
+            codes, dictionary = dictionary_encode(arr)
+            extra[name] = codes
+            cols.append(ColumnSpec(name, "int32", 0, dictionary))
+            continue
         vlen = arr.shape[1] if arr.ndim == 2 else 0
         cols.append(ColumnSpec(name, str(arr.dtype), vlen))
     w = VParquetWriter(cols, codec=codec)

@@ -21,3 +21,12 @@ from repro.runtime.fragments import (  # noqa: F401
 from repro.runtime.executor import Executor, ExecutorDead  # noqa: F401
 from repro.runtime.scheduler import ExecutorPool, Scheduler  # noqa: F401
 from repro.runtime.coordinator import Coordinator, IndexConfig  # noqa: F401
+from repro.runtime.predicates import (  # noqa: F401
+    And,
+    Eq,
+    In,
+    Or,
+    Predicate,
+    Range,
+    parse_predicate,
+)

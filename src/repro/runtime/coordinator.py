@@ -23,6 +23,12 @@ Implements the paper's three protocols against the runtime substrate:
   insert + lazy tombstones → per-shard rebuild above the tombstone-ratio
   threshold → metadata-only commit.  Unchanged shard blobs are byte-copied
   into the new Puffin, never rebuilt or re-encoded.
+
+Both probe entry points take ``filter=`` (a predicate tree or SQL WHERE
+fragment): the coordinator zone-map-prunes shards/row-groups, then plans
+per shard by estimated selectivity — pre-filter exact scan (few rows
+pass), filter-aware masked beam (mid), or over-fetched post-filter (most
+rows pass) — with per-query predicates surviving fragment coalescing.
 """
 
 from __future__ import annotations
@@ -36,13 +42,18 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.blobs import (
+    ATTR_ZONEMAP_BLOB_TYPE,
     CENTROID_BLOB_TYPE,
     ROUTING_BLOB_TYPE,
     SHARD_BLOB_TYPE,
+    AttrZoneMap,
     RoutingTable,
     ShardInfo,
+    build_zonemap,
     decode_routing_blob,
+    decode_zonemap_blob,
     encode_routing_blob,
+    encode_zonemap_blob,
 )
 from repro.core.centroid_index import CentroidIndex, build_centroid_index
 from repro.core.kmeans import train_kmeans
@@ -54,9 +65,17 @@ from repro.iceberg.snapshot import Snapshot, TableMetadata
 from repro.lakehouse.table import LakehouseTable
 from repro.lakehouse.vparquet import VParquetReader
 from repro.runtime import fragments as F
+from repro.runtime.predicates import Predicate, parse_predicate, row_group_mask
 from repro.runtime.scheduler import ExecutorPool, Scheduler
 
 TOMBSTONE_REBUILD_THRESHOLD = 0.20  # paper §7.3
+
+# Selectivity-adaptive filtered-probe planning: estimated passing fraction
+# at or below PREFILTER_MAX_FRAC gets the pre-filter exact scan, up to
+# MASK_MAX_FRAC the filter-aware (bitmask-widened) beam, above it the
+# over-fetched post-filter beam.
+PREFILTER_MAX_FRAC = 0.10
+MASK_MAX_FRAC = 0.50
 
 
 @dataclass
@@ -120,6 +139,17 @@ class ProbeReport:
     # shard-probe fragments were actually dispatched after coalescing
     batch_size: int = 0
     probe_fragments: int = 0
+    # filtered search: predicate pushed through the probe, zone-map pruning
+    # effect, and the selectivity-adaptive plan that was chosen
+    filtered: bool = False
+    filter_plan: str = ""  # e.g. "prefilter:2,pruned:1"
+    shards_pruned: int = 0
+    # (query, shard) probe fragments dropped by zone pruning BEFORE
+    # coalescing — the per-query signal; shards_pruned is the per-predicate
+    # union of whole shards
+    fragments_pruned: int = 0
+    row_groups_pruned: int = 0
+    est_selectivity: float = 1.0
 
 
 @dataclass
@@ -151,6 +181,9 @@ class Coordinator:
         self.scheduler = Scheduler(
             pool, enable_speculation=enable_speculation, max_attempts=max_attempts
         )
+        # decoded attribute zone maps, keyed by (immutable) puffin path —
+        # filtered probes on the serving path must not re-decode the blob
+        self._zonemap_cache: Dict[str, Optional[AttrZoneMap]] = {}
 
     # ------------------------------------------------------------------ build
     def create_index(self, table_name: str, cfg: IndexConfig) -> BuildReport:
@@ -244,6 +277,11 @@ class Coordinator:
         # ---- Stage 2: assemble Puffin + commit (coordinator) -----------------
         t2 = time.time()
         centroid_index = build_centroid_index(table, metric=cfg.metric)
+        zonemap = build_zonemap(self.store, files)
+        if zonemap is not None:
+            zonemap.shard_membership = {
+                r.shard_id: r.rg_membership for r in results if r.rg_membership
+            }
         puffin_path, total_bytes = self._assemble_puffin(
             meta,
             snap,
@@ -254,6 +292,7 @@ class Coordinator:
             centroid_index,
             files,
             out_prefix,
+            zonemap=zonemap,
         )
         new_meta = self.catalog.set_statistics_file(
             table_name,
@@ -378,6 +417,7 @@ class Coordinator:
         out_prefix: str,
         tombstone_ratios: Optional[Dict[int, float]] = None,
         raw_shard_bytes: Optional[Dict[int, bytes]] = None,
+        zonemap: Optional[AttrZoneMap] = None,
     ) -> Tuple[str, int]:
         writer = PuffinWriter(
             file_properties={
@@ -451,6 +491,15 @@ class Coordinator:
                     "tombstone-ratio": f"{ratios.get(r.shard_id, 0.0):.6f}",
                 },
             )
+        if zonemap is not None:
+            # appended AFTER the shard blobs so ShardInfo.blob_index stays
+            # stable (0 = routing, 1 = centroid, 2.. = shards)
+            writer.add_blob(
+                encode_zonemap_blob(zonemap),
+                type=ATTR_ZONEMAP_BLOB_TYPE,
+                snapshot_id=snap.snapshot_id,
+                properties={"columns": ",".join(sorted(zonemap.columns))},
+            )
         data = writer.finish()
         puffin_path = f"{out_prefix}.puffin"
         self.store.put(puffin_path, data)
@@ -495,13 +544,21 @@ class Coordinator:
         as_of_ms: Optional[int] = None,
         use_pq: Optional[bool] = None,
         L: Optional[int] = None,
+        filter: Optional[object] = None,
     ) -> ProbeReport:
-        """Vector top-k query.  ``strategy``: auto | diskann | centroid | scan."""
+        """Vector top-k query.  ``strategy``: auto | diskann | centroid | scan.
+
+        ``filter`` pushes an attribute predicate (a
+        :class:`repro.runtime.predicates.Predicate` or a SQL WHERE fragment
+        string) through the probe: results are the top-k among rows
+        satisfying it.  ``strategy="scan"`` with a filter is the brute-force
+        post-filter oracle."""
         queries = np.atleast_2d(np.asarray(queries, np.float32))
+        pred = self._coerce_filter(filter)
         self.store.metrics.reset()
         table = LakehouseTable(self.catalog, table_name)
         if strategy == "scan":
-            return self._probe_scan(table, queries, k, snapshot_id)
+            return self._probe_scan(table, queries, k, snapshot_id, pred=pred)
         meta, snap, puffin_path, reader = self._resolve_index(
             table_name, snapshot_id, as_of_ms
         )
@@ -509,9 +566,20 @@ class Coordinator:
         shard_blobs = reader.blobs_of_type(SHARD_BLOB_TYPE)
         strategy = self._choose_strategy(strategy, routing, shard_blobs)
         if strategy == "centroid":
-            return self._probe_centroid(table, reader, queries, k, n_probe)
+            return self._probe_centroid(
+                table, reader, queries, k, n_probe, pred=pred, puffin_path=puffin_path
+            )
         return self._probe_diskann(
-            table, routing, shard_blobs, puffin_path, queries, k, use_pq=use_pq, L=L
+            table,
+            routing,
+            shard_blobs,
+            puffin_path,
+            queries,
+            k,
+            use_pq=use_pq,
+            L=L,
+            pred=pred,
+            zonemap=self._read_zonemap(reader, puffin_path) if pred is not None else None,
         )
 
     @staticmethod
@@ -534,6 +602,132 @@ class Coordinator:
             strategy = "centroid"
         return strategy
 
+    # -- filtered-search planning ------------------------------------------
+    @staticmethod
+    def _coerce_filter(filter: Optional[object]) -> Optional[Predicate]:
+        if filter is None or isinstance(filter, Predicate):
+            return filter
+        if isinstance(filter, str):
+            return parse_predicate(filter)
+        raise TypeError(f"filter must be a Predicate or SQL fragment, got {type(filter)}")
+
+    def _read_zonemap(
+        self, reader: PuffinReader, puffin_path: Optional[str] = None
+    ) -> Optional[AttrZoneMap]:
+        """Decode the index's zone-map blob, cached per puffin path (index
+        Puffin files are immutable, so the decoded map never goes stale)."""
+        if puffin_path is not None and puffin_path in self._zonemap_cache:
+            return self._zonemap_cache[puffin_path]
+        metas = reader.blobs_of_type(ATTR_ZONEMAP_BLOB_TYPE)
+        zm = decode_zonemap_blob(reader.read_blob(metas[0])) if metas else None
+        if puffin_path is not None:
+            if len(self._zonemap_cache) >= 8:
+                self._zonemap_cache.pop(next(iter(self._zonemap_cache)))
+            self._zonemap_cache[puffin_path] = zm
+        return zm
+
+    @staticmethod
+    def _plan_filtered(
+        pred: Predicate, zonemap: Optional[AttrZoneMap], routing: RoutingTable
+    ) -> Tuple[Dict[int, str], List[int], float]:
+        """Selectivity-adaptive plan: per shard, zone-prune it outright or
+        pick prefilter / mask / postfilter from the estimated passing
+        fraction of its member row groups.  Without a zone map (index built
+        before the table had attributes) every shard gets the conservative
+        over-fetched post-filter plan."""
+        if zonemap is None:
+            return {s.shard_id: "postfilter" for s in routing.shards}, [], 1.0
+
+        def _frac(zones) -> float:
+            rows, est = 0, 0.0
+            for z in zones:
+                c = next(iter(z.values())).count if z else 0
+                rows += c
+                est += pred.estimate_fraction(z) * c
+            return est / max(rows, 1)
+
+        all_zones = [z for per_file in zonemap.zones.values() for z in per_file]
+        global_frac = _frac(all_zones)
+        modes: Dict[int, str] = {}
+        pruned: List[int] = []
+        for s in routing.shards:
+            shard_zones = zonemap.shard_zones(s.shard_id)
+            if shard_zones is not None and not any(
+                pred.zone_may_match(z) for z in shard_zones
+            ):
+                pruned.append(s.shard_id)
+                continue
+            frac = _frac(shard_zones) if shard_zones else global_frac
+            if frac <= PREFILTER_MAX_FRAC:
+                modes[s.shard_id] = "prefilter"
+            elif frac <= MASK_MAX_FRAC:
+                modes[s.shard_id] = "mask"
+            else:
+                modes[s.shard_id] = "postfilter"
+        return modes, pruned, global_frac
+
+    @staticmethod
+    def _plan_summary(modes: Dict[int, str], pruned: List[int]) -> str:
+        counts: Dict[str, int] = {}
+        for m in modes.values():
+            counts[m] = counts.get(m, 0) + 1
+        parts = [f"{m}:{c}" for m, c in sorted(counts.items())]
+        if pruned:
+            parts.append(f"pruned:{len(pruned)}")
+        return ",".join(parts)
+
+    def _refresh_zonemap(
+        self, reader: PuffinReader, puffin_path: str, covered: List[str]
+    ) -> Optional[AttrZoneMap]:
+        """Zone map for a refreshed index: reuse the prior map's zones for
+        files it already covers (data files are immutable) and scan only the
+        files it has never seen."""
+        prior = self._read_zonemap(reader, puffin_path)
+        if prior is None:
+            return build_zonemap(self.store, covered)
+        missing = [fp for fp in covered if fp not in prior.zones]
+        fresh = build_zonemap(self.store, missing) if missing else None
+        columns = dict(prior.columns)
+        zones = {fp: prior.zones[fp] for fp in covered if fp in prior.zones}
+        if fresh is not None:
+            columns.update(fresh.columns)
+            zones.update(fresh.zones)
+        if not columns:
+            return None
+        return AttrZoneMap(columns=columns, zones=zones)
+
+    def _filtered_masks(
+        self,
+        table: LakehouseTable,
+        files: Sequence[str],
+        pred: Optional[Predicate],
+        zonemap: Optional[AttrZoneMap] = None,
+    ) -> Tuple[Dict[str, Dict[int, List[int]]], int]:
+        """Coordinator-side row masks for the scan/centroid paths: per file
+        and row group, the offsets passing ``pred`` (all offsets when no
+        predicate).  Zone maps skip row groups that cannot match before any
+        attribute column is read.  Returns (masks, row_groups_pruned)."""
+        masks: Dict[str, Dict[int, List[int]]] = {}
+        rg_pruned = 0
+        for fp in files:
+            r = table.reader(fp)
+            zones = zonemap.zones.get(fp) if zonemap is not None else None
+            groups: Dict[int, List[int]] = {}
+            for rg in range(len(r.row_groups)):
+                if pred is not None and zones is not None and rg < len(zones):
+                    if not pred.zone_may_match(zones[rg]):
+                        rg_pruned += 1
+                        continue
+                if pred is None:
+                    groups[rg] = list(range(r.row_groups[rg]["num_rows"]))
+                else:
+                    offs = np.flatnonzero(row_group_mask(pred, r, rg))
+                    if len(offs):
+                        groups[rg] = [int(o) for o in offs]
+            if groups:
+                masks[fp] = groups
+        return masks, rg_pruned
+
     def probe_batch(
         self,
         table_name: str,
@@ -547,6 +741,7 @@ class Coordinator:
         use_pq: Optional[bool] = None,
         L: Optional[int] = None,
         n_route: Optional[int] = None,
+        filter: Optional[object] = None,
     ) -> ProbeReport:
         """Batched vector top-k over ``queries (B, dim)``.
 
@@ -561,11 +756,22 @@ class Coordinator:
         default probes every shard, preserving exact parity with ``probe``).
         """
         queries = np.atleast_2d(np.asarray(queries, np.float32))
+        B = queries.shape[0]
+        preds = self._coerce_filters_batch(filter, B)
         self.store.metrics.reset()
         table = LakehouseTable(self.catalog, table_name)
         if strategy == "scan":
-            report = self._probe_scan(table, queries, k, snapshot_id)
-            report.batch_size = queries.shape[0]
+            if preds is None or len(set(preds)) == 1:
+                report = self._probe_scan(
+                    table, queries, k, snapshot_id, pred=preds[0] if preds else None
+                )
+            else:
+                report = self._grouped_filtered(
+                    lambda q, p: self._probe_scan(table, q, k, snapshot_id, pred=p),
+                    queries,
+                    preds,
+                )
+            report.batch_size = B
             return report
         meta, snap, puffin_path, reader = self._resolve_index(
             table_name, snapshot_id, as_of_ms
@@ -574,7 +780,21 @@ class Coordinator:
         shard_blobs = reader.blobs_of_type(SHARD_BLOB_TYPE)
         strategy = self._choose_strategy(strategy, routing, shard_blobs)
         if strategy == "centroid":
-            report = self._probe_centroid_batch(table, reader, queries, k, n_probe)
+            if preds is None or len(set(preds)) == 1:
+                report = self._probe_centroid_batch(
+                    table, reader, queries, k, n_probe,
+                    pred=preds[0] if preds else None, puffin_path=puffin_path,
+                )
+            else:
+                # per-group batches keep per-query file ownership, so mixed
+                # filters still return exactly the sequential probes' hits
+                report = self._grouped_filtered(
+                    lambda q, p: self._probe_centroid_batch(
+                        table, reader, q, k, n_probe, pred=p, puffin_path=puffin_path
+                    ),
+                    queries,
+                    preds,
+                )
         else:
             report = self._probe_diskann_batch(
                 table,
@@ -586,28 +806,86 @@ class Coordinator:
                 use_pq=use_pq,
                 L=L,
                 n_route=n_route,
+                preds=preds,
+                zonemap=self._read_zonemap(reader, puffin_path) if preds else None,
             )
-        report.batch_size = queries.shape[0]
+        report.batch_size = B
         return report
 
-    def _probe_scan(
-        self, table: LakehouseTable, queries: np.ndarray, k: int, snapshot_id=None
+    def _coerce_filters_batch(
+        self, filter: Optional[object], batch_size: int
+    ) -> Optional[List[Optional[Predicate]]]:
+        """Normalize probe_batch's ``filter`` argument: a single predicate
+        (or WHERE string) fans out to every query; a sequence is per-query,
+        ``None`` entries meaning that query is unfiltered."""
+        if filter is None:
+            return None
+        if isinstance(filter, (Predicate, str)):
+            return [self._coerce_filter(filter)] * batch_size
+        preds = [self._coerce_filter(f) for f in filter]
+        if len(preds) != batch_size:
+            raise ValueError(f"{len(preds)} filters for {batch_size} queries")
+        return None if all(p is None for p in preds) else preds
+
+    def _grouped_filtered(
+        self,
+        fn,
+        queries: np.ndarray,
+        preds: List[Optional[Predicate]],
     ) -> ProbeReport:
-        """No-index baseline (paper Table 2 column 1): full scan + exact."""
+        """Stitch heterogeneous-filter batches on paths whose masks are
+        coordinator-computed (scan/centroid): one sub-probe per distinct
+        predicate, hits re-interleaved into batch order, I/O stats summed."""
+        groups: Dict[Optional[Predicate], List[int]] = {}
+        for qi, p in enumerate(preds):
+            groups.setdefault(p, []).append(qi)
+        hits: List[Optional[List[ProbeHit]]] = [None] * len(preds)
+        out: Optional[ProbeReport] = None
+        for p, rows in groups.items():
+            rep = fn(queries[rows], p)
+            for j, qi in enumerate(rows):
+                hits[qi] = rep.hits[j]
+            if out is None:
+                out = rep
+            else:
+                out.files_scanned += rep.files_scanned
+                out.stage_a_seconds += rep.stage_a_seconds
+                out.stage_b_seconds += rep.stage_b_seconds
+                out.stage_c_seconds += rep.stage_c_seconds
+                out.shards_probed += rep.shards_probed
+                out.probe_fragments += rep.probe_fragments
+                out.shards_pruned += rep.shards_pruned
+                out.fragments_pruned += rep.fragments_pruned
+                out.row_groups_pruned += rep.row_groups_pruned
+        assert out is not None
+        out.hits = hits
+        # per-group bytes_read snapshots are cumulative since the batch's
+        # reset — the final snapshot is the batch total
+        out.bytes_read = self.store.metrics.bytes_read
+        out.filtered = any(p is not None for p in preds)
+        return out
+
+    def _probe_scan(
+        self,
+        table: LakehouseTable,
+        queries: np.ndarray,
+        k: int,
+        snapshot_id=None,
+        pred: Optional[Predicate] = None,
+    ) -> ProbeReport:
+        """No-index baseline (paper Table 2 column 1): full scan + exact.
+        With ``pred`` this is the brute-force post-filter oracle: every
+        passing row is exact-ranked, so the result is the true filtered
+        top-k."""
         t0 = time.time()
         files = [f.path for f in table.current_files(snapshot_id)]
-        masks = {}
-        for fp in files:
-            r = table.reader(fp)
-            masks[fp] = {
-                rg: list(range(r.row_groups[rg]["num_rows"]))
-                for rg in range(len(r.row_groups))
-            }
+        masks, _ = self._filtered_masks(table, files, pred)
         report = self._rerank_and_merge(table, masks, queries, k, "l2")
         report.strategy = "scan"
         report.files_scanned = len(files)
         report.stage_b_seconds = time.time() - t0
         report.bytes_read = self.store.metrics.bytes_read
+        report.filtered = pred is not None
         return report
 
     def _probe_centroid(
@@ -617,9 +895,13 @@ class Coordinator:
         queries: np.ndarray,
         k: int,
         n_probe: int,
+        pred: Optional[Predicate] = None,
+        puffin_path: Optional[str] = None,
     ) -> ProbeReport:
         """Coordinator-tier probe (paper Table 2 column 2): prune the file
-        list with the centroid index, then exact-rerank only those files."""
+        list with the centroid index, then exact-rerank only those files.
+        With a predicate the masks keep only passing rows, and the zone map
+        (when the index carries one) skips row groups that cannot match."""
         t0 = time.time()
         ci = CentroidIndex.from_blob(reader.read_first(CENTROID_BLOB_TYPE))
         pruned: List[str] = []
@@ -630,18 +912,15 @@ class Coordinator:
             pruned.extend(fl)
         pruned = sorted(set(pruned))
         stage_a = time.time() - t0
-        masks = {}
-        for fp in pruned:
-            r = table.reader(fp)
-            masks[fp] = {
-                rg: list(range(r.row_groups[rg]["num_rows"]))
-                for rg in range(len(r.row_groups))
-            }
+        zonemap = self._read_zonemap(reader, puffin_path) if pred is not None else None
+        masks, rg_pruned = self._filtered_masks(table, pruned, pred, zonemap)
         report = self._rerank_and_merge(table, masks, queries, k, ci.metric)
         report.strategy = "centroid"
         report.files_scanned = len(pruned)
         report.stage_a_seconds = stage_a
         report.bytes_read = self.store.metrics.bytes_read
+        report.filtered = pred is not None
+        report.row_groups_pruned = rg_pruned
         return report
 
     def _probe_centroid_batch(
@@ -651,11 +930,14 @@ class Coordinator:
         queries: np.ndarray,
         k: int,
         n_probe: int,
+        pred: Optional[Predicate] = None,
+        puffin_path: Optional[str] = None,
     ) -> ProbeReport:
         """Batched coordinator-tier probe: ONE vectorized centroid-routing
         pass produces every query's file list; the union of those files is
         read and reranked once, with per-file ownership keeping each query's
-        result set identical to its sequential probe."""
+        result set identical to its sequential probe.  ``pred`` (shared by
+        the whole batch on this path) restricts masks to passing rows."""
         t0 = time.time()
         ci = CentroidIndex.from_blob(reader.read_first(CENTROID_BLOB_TYPE))
         per_query_files = ci.probe_topk_batch(queries, n_probe)
@@ -665,13 +947,8 @@ class Coordinator:
                 file_owners.setdefault(fp, set()).add(qi)
         pruned = sorted(file_owners)
         stage_a = time.time() - t0
-        masks = {}
-        for fp in pruned:
-            r = table.reader(fp)
-            masks[fp] = {
-                rg: list(range(r.row_groups[rg]["num_rows"]))
-                for rg in range(len(r.row_groups))
-            }
+        zonemap = self._read_zonemap(reader, puffin_path) if pred is not None else None
+        masks, rg_pruned = self._filtered_masks(table, pruned, pred, zonemap)
         report = self._rerank_and_merge(
             table, masks, queries, k, ci.metric, file_owners=file_owners
         )
@@ -679,6 +956,8 @@ class Coordinator:
         report.files_scanned = len(pruned)
         report.stage_a_seconds = stage_a
         report.bytes_read = self.store.metrics.bytes_read
+        report.filtered = pred is not None
+        report.row_groups_pruned = rg_pruned
         return report
 
     def _probe_diskann(
@@ -692,12 +971,22 @@ class Coordinator:
         *,
         use_pq: Optional[bool] = None,
         L: Optional[int] = None,
+        pred: Optional[Predicate] = None,
+        zonemap: Optional[AttrZoneMap] = None,
     ) -> ProbeReport:
-        """Three-stage distributed probe (paper §6, Figure 3)."""
+        """Three-stage distributed probe (paper §6, Figure 3).  With a
+        predicate, the zone map first prunes shards whose member row groups
+        cannot match, then every surviving shard searches under its
+        selectivity-adaptive plan."""
         oversample = int(routing.params.get("oversample", "4"))
         if use_pq is None:
             use_pq = int(routing.params.get("pq_m", "0")) > 0
         L_eff = L or int(routing.params.get("L", "100"))
+        modes: Dict[int, str] = {}
+        pruned: List[int] = []
+        est_frac = 1.0
+        if pred is not None:
+            modes, pruned, est_frac = self._plan_filtered(pred, zonemap, routing)
         # ---- Stage A: parallel shard beam search -------------------------
         t0 = time.time()
         blob_by_index = {i: b for i, b in enumerate(PuffinReader(
@@ -705,6 +994,8 @@ class Coordinator:
         ).blobs)}
         tasks = []
         for s in routing.shards:
+            if pred is not None and s.shard_id not in modes:
+                continue  # zone-pruned
             b = blob_by_index[s.blob_index]
             tasks.append(
                 F.ProbeTaskInfo(
@@ -720,6 +1011,8 @@ class Coordinator:
                     L=L_eff,
                     use_pq=use_pq,
                     oversample=oversample,
+                    predicate=pred,
+                    filter_mode=modes.get(s.shard_id, "mask"),
                 )
             )
         probe_results: List[F.ProbeResult] = self.scheduler.run_wave(tasks)
@@ -750,9 +1043,15 @@ class Coordinator:
         report.files_scanned = len(masks_l)
         report.stage_a_seconds = stage_a
         report.stage_b_seconds = time.time() - t1 - report.stage_c_seconds
-        report.shards_probed = len(routing.shards)
+        report.shards_probed = len(tasks)
         report.cache_hits = sum(1 for r in probe_results if r.cache_hit)
         report.bytes_read = self.store.metrics.bytes_read
+        if pred is not None:
+            report.filtered = True
+            report.filter_plan = self._plan_summary(modes, pruned)
+            report.shards_pruned = len(pruned)
+            report.fragments_pruned = len(pruned)  # one fragment per shard here
+            report.est_selectivity = est_frac
         return report
 
     def _route_queries(
@@ -801,6 +1100,8 @@ class Coordinator:
         use_pq: Optional[bool] = None,
         L: Optional[int] = None,
         n_route: Optional[int] = None,
+        preds: Optional[List[Optional[Predicate]]] = None,
+        zonemap: Optional[AttrZoneMap] = None,
     ) -> ProbeReport:
         """Batched three-stage distributed probe.
 
@@ -808,7 +1109,12 @@ class Coordinator:
         which coalesces them into ≤ one fragment per shard; each executor
         answers its fragment with one batched beam-search pass.  Stage B:
         the union of every query's surviving candidates is reranked in one
-        wave with per-row ownership.  Stage C: per-query ordered merge."""
+        wave with per-row ownership.  Stage C: per-query ordered merge.
+
+        ``preds`` carries per-query predicates (None entries = unfiltered
+        query).  Filtered and unfiltered queries share coalesced fragments;
+        the zone map drops a (query, shard) fragment before dispatch when no
+        member row group of that shard can match the query's predicate."""
         oversample = int(routing.params.get("oversample", "4"))
         if use_pq is None:
             use_pq = int(routing.params.get("pq_m", "0")) > 0
@@ -818,12 +1124,27 @@ class Coordinator:
         blob_by_index = dict(enumerate(reader.blobs))
         route = self._route_queries(routing, queries, n_route)
         B = queries.shape[0]
+        # one plan per distinct predicate; shared across its queries
+        plans: Dict[Predicate, Tuple[Dict[int, str], List[int], float]] = {}
+        if preds:
+            for p in preds:
+                if p is not None and p not in plans:
+                    plans[p] = self._plan_filtered(p, zonemap, routing)
+        fragments_pruned = 0
         tasks: List[F.BatchProbeTaskInfo] = []
         for s in routing.shards:
             b = blob_by_index[s.blob_index]
             for qi in range(B):
                 if s.shard_id not in route[qi]:
                     continue
+                pred = preds[qi] if preds else None
+                mode = "mask"
+                if pred is not None:
+                    modes, pruned, _ = plans[pred]
+                    if s.shard_id not in modes:
+                        fragments_pruned += 1
+                        continue  # zone-pruned for this query's predicate
+                    mode = modes[s.shard_id]
                 tasks.append(
                     F.BatchProbeTaskInfo(
                         task_id=f"probe-{s.shard_id}-q{qi}",
@@ -839,6 +1160,8 @@ class Coordinator:
                         L=L_eff,
                         use_pq=use_pq,
                         oversample=oversample,
+                        filters=[pred] if pred is not None else None,
+                        filter_modes=[mode] if pred is not None else None,
                     )
                 )
         probe_results: List[F.BatchProbeResult] = self.scheduler.run_coalesced_wave(
@@ -880,6 +1203,17 @@ class Coordinator:
         report.probe_fragments = len(probe_results)
         report.cache_hits = sum(1 for r in probe_results if r.cache_hit)
         report.bytes_read = self.store.metrics.bytes_read
+        if plans:
+            report.filtered = True
+            all_pruned = {sid for _, pruned, _ in plans.values() for sid in pruned}
+            report.shards_pruned = len(all_pruned)
+            report.fragments_pruned = fragments_pruned
+            report.filter_plan = ";".join(
+                self._plan_summary(modes, pruned) for modes, pruned, _ in plans.values()
+            )
+            report.est_selectivity = float(
+                np.mean([frac for _, _, frac in plans.values()])
+            )
         return report
 
     def _rerank_and_merge(
@@ -1029,12 +1363,23 @@ class Coordinator:
                         byte_size=r.byte_size,
                         executor_id=r.executor_id,
                         build_seconds=r.refresh_seconds,
+                        rg_membership=r.rg_membership,
                     )
                 )
                 ratios[r.shard_id] = r.tombstone_ratio
         table = LakehouseTable(self.catalog, table_name)
         centroid_index = build_centroid_index(table, metric=routing.metric)
         covered = [f.path for f in table.current_files()]
+        # the zone map is rebuilt against the refresh target snapshot, with
+        # shard membership from the refreshed (live-row) location maps —
+        # data files are immutable, so zones carry over from the previous
+        # index and only files the old map never saw are scanned (refresh
+        # attribute I/O scales with the append delta, not the table)
+        zonemap = self._refresh_zonemap(reader, puffin_path, covered)
+        if zonemap is not None:
+            zonemap.shard_membership = {
+                r.shard_id: r.rg_membership for r in final if r.rg_membership
+            }
         # snapshot to bind against is the CURRENT one (the diff target)
         puffin_new, total_bytes = self._assemble_puffin(
             meta,
@@ -1047,6 +1392,7 @@ class Coordinator:
             covered,
             out_prefix,
             tombstone_ratios=ratios,
+            zonemap=zonemap,
         )
         new_meta = self.catalog.set_statistics_file(
             table_name,

@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core import blobs as blobmod
 from repro.core.blobs import ShardLocationMap, decode_shard_blob, encode_shard_blob
+from repro.runtime.predicates import row_group_mask
 from repro.core.vamana import VamanaGraph, VamanaParams, build_vamana
 from repro.core.pq import PQCodebook, encode as pq_encode
 from repro.iceberg.puffin import _decompress  # codec shared with Puffin blobs
@@ -80,6 +81,18 @@ def _scan_files_with_locations(
     )
 
 
+def _locmap_membership(
+    locmap: ShardLocationMap, n: int, live: Optional[np.ndarray] = None
+) -> List[Tuple[str, int]]:
+    """Distinct (file_path, row_group) pairs a shard's (live) rows occupy —
+    the zone-map membership used for coordinator-side shard pruning."""
+    fidx = np.asarray(locmap.file_idx[:n], np.int64)
+    rgrp = np.asarray(locmap.row_group[:n], np.int64)
+    if live is not None:
+        fidx, rgrp = fidx[live[:n]], rgrp[live[:n]]
+    return sorted({(locmap.file_paths[int(f)], int(g)) for f, g in zip(fidx, rgrp)})
+
+
 def _owner_shards(
     vectors: np.ndarray, centroids: np.ndarray, shard_of_partition: np.ndarray
 ) -> np.ndarray:
@@ -106,6 +119,9 @@ class Executor:
         self.cred = credential_fingerprint
         self._l1: "OrderedDict[str, Tuple[VamanaGraph, ShardLocationMap]]" = OrderedDict()
         self._l1_capacity = l1_capacity
+        # filtered search: (shard key, predicate) -> per-vector-id bool mask
+        self._mask_cache: "OrderedDict[tuple, np.ndarray]" = OrderedDict()
+        self._mask_cache_capacity = 64
         self._lock = threading.Lock()
         # failure injection
         self.dead = False
@@ -227,6 +243,116 @@ class Executor:
             out[vid] = row
         return out if out is not None else np.empty((0, 0), np.float32)
 
+    # -- filtered search ----------------------------------------------------
+    def _predicate_mask(self, locmap: ShardLocationMap, n: int, pred, shard_key: str) -> np.ndarray:
+        """Executor-side row bitmask: does vector id's source row satisfy
+        ``pred``?  Each (file, row_group) referenced by the location map is
+        evaluated once with attribute-column projection; the per-id gather is
+        cached per (shard, predicate) so repeated filtered probes reuse it."""
+        key = (shard_key, pred)
+        with self._lock:
+            if key in self._mask_cache:
+                self._mask_cache.move_to_end(key)
+                return self._mask_cache[key]
+        mask = np.zeros(n, bool)
+        fidx = np.asarray(locmap.file_idx[:n], np.int64)
+        rgrp = np.asarray(locmap.row_group[:n], np.int64)
+        roff = np.asarray(locmap.row_offset[:n], np.int64)
+        readers: Dict[str, VParquetReader] = {}
+        for fi, rg in {(int(a), int(b)) for a, b in zip(fidx, rgrp)}:
+            fpath = locmap.file_paths[fi]
+            if fpath not in readers:
+                readers[fpath] = VParquetReader.from_store(self.store, fpath)
+            rg_mask = row_group_mask(pred, readers[fpath], rg)
+            sel = np.flatnonzero((fidx == fi) & (rgrp == rg))
+            mask[sel] = rg_mask[roff[sel]]
+        with self._lock:
+            self._mask_cache[key] = mask
+            while len(self._mask_cache) > self._mask_cache_capacity:
+                self._mask_cache.popitem(last=False)
+        return mask
+
+    def _exact_masked(
+        self, graph, queries: np.ndarray, live_mask: np.ndarray, k_eff: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Pre-filter exact scan: rank ONLY the rows passing the mask.
+        Exact by construction — the high-selectivity plan and the fallback
+        when beam search can't surface enough passing candidates."""
+        ids = np.flatnonzero(live_mask)
+        d = np.asarray(
+            ops.exact_distances(
+                jnp.asarray(np.ascontiguousarray(queries, np.float32)),
+                jnp.asarray(graph.vectors[ids]),
+                metric=graph.params.metric,
+                backend="ref",
+            )
+        )
+        k = min(k_eff, len(ids))
+        order = np.argsort(d, axis=1)[:, :k]
+        return np.take_along_axis(d, order, axis=1), ids[order]
+
+    def _filtered_search(
+        self, task, graph, locmap, queries: np.ndarray, pred, mode: str
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Stage-A search under an attribute predicate.
+
+        ``mode`` is the coordinator's per-shard plan: ``prefilter`` scans
+        exactly the passing rows; ``mask`` runs a filter-aware beam search
+        whose pool is widened by the bitmask's observed selectivity;
+        ``postfilter`` over-fetches the ordinary beam and filters after.
+        Whenever the beam cannot produce enough passing candidates the shard
+        falls back to the exact masked scan, so a filtered probe never
+        silently returns fewer candidates than the shard actually holds."""
+        shard_key = f"{task.cache_key or task.puffin_path}@{task.blob_offset}"
+        mask = self._predicate_mask(locmap, graph.n, pred, shard_key)
+        live_mask = mask & ~graph.tombstones[: graph.n]
+        match_count = int(live_mask.sum())
+        Qn = queries.shape[0]
+        if match_count == 0:
+            return (
+                np.full((Qn, 1), np.inf, np.float32),
+                np.full((Qn, 1), -1, np.int64),
+            )
+        k_eff = min(task.k * task.oversample, match_count)
+        # tiny passing sets are cheaper to scan exactly than to search
+        if mode == "prefilter" or match_count <= max(4 * k_eff, 64):
+            return self._exact_masked(graph, queries, live_mask, k_eff)
+        n_live = graph.num_live
+        if mode == "postfilter":
+            pool = min(2 * task.k * task.oversample, n_live)
+            L = max(task.L, pool)
+        else:  # mask: widen by observed selectivity so ~3·k_eff survive
+            widen = max(1.0, n_live / match_count)
+            pool = min(int(np.ceil(k_eff * widen * 3.0)), n_live)
+            L = max(task.L, pool)
+        if task.use_pq and graph.pq is not None:
+            dists, ids = graph.search_pq(queries, pool, L=L)
+        else:
+            dists, ids = graph.search(queries, pool, L=L)
+        safe = np.clip(ids, 0, graph.n - 1)
+        passing = live_mask[safe] & (ids >= 0) & np.isfinite(dists)
+        dists = np.where(passing, dists, np.inf)
+        ids = np.where(passing, ids, -1)
+        order = np.argsort(dists, axis=1)[:, :k_eff]
+        dists = np.take_along_axis(dists, order, axis=1)
+        ids = np.take_along_axis(ids, order, axis=1)
+        want = min(k_eff, match_count)
+        short = np.isinf(dists[:, :want]).any(axis=1) if dists.shape[1] >= want else np.ones(Qn, bool)
+        if short.any():
+            # beam under-delivered for some queries — exact-scan the mask
+            ed, ei = self._exact_masked(graph, queries[short], live_mask, k_eff)
+            out_d = np.full((Qn, max(dists.shape[1], ed.shape[1])), np.inf, np.float32)
+            out_i = np.full_like(out_d, -1, dtype=np.int64)
+            out_d[:, : dists.shape[1]] = dists
+            out_i[:, : dists.shape[1]] = ids
+            rows = np.flatnonzero(short)
+            out_d[rows] = np.inf
+            out_i[rows] = -1
+            out_d[rows, : ed.shape[1]] = ed
+            out_i[rows, : ei.shape[1]] = ei
+            return out_d, out_i
+        return dists, ids
+
     # -- dispatch ------------------------------------------------------------
     def handle(self, task) -> object:
         self._gate()
@@ -313,16 +439,20 @@ class Executor:
             executor_id=self.executor_id,
             build_seconds=time.time() - t0,
             partition_counts=counts,
+            rg_membership=_locmap_membership(locmap, graph.n),
         )
 
-    def _shard_search(self, task, graph) -> Tuple[np.ndarray, np.ndarray]:
+    def _shard_search(
+        self, task, graph, queries: Optional[np.ndarray] = None
+    ) -> Tuple[np.ndarray, np.ndarray]:
         """Shared Stage-A search: batched beam search (PQ ADC when the shard
         carries codes) over however many queries the fragment brought."""
+        q = task.queries if queries is None else queries
         k_eff = min(task.k * task.oversample, graph.num_live)
         L = max(task.L, k_eff)
         if task.use_pq and graph.pq is not None:
-            return graph.search_pq(task.queries, k_eff, L=L)
-        return graph.search(task.queries, k_eff, L=L)
+            return graph.search_pq(q, k_eff, L=L)
+        return graph.search(q, k_eff, L=L)
 
     def _row_candidates(
         self, graph, locmap, dists_row, ids_row, shard_id: int
@@ -349,7 +479,12 @@ class Executor:
         graph, locmap, hit = self._load_shard(
             task.puffin_path, task.blob_offset, task.blob_length, task.blob_codec, task.cache_key
         )
-        dists, ids = self._shard_search(task, graph)
+        if task.predicate is not None:
+            dists, ids = self._filtered_search(
+                task, graph, locmap, task.queries, task.predicate, task.filter_mode
+            )
+        else:
+            dists, ids = self._shard_search(task, graph)
         result = F.ProbeResult(
             shard_id=task.shard_id, executor_id=self.executor_id, cache_hit=hit
         )
@@ -361,20 +496,42 @@ class Executor:
         return result
 
     def _probe_shard_batch(self, task: F.BatchProbeTaskInfo) -> F.BatchProbeResult:
-        """Coalesced Stage A: one shard load + one batched beam-search pass
-        for every query the scheduler merged into this fragment."""
+        """Coalesced Stage A: one shard load, then one batched beam-search
+        pass per predicate group — queries sharing a predicate (or sharing
+        none) are answered together, so filtered and unfiltered queries ride
+        the same coalesced fragment without re-evaluating masks per query."""
         t0 = time.time()
         graph, locmap, hit = self._load_shard(
             task.puffin_path, task.blob_offset, task.blob_length, task.blob_codec, task.cache_key
         )
-        dists, ids = self._shard_search(task, graph)
         result = F.BatchProbeResult(
             shard_id=task.shard_id, executor_id=self.executor_id, cache_hit=hit
         )
-        for bi, qi in enumerate(np.asarray(task.query_index, np.int64)):
-            result.candidates[int(qi)] = self._row_candidates(
-                graph, locmap, dists[bi], ids[bi], task.shard_id
-            )
+        qidx = np.asarray(task.query_index, np.int64)
+        if not task.filters:
+            dists, ids = self._shard_search(task, graph)
+            for bi, qi in enumerate(qidx):
+                result.candidates[int(qi)] = self._row_candidates(
+                    graph, locmap, dists[bi], ids[bi], task.shard_id
+                )
+            result.probe_seconds = time.time() - t0
+            return result
+        groups: Dict[tuple, List[int]] = {}
+        for bi in range(len(qidx)):
+            mode = task.filter_modes[bi] if task.filter_modes else "mask"
+            groups.setdefault((task.filters[bi], mode), []).append(bi)
+        for (pred, mode), rows in groups.items():
+            queries = task.queries[rows]
+            if pred is None:
+                dists, ids = self._shard_search(task, graph, queries)
+            else:
+                dists, ids = self._filtered_search(
+                    task, graph, locmap, queries, pred, mode
+                )
+            for j, bi in enumerate(rows):
+                result.candidates[int(qidx[bi])] = self._row_candidates(
+                    graph, locmap, dists[j], ids[j], task.shard_id
+                )
         result.probe_seconds = time.time() - t0
         return result
 
@@ -470,4 +627,7 @@ class Executor:
             byte_size=len(blob),
             tombstone_ratio=graph.tombstone_ratio,
             refresh_seconds=time.time() - t0,
+            rg_membership=_locmap_membership(
+                locmap, graph.n, live=~graph.tombstones[: graph.n]
+            ),
         )

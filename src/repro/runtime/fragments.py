@@ -59,6 +59,10 @@ class IndexBuildResult:
     build_seconds: float
     # per-partition vector counts (routing-table population, paper §5 Stage 1)
     partition_counts: Optional[np.ndarray] = None
+    # (file_path, row_group) pairs this shard's vectors came from — the
+    # zone-map membership that lets the coordinator prune whole shards on
+    # attribute predicates
+    rg_membership: Optional[List[Tuple[str, int]]] = None
 
 
 @dataclass
@@ -95,6 +99,11 @@ class ProbeTaskInfo(TaskBase):
     L: int = 100
     use_pq: bool = True
     oversample: int = 4
+    # filtered search: predicate tree applied to every query of this task,
+    # with the coordinator's per-shard execution mode
+    # (prefilter | mask | postfilter)
+    predicate: Optional[object] = None
+    filter_mode: str = "mask"
 
 
 @dataclass
@@ -135,6 +144,12 @@ class BatchProbeTaskInfo(TaskBase):
     L: int = 100
     use_pq: bool = True
     oversample: int = 4
+    # per-query predicates, row-aligned with ``queries`` (None entry = that
+    # query is unfiltered).  ``filters`` being None means the whole fragment
+    # is unfiltered.  Per-query masks survive fragment coalescing: merged
+    # fragments concatenate these lists alongside the query block.
+    filters: Optional[List[Optional[object]]] = None
+    filter_modes: Optional[List[str]] = None
 
     def coalesce_key(self) -> tuple:
         """Fragments with equal keys search the same shard blob with the
@@ -186,6 +201,16 @@ def coalesce_batch_probes(tasks: Sequence[object]) -> List[object]:
             out.append(group[0])
             continue
         first = group[0]
+        # per-query filters ride along with their query rows; a group with
+        # any filtered member materializes aligned per-row lists
+        filters = None
+        modes = None
+        if any(g.filters for g in group):
+            filters, modes = [], []
+            for g in group:
+                nq = g.queries.shape[0]
+                filters.extend(g.filters if g.filters else [None] * nq)
+                modes.extend(g.filter_modes if g.filter_modes else ["mask"] * nq)
         out.append(
             replace(
                 first,
@@ -194,6 +219,8 @@ def coalesce_batch_probes(tasks: Sequence[object]) -> List[object]:
                 query_index=np.concatenate(
                     [np.asarray(g.query_index, np.int64) for g in group]
                 ),
+                filters=filters,
+                filter_modes=modes,
             )
         )
     return out
@@ -258,3 +285,6 @@ class RefreshResult:
     byte_size: int
     tombstone_ratio: float
     refresh_seconds: float = 0.0
+    # refreshed (file, row_group) membership over LIVE rows, for the
+    # rebuilt zone map's shard-pruning table
+    rg_membership: Optional[List[Tuple[str, int]]] = None

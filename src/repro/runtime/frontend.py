@@ -12,8 +12,14 @@ Supported grammar (case-insensitive):
         [WITH (R=64, L=100, ALPHA=1.2, PQ_M=48, PQ_NBITS=8, SHARDS=4)]
     REFRESH INDEX <name> ON <table>
     DROP INDEX <name> ON <table>
-    SELECT * FROM <table> ORDER BY L2_DISTANCE(<col>, [v,...]) LIMIT <k>
+    SELECT * FROM <table> [WHERE <pred> [AND|OR <pred> ...]]
+        ORDER BY L2_DISTANCE(<col>, [v,...]) LIMIT <k>
     SELECT * FROM <table> WHERE L2_DISTANCE(<col>, [v,...]) < <t>
+
+where each ``<pred>`` is an attribute predicate —
+``col = <lit>``, ``col IN (<lit>, ...)``, ``col < | <= | > | >= <num>`` or
+``col BETWEEN <num> AND <num>`` (AND binds tighter than OR) — pushed
+through the probe path as a filtered vector search.
 """
 
 from __future__ import annotations
@@ -25,6 +31,7 @@ from typing import List, Optional
 import numpy as np
 
 from repro.runtime.coordinator import Coordinator, IndexConfig, ProbeHit
+from repro.runtime.predicates import PredicateError, parse_predicate
 
 
 class SqlError(ValueError):
@@ -48,9 +55,11 @@ _CREATE = re.compile(
 _REFRESH = re.compile(r"^\s*REFRESH\s+INDEX\s+(\w+)\s+ON\s+(\w+)\s*;?\s*$", re.I)
 _DROP = re.compile(r"^\s*DROP\s+INDEX\s+(\w+)\s+ON\s+(\w+)\s*;?\s*$", re.I)
 _TOPK = re.compile(
-    r"^\s*SELECT\s+\*\s+FROM\s+(\w+)\s+ORDER\s+BY\s+(L2|IP)_DISTANCE\s*\(\s*(\w+)\s*,"
+    r"^\s*SELECT\s+\*\s+FROM\s+(\w+)"
+    r"(?:\s+WHERE\s+(?!(?:L2|IP)_DISTANCE\s*\()(.+?))?"
+    r"\s+ORDER\s+BY\s+(L2|IP)_DISTANCE\s*\(\s*(\w+)\s*,"
     r"\s*\[([^\]]*)\]\s*\)\s+LIMIT\s+(\d+)\s*;?\s*$",
-    re.I,
+    re.I | re.S,
 )
 _THRESH = re.compile(
     r"^\s*SELECT\s+\*\s+FROM\s+(\w+)\s+WHERE\s+(L2|IP)_DISTANCE\s*\(\s*(\w+)\s*,"
@@ -97,22 +106,30 @@ class SqlFrontend:
         if m := _DROP.match(sql):
             return IndexDDLInfo("drop", m.group(1), m.group(2))
         if m := _TOPK.match(sql):
-            return ("topk", m.group(1), m.group(2).lower(), m.group(3),
-                    _parse_vector(m.group(4)), int(m.group(5)))
+            pred = None
+            if m.group(2) is not None:
+                try:
+                    pred = parse_predicate(m.group(2))
+                except PredicateError as e:
+                    raise SqlError(f"bad WHERE clause: {e}") from None
+            return ("topk", m.group(1), m.group(3).lower(), m.group(4),
+                    _parse_vector(m.group(5)), int(m.group(6)), pred)
         if m := _THRESH.match(sql):
             return ("threshold", m.group(1), m.group(2).lower(), m.group(3),
-                    _parse_vector(m.group(4)), float(m.group(5)))
+                    _parse_vector(m.group(4)), float(m.group(5)), None)
         raise SqlError(f"unrecognized statement: {sql[:80]!r}")
 
     def execute(self, sql: str):
         stmt = self.parse(sql)
         if isinstance(stmt, IndexDDLInfo):
             return self._execute_ddl(stmt)
-        kind, table, metric, _col, vec, arg = stmt
+        kind, table, metric, _col, vec, arg, pred = stmt
         if kind == "topk":
             if self.batcher is not None and self.batcher.table_name == table:
-                return self.batcher.submit(vec, k=arg).result()
-            report = self.coordinator.probe(table, vec, arg, strategy="auto")
+                return self.batcher.submit(vec, k=arg, filter=pred).result()
+            report = self.coordinator.probe(
+                table, vec, arg, strategy="auto", filter=pred
+            )
             return report.hits[0]
         # threshold query: centroid index gives *exact* file pruning
         # (paper §4.1); rerank then filters by the bound
@@ -127,9 +144,11 @@ class SqlFrontend:
 
         Consecutive runs of top-k SELECTs against the same table with the
         same LIMIT drain into ONE ``Coordinator.probe_batch`` call (the
-        batched pipeline: coalesced shard fragments, batched kernels);
-        every other statement executes exactly as :meth:`execute` would.
-        Results come back in statement order."""
+        batched pipeline: coalesced shard fragments, batched kernels) —
+        filtered and unfiltered SELECTs coalesce together, each query
+        carrying its own WHERE predicate through the batch; every other
+        statement executes exactly as :meth:`execute` would.  Results come
+        back in statement order."""
         parsed = [self.parse(s) for s in sqls]
         results: List[object] = [None] * len(sqls)
         run: List[int] = []  # indices of the current coalescible run
@@ -140,10 +159,15 @@ class SqlFrontend:
             if len(run) == 1:
                 results[run[0]] = self.execute(sqls[run[0]])
             else:
-                _, table, _, _, _, k = parsed[run[0]]
+                _, table, _, _, _, k, _ = parsed[run[0]]
                 queries = np.stack([parsed[i][4] for i in run])
+                filters = [parsed[i][6] for i in run]
                 report = self.coordinator.probe_batch(
-                    table, queries, k, strategy="auto"
+                    table,
+                    queries,
+                    k,
+                    strategy="auto",
+                    filter=filters if any(f is not None for f in filters) else None,
                 )
                 for i, hits in zip(run, report.hits):
                     results[i] = hits
@@ -152,8 +176,8 @@ class SqlFrontend:
         for i, stmt in enumerate(parsed):
             coalescible = not isinstance(stmt, IndexDDLInfo) and stmt[0] == "topk"
             if coalescible and run:
-                _, t0, m0, _, v0, k0 = parsed[run[0]]
-                _, t1, m1, _, v1, k1 = stmt
+                _, t0, m0, _, v0, k0, _ = parsed[run[0]]
+                _, t1, m1, _, v1, k1, _ = stmt
                 if (t1, m1, k1) != (t0, m0, k0) or v1.shape != v0.shape:
                     flush()
             if coalescible:

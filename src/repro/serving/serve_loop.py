@@ -40,6 +40,10 @@ class MicroBatchStats:
     batches: int = 0
     queries: int = 0
     max_batch_seen: int = 0
+    filtered_queries: int = 0
+    # adaptive sizing: how often the drainer grew / shrank max_batch
+    grows: int = 0
+    shrinks: int = 0
 
 
 class ProbeMicroBatcher:
@@ -49,13 +53,23 @@ class ProbeMicroBatcher:
 
         with ProbeMicroBatcher(coordinator, "docs", max_batch=64) as mb:
             fut = mb.submit(q, k=10)        # from any number of threads
+            fut2 = mb.submit(q2, k=10, filter="category = 'news'")
             hits = fut.result()             # per-query ProbeHit list
             hits_lists = mb.probe_many(Q, k=10)   # sync convenience
 
     The drainer waits ``max_wait_s`` after the first pending request (or
     until ``max_batch`` accumulate), groups requests by ``k`` (a batch probe
-    shares one k), and resolves each Future with its query's hits.  Errors
-    propagate to every Future in the failed batch.
+    shares one k), and resolves each Future with its query's hits.  Filtered
+    and unfiltered submissions batch together: per-query predicates ride the
+    same ``probe_batch`` call.  Errors propagate to every Future in the
+    failed batch.
+
+    With ``adaptive=True`` the drainer resizes ``max_batch`` from observed
+    queue depth instead of holding the configured constant: a full drain
+    that leaves requests queued doubles it (up to ``max_batch_cap``), and a
+    drain well under the current size with an idle queue halves it (down to
+    ``min_batch``) — deeper backlog buys more coalescing, light traffic
+    keeps latency low.
 
     Caveat: the coordinator's per-probe I/O accounting
     (``ProbeReport.bytes_read``) resets a store-global counter, so byte
@@ -71,6 +85,9 @@ class ProbeMicroBatcher:
         strategy: str = "auto",
         max_batch: int = 64,
         max_wait_s: float = 0.002,
+        adaptive: bool = False,
+        min_batch: int = 4,
+        max_batch_cap: int = 512,
         **probe_kwargs,
     ) -> None:
         self.coordinator = coordinator
@@ -78,6 +95,9 @@ class ProbeMicroBatcher:
         self.strategy = strategy
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
+        self.adaptive = adaptive
+        self.min_batch = max(1, min_batch)
+        self.max_batch_cap = max(max_batch, max_batch_cap)
         self.probe_kwargs = probe_kwargs
         self.stats = MicroBatchStats()
         self._queue: "queue_mod.Queue" = queue_mod.Queue()
@@ -101,7 +121,7 @@ class ProbeMicroBatcher:
         # their waiters — fail them loudly
         while True:
             try:
-                _, _, fut = self._queue.get_nowait()
+                _, _, _, fut = self._queue.get_nowait()
             except queue_mod.Empty:
                 break
             if not fut.done():
@@ -114,17 +134,19 @@ class ProbeMicroBatcher:
         self.stop()
 
     # -- submission -------------------------------------------------------
-    def submit(self, query, k: int = 10) -> Future:
-        """Enqueue one query; the Future resolves to its ProbeHit list."""
+    def submit(self, query, k: int = 10, filter=None) -> Future:
+        """Enqueue one query; the Future resolves to its ProbeHit list.
+        ``filter`` (a Predicate or SQL WHERE fragment) makes it a filtered
+        probe — it shares the batch with unfiltered submissions."""
         if self._thread is None:
             raise RuntimeError("micro-batcher is not running (call start())")
         fut: Future = Future()
-        self._queue.put((np.asarray(query, np.float32).reshape(-1), k, fut))
+        self._queue.put((np.asarray(query, np.float32).reshape(-1), k, filter, fut))
         return fut
 
-    def probe_many(self, queries, k: int = 10) -> List[list]:
+    def probe_many(self, queries, k: int = 10, filter=None) -> List[list]:
         """Submit a block of queries and wait for all results (in order)."""
-        futs = [self.submit(q, k) for q in queries]
+        futs = [self.submit(q, k, filter=filter) for q in queries]
         return [f.result() for f in futs]
 
     # -- drainer ----------------------------------------------------------
@@ -145,20 +167,41 @@ class ProbeMicroBatcher:
                 except queue_mod.Empty:
                     break
             self._flush(pending)
+            if self.adaptive:
+                self._adapt(len(pending), self._queue.qsize())
+
+    def _adapt(self, drained: int, queue_depth: int) -> None:
+        """Resize ``max_batch`` from observed load: a full drain with
+        requests still queued means the window is too small (double it); a
+        drain well under the window with an idle queue means it is too
+        large (halve it).  Bounded by [min_batch, max_batch_cap]."""
+        if drained >= self.max_batch and queue_depth > 0:
+            grown = min(self.max_batch * 2, self.max_batch_cap)
+            if grown > self.max_batch:
+                self.max_batch = grown
+                self.stats.grows += 1
+        elif queue_depth == 0 and drained <= self.max_batch // 4:
+            shrunk = max(self.max_batch // 2, self.min_batch)
+            if shrunk < self.max_batch:
+                self.max_batch = shrunk
+                self.stats.shrinks += 1
 
     def _flush(self, pending: list) -> None:
         by_k: Dict[int, list] = {}
         for item in pending:
             by_k.setdefault(item[1], []).append(item)
         for k, items in by_k.items():
-            queries = np.stack([q for q, _, _ in items])
-            futures = [f for _, _, f in items]
+            queries = np.stack([q for q, _, _, _ in items])
+            filters = [flt for _, _, flt, _ in items]
+            futures = [f for _, _, _, f in items]
+            any_filtered = any(f is not None for f in filters)
             try:
                 report = self.coordinator.probe_batch(
                     self.table_name,
                     queries,
                     k,
                     strategy=self.strategy,
+                    filter=filters if any_filtered else None,
                     **self.probe_kwargs,
                 )
             except Exception as exc:  # propagate to every waiter
@@ -167,6 +210,7 @@ class ProbeMicroBatcher:
                 continue
             self.stats.batches += 1
             self.stats.queries += len(items)
+            self.stats.filtered_queries += sum(1 for f in filters if f is not None)
             self.stats.max_batch_seen = max(self.stats.max_batch_seen, len(items))
             for f, hits in zip(futures, report.hits):
                 f.set_result(hits)

@@ -144,3 +144,40 @@ def test_orphan_gc(table):
     # table still readable at the retained snapshot
     vecs, _ = table.scan_vectors()
     assert vecs.shape[0] == 60
+
+
+def test_snapshot_as_of_edge_cases():
+    """Time-travel edges: before the first snapshot raises; an exact
+    boundary timestamp is inclusive; equal timestamps break ties by
+    sequence number (the later commit wins)."""
+    from repro.iceberg.snapshot import Snapshot, TableMetadata
+
+    snaps = [
+        Snapshot(1, None, 1, 1000, "ml1", "append"),
+        Snapshot(2, 1, 2, 2000, "ml2", "append"),
+    ]
+    meta = TableMetadata("u", "loc", {}, 0, 2, snaps)
+    with pytest.raises(KeyError):
+        meta.snapshot_as_of(999)
+    assert meta.snapshot_as_of(1000).snapshot_id == 1  # exact boundary
+    assert meta.snapshot_as_of(1999).snapshot_id == 1
+    assert meta.snapshot_as_of(2000).snapshot_id == 2
+    assert meta.snapshot_as_of(10**15).snapshot_id == 2
+    # same-millisecond commits: sequence number breaks the tie
+    meta.snapshots.append(Snapshot(3, 2, 3, 2000, "ml3", "append"))
+    assert meta.snapshot_as_of(2000).snapshot_id == 3
+
+
+def test_catalog_expire_snapshots_commit(table):
+    table.append_vectors(_vecs(30), num_files=1)
+    table.append_vectors(_vecs(30, seed=1), num_files=1)
+    table.append_vectors(_vecs(30, seed=2), num_files=1)
+    before = table.metadata()
+    assert len(before.snapshots) == 3
+    meta = table.catalog.expire_snapshots("t", keep_last=2)
+    assert len(meta.snapshots) == 2
+    assert meta.version == before.version + 1  # a real metadata commit
+    # the expiration is what every reader now sees
+    assert len(table.catalog.load_table("t").snapshots) == 2
+    with pytest.raises(ValueError):
+        table.catalog.expire_snapshots("t", keep_last=0)

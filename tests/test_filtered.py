@@ -1,0 +1,504 @@
+"""Filtered vector search: attribute predicates through the probe path.
+
+Contracts under test:
+
+- **oracle parity** — a filtered ``probe`` / ``probe_batch`` returns exactly
+  the brute-force scan + post-filter oracle's top-k, across selectivities
+  ~0.9 (over-fetched post-filter plan), ~0.3 (filter-aware masked beam) and
+  ~0.01 (pre-filter exact scan);
+- **zone-map pruning** — on an attribute-correlated layout, a
+  high-selectivity predicate prunes whole shards before dispatch
+  (``ProbeReport.shards_pruned`` / fewer ``probe_fragments``);
+- **coalescing** — per-query predicates survive fragment coalescing, so
+  filtered and unfiltered queries share one batch;
+- **SQL + serving** — the WHERE grammar and the micro-batcher route the
+  same predicates end to end.
+"""
+
+import numpy as np
+import pytest
+
+from repro.runtime.frontend import SqlFrontend, SqlError
+from repro.runtime.predicates import (
+    And,
+    Eq,
+    In,
+    Or,
+    PredicateError,
+    Range,
+    ZoneStats,
+    parse_predicate,
+)
+from repro.serving.serve_loop import ProbeMicroBatcher
+
+
+def _locs(hits):
+    return [(h.file_path, h.row_group, h.row_offset) for h in hits]
+
+
+# ---------------------------------------------------------------------------
+# predicate IR unit tests (no cluster)
+# ---------------------------------------------------------------------------
+
+
+def test_parse_predicate_shapes():
+    p = parse_predicate("category = 'news' AND price < 10 OR price >= 90")
+    assert isinstance(p, Or)
+    assert isinstance(p.children[0], And)
+    assert p.children[0].children[0] == Eq("category", "news")
+    assert p.children[0].children[1] == Range("price", hi=10, hi_inclusive=False)
+    assert p.children[1] == Range("price", lo=90)
+    assert parse_predicate("x IN (1, 2, 3)") == In("x", (1, 2, 3))
+    assert parse_predicate("x BETWEEN 5 AND 9") == Range("x", lo=5, hi=9)
+    assert parse_predicate("(a = 1 OR b = 2) AND c = 3").children[0] == Or(
+        (Eq("a", 1), Eq("b", 2))
+    )
+    # equal texts parse to equal (and hashable) trees — coalescing groups rely on it
+    assert hash(parse_predicate("a = 'x' AND b < 3")) == hash(
+        parse_predicate("a = 'x' AND b < 3")
+    )
+
+
+def test_parse_predicate_rejects():
+    for bad in ["", "price <", "price != 3", "category = ", "x BETWEEN 'a' AND 'b'",
+                "price < 'cheap'", "x IN ()", "(a = 1"]:
+        with pytest.raises(PredicateError):
+            parse_predicate(bad)
+
+
+def test_predicate_evaluate_and_dictionary():
+    cat_codes = np.array([0, 1, 2, 1, 0], np.int32)
+    price = np.array([5, 50, 95, 20, 70], np.int64)
+    cols = {"category": cat_codes, "price": price}
+    dicts = {"category": ["books", "games", "news"]}
+    np.testing.assert_array_equal(
+        Eq("category", "games").evaluate(cols, dicts), [False, True, False, True, False]
+    )
+    # value absent from the file's dictionary matches nothing
+    assert not Eq("category", "zzz").evaluate(cols, dicts).any()
+    np.testing.assert_array_equal(
+        And((In("category", ("books", "news")), Range("price", hi=70))).evaluate(
+            cols, dicts
+        ),
+        [True, False, False, False, True],
+    )
+
+
+def test_type_mismatch_is_conservative():
+    """A string literal against a numeric column matches nothing (and never
+    crashes the coordinator); numeric zones reject it outright."""
+    price = {"price": np.array([1, 2, 3], np.int64)}
+    assert not Eq("price", "cheap").evaluate(price).any()
+    assert not In("price", ("a", "b")).evaluate(price).any()
+    zones = {"price": ZoneStats(count=3, min=1, max=3)}
+    assert Eq("price", "cheap").zone_may_match(zones) is False
+    assert Eq("price", "cheap").estimate_fraction(zones) == 0.0
+    # range over a string/dictionary column: matches nothing, prunes cleanly
+    tags = {"tag": np.asarray(["a", "b", "c"])}
+    assert not Range("tag", hi=5).evaluate(tags).any()
+    dict_zones = {"tag": ZoneStats(count=3, values={"a": 1, "b": 2})}
+    assert Range("tag", hi=5).zone_may_match(dict_zones) is False
+    assert Range("tag", hi=5).estimate_fraction(dict_zones) == 0.0
+
+
+def test_zone_pruning_logic():
+    zones = {
+        "price": ZoneStats(count=100, min=10, max=20),
+        "category": ZoneStats(count=100, values={"a": 60, "b": 40}),
+    }
+    assert Range("price", hi=9, hi_inclusive=False).zone_may_match(zones) is False
+    assert Range("price", hi=10).zone_may_match(zones) is True
+    assert Range("price", lo=21).zone_may_match(zones) is False
+    assert Eq("category", "c").zone_may_match(zones) is False
+    assert Eq("category", "a").zone_may_match(zones) is True
+    assert And((Eq("category", "a"), Range("price", lo=25))).zone_may_match(zones) is False
+    assert Or((Eq("category", "c"), Eq("category", "b"))).zone_may_match(zones) is True
+    # selectivity estimates: dict columns are exact, ranges interpolate
+    assert Eq("category", "a").estimate_fraction(zones) == pytest.approx(0.6)
+    assert Range("price", lo=10, hi=15).estimate_fraction(zones) == pytest.approx(0.5)
+    # unknown column: conservatively matches
+    assert Eq("other", 1).zone_may_match(zones) is True
+
+
+# ---------------------------------------------------------------------------
+# cluster fixtures
+# ---------------------------------------------------------------------------
+
+DIM = 16
+
+
+@pytest.fixture(scope="module")
+def filtered_cluster(tmp_path_factory):
+    """Mildly-clustered corpus (connected shard graphs → beam paths are
+    effectively exhaustive at generous L) with uncorrelated attributes —
+    the oracle-parity fixture.  ``price`` is uniform on [0, 100) so WHERE
+    fragments dial selectivity directly."""
+    from repro.lakehouse.table import LakehouseTable
+    from repro.runtime.cluster import make_local_cluster
+    from repro.runtime.coordinator import IndexConfig
+
+    rng = np.random.default_rng(0)
+    c = make_local_cluster(str(tmp_path_factory.mktemp("filtered")), num_executors=3)
+    t = LakehouseTable(c.catalog, "emb")
+    t.create(dim=DIM)
+    centers = rng.normal(size=(8, DIM))  # scale 1: clusters overlap
+    X = np.concatenate(
+        [ctr + rng.normal(size=(120, DIM)) for ctr in centers]
+    ).astype(np.float32)
+    category = np.asarray([f"c{i}" for i in rng.integers(0, 8, size=len(X))])
+    price = rng.integers(0, 100, size=len(X)).astype(np.int64)
+    t.append_vectors(
+        X, num_files=4, rows_per_group=80,
+        attributes={"category": category, "price": price},
+    )
+    rep = c.coordinator.create_index(
+        "emb",
+        IndexConfig(name="idx", R=24, L=48, partitions_per_shard=2, build_passes=2),
+    )
+    return c, t, X, category, price, rep
+
+
+@pytest.fixture(scope="module")
+def zoned_cluster(tmp_path_factory):
+    """Strongly-clustered corpus written in cluster order with the category
+    following the cluster — attribute-homogeneous row groups, so zone maps
+    can prune whole shards."""
+    from repro.lakehouse.table import LakehouseTable
+    from repro.runtime.cluster import make_local_cluster
+    from repro.runtime.coordinator import IndexConfig
+
+    rng = np.random.default_rng(1)
+    c = make_local_cluster(str(tmp_path_factory.mktemp("zoned")), num_executors=3)
+    t = LakehouseTable(c.catalog, "emb")
+    t.create(dim=DIM)
+    centers = rng.normal(size=(12, DIM)) * 4.0
+    X = np.concatenate(
+        [ctr + rng.normal(size=(100, DIM)) for ctr in centers]
+    ).astype(np.float32)
+    category = np.repeat([f"c{i}" for i in range(12)], 100)
+    price = rng.integers(0, 100, size=len(X)).astype(np.int64)
+    t.append_vectors(
+        X, num_files=6, rows_per_group=100,
+        attributes={"category": category, "price": price},
+    )
+    rep = c.coordinator.create_index(
+        "emb",
+        IndexConfig(name="idx", R=16, L=48, partitions_per_shard=3, build_passes=1),
+    )
+    return c, t, X, category, price, rep
+
+
+def _queries(X, n, seed):
+    rng = np.random.default_rng(seed)
+    return X[rng.choice(len(X), n)] + 0.05 * rng.normal(size=(n, DIM)).astype(
+        np.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# oracle parity across selectivities (the acceptance contract)
+# ---------------------------------------------------------------------------
+
+SELECTIVITY_CASES = [
+    # (WHERE fragment, ~selectivity, plan the planner must choose)
+    ("price < 90", 0.9, "postfilter"),
+    ("price BETWEEN 20 AND 50", 0.3, "mask"),
+    ("price < 1", 0.01, "prefilter"),
+]
+
+
+@pytest.mark.parametrize("where,sel,plan", SELECTIVITY_CASES)
+def test_filtered_probe_matches_oracle(filtered_cluster, where, sel, plan):
+    c, t, X, category, price, rep = filtered_cluster
+    Q = _queries(X, 4, seed=7)
+    oracle = c.coordinator.probe("emb", Q, 10, strategy="scan", filter=where)
+    got = c.coordinator.probe("emb", Q, 10, strategy="diskann", filter=where, L=256)
+    assert got.filtered and oracle.filtered
+    assert plan in got.filter_plan
+    assert got.est_selectivity == pytest.approx(sel, abs=0.12)
+    for a, b in zip(oracle.hits, got.hits):
+        assert _locs(a) == _locs(b)
+
+
+@pytest.mark.parametrize("where,sel,plan", SELECTIVITY_CASES)
+def test_filtered_probe_batch_matches_oracle(filtered_cluster, where, sel, plan):
+    c, t, X, category, price, rep = filtered_cluster
+    Q = _queries(X, 4, seed=11)
+    oracle = c.coordinator.probe("emb", Q, 10, strategy="scan", filter=where)
+    got = c.coordinator.probe_batch("emb", Q, 10, strategy="diskann", filter=where, L=256)
+    assert got.batch_size == len(Q) and got.filtered
+    assert plan in got.filter_plan
+    for a, b in zip(oracle.hits, got.hits):
+        assert _locs(a) == _locs(b)
+
+
+def test_filtered_scan_and_centroid_paths(filtered_cluster):
+    """The coordinator-tier paths apply predicates in their masks: scan is
+    the oracle itself; a full-fanout centroid probe must agree with it."""
+    c, t, X, category, price, rep = filtered_cluster
+    Q = _queries(X, 3, seed=13)
+    where = "category IN ('c1', 'c2') AND price < 60"
+    oracle = c.coordinator.probe("emb", Q, 8, strategy="scan", filter=where)
+    cent = c.coordinator.probe("emb", Q, 8, strategy="centroid", n_probe=10**9, filter=where)
+    for a, b in zip(oracle.hits, cent.hits):
+        assert _locs(a) == _locs(b)
+    # every returned row satisfies the predicate (cross-checked on raw data)
+    attrs = t.scan_attributes()
+    vecs_all, locs_all = t.scan_vectors()
+    by_loc = {
+        (l.file_path, l.row_group_id, l.row_offset): i for i, l in enumerate(locs_all)
+    }
+    for hits in cent.hits:
+        for h in hits:
+            i = by_loc[(h.file_path, h.row_group, h.row_offset)]
+            assert attrs["category"][i] in ("c1", "c2") and attrs["price"][i] < 60
+
+
+def test_filter_with_no_matches(filtered_cluster):
+    c, t, X, category, price, rep = filtered_cluster
+    got = c.coordinator.probe("emb", X[0], 5, filter="price > 1000")
+    assert got.hits[0] == []
+    gotb = c.coordinator.probe_batch("emb", X[:3], 5, filter="category = 'nope'")
+    assert all(h == [] for h in gotb.hits)
+
+
+def test_mixed_filtered_unfiltered_batch(filtered_cluster):
+    """Per-query predicates survive fragment coalescing: a batch mixing
+    filtered and unfiltered queries returns exactly what per-query probes
+    return, while still coalescing to ≤ one fragment per shard."""
+    c, t, X, category, price, rep = filtered_cluster
+    Q = _queries(X, 5, seed=17)
+    filters = [None, "price < 40", None, "category = 'c3'", "price < 40"]
+    stats = c.coordinator.scheduler.stats
+    offered0 = stats.probe_fragments_offered
+    br = c.coordinator.probe_batch("emb", Q, 5, strategy="diskann", filter=filters, L=256)
+    offered = stats.probe_fragments_offered - offered0
+    assert br.probe_fragments <= rep.num_shards  # coalescing still collapses
+    assert offered == len(Q) * rep.num_shards
+    seq = [
+        c.coordinator.probe("emb", Q[i], 5, strategy="diskann", filter=filters[i], L=256).hits[0]
+        for i in range(len(Q))
+    ]
+    for a, b in zip(seq, br.hits):
+        assert _locs(a) == _locs(b)
+
+
+def test_mixed_filter_centroid_batch_matches_sequential(filtered_cluster):
+    """Regression: heterogeneous-filter batches on the CENTROID path must
+    keep per-query file ownership — with a small n_probe, a query's hits
+    may not include rows from files only another group member routed to."""
+    c, t, X, category, price, rep = filtered_cluster
+    Q = _queries(X, 4, seed=23)
+    filters = ["price < 50", "price < 50", "price >= 50", None]
+    br = c.coordinator.probe_batch(
+        "emb", Q, 5, strategy="centroid", n_probe=2, filter=filters
+    )
+    seq = [
+        c.coordinator.probe(
+            "emb", Q[i], 5, strategy="centroid", n_probe=2, filter=filters[i]
+        ).hits[0]
+        for i in range(len(Q))
+    ]
+    for a, b in zip(seq, br.hits):
+        assert _locs(a) == _locs(b)
+
+
+def test_filtered_probe_on_mixed_schema_appends(filtered_cluster):
+    """Regression: files appended WITHOUT an attribute column must not
+    crash filtered probes — they simply contribute no matches on that
+    column, identically on the oracle and index paths.  scan_attributes
+    keeps row alignment by filling the gap."""
+    from repro.lakehouse.table import LakehouseTable
+    from repro.runtime.cluster import make_local_cluster
+    from repro.runtime.coordinator import IndexConfig
+
+    import tempfile
+
+    rng = np.random.default_rng(31)
+    c = make_local_cluster(tempfile.mkdtemp(), num_executors=2)
+    t = LakehouseTable(c.catalog, "mix")
+    t.create(dim=8)
+    X1 = rng.normal(size=(200, 8)).astype(np.float32)
+    t.append_vectors(X1, num_files=2, rows_per_group=64,
+                     attributes={"price": rng.integers(0, 100, 200).astype(np.int64)})
+    X2 = rng.normal(size=(100, 8)).astype(np.float32)
+    t.append_vectors(X2, num_files=1, rows_per_group=64)  # no attributes
+    c.coordinator.create_index(
+        "mix", IndexConfig(name="i", R=12, L=24, partitions_per_shard=2, build_passes=1)
+    )
+    oracle = c.coordinator.probe("mix", X1[0], 5, strategy="scan", filter="price < 50")
+    got = c.coordinator.probe("mix", X1[0], 5, strategy="diskann", filter="price < 50", L=128)
+    assert _locs(got.hits[0]) == _locs(oracle.hits[0])
+    # a predicate over a non-scalar column (the vector itself) matches
+    # nothing — identically on both paths, instead of crashing executors
+    assert c.coordinator.probe("mix", X1[0], 5, filter="vec = 1").hits[0] == []
+    assert c.coordinator.probe("mix", X1[0], 5, strategy="scan", filter="vec = 1").hits[0] == []
+    assert all("data-00002" not in h.file_path for h in got.hits[0])
+    attrs = t.scan_attributes()
+    _, locs_all = t.scan_vectors()
+    assert len(attrs["price"]) == len(locs_all) == 300  # alignment held
+    assert all(v is None for v in attrs["price"][-100:])  # gap filled, not dropped
+    # object fill preserves exact int64 values (no float promotion)
+    assert attrs["price"].dtype == object
+    assert all(isinstance(v, (int, np.integer)) for v in attrs["price"][:200])
+
+
+# ---------------------------------------------------------------------------
+# zone-map pruning
+# ---------------------------------------------------------------------------
+
+
+def test_zonemap_prunes_shards(zoned_cluster):
+    """High-selectivity predicate on the cluster-correlated attribute: the
+    zone map must drop whole shards before dispatch, and the surviving
+    plan must still return exactly the oracle's rows."""
+    c, t, X, category, price, rep = zoned_cluster
+    Q = _queries(X, 4, seed=3)
+    where = "category = 'c5' AND price < 40"
+    unfiltered = c.coordinator.probe_batch("emb", Q, 10, strategy="diskann")
+    got = c.coordinator.probe_batch("emb", Q, 10, strategy="diskann", filter=where)
+    assert got.filtered
+    assert got.shards_pruned >= 1
+    # per-(query, shard) fragments dropped before coalescing: every query
+    # skips each zone-pruned shard
+    assert got.fragments_pruned == got.shards_pruned * len(Q)
+    assert got.probe_fragments < unfiltered.probe_fragments
+    oracle = c.coordinator.probe("emb", Q, 10, strategy="scan", filter=where)
+    for a, b in zip(oracle.hits, got.hits):
+        assert _locs(a) == _locs(b)
+    # single-query path prunes identically
+    single = c.coordinator.probe("emb", Q[0], 10, strategy="diskann", filter=where)
+    assert single.shards_pruned == got.shards_pruned
+    assert _locs(single.hits[0]) == _locs(oracle.hits[0])
+
+
+def test_zonemap_row_group_pruning_on_centroid_path(zoned_cluster):
+    c, t, X, category, price, rep = zoned_cluster
+    Q = _queries(X, 2, seed=5)
+    where = "category = 'c2'"
+    got = c.coordinator.probe(
+        "emb", Q, 5, strategy="centroid", n_probe=10**9, filter=where
+    )
+    assert got.row_groups_pruned > 0  # zones skipped before any attribute read
+    oracle = c.coordinator.probe("emb", Q, 5, strategy="scan", filter=where)
+    for a, b in zip(oracle.hits, got.hits):
+        assert _locs(a) == _locs(b)
+
+
+def test_filtered_survives_refresh(tmp_path):
+    """Append + REFRESH rebuilds the zone map against the new snapshot
+    (reusing prior zones for unchanged files, scanning only the appended
+    ones): filtered probes over the refreshed index still match the oracle
+    and cover the new rows.  Own cluster — this test mutates the table."""
+    from repro.core.blobs import ATTR_ZONEMAP_BLOB_TYPE
+    from repro.lakehouse.table import LakehouseTable
+    from repro.runtime.cluster import make_local_cluster
+    from repro.runtime.coordinator import IndexConfig
+
+    rng = np.random.default_rng(9)
+    c = make_local_cluster(str(tmp_path), num_executors=2)
+    t = LakehouseTable(c.catalog, "emb")
+    t.create(dim=DIM)
+    centers = rng.normal(size=(6, DIM)) * 4.0
+    X = np.concatenate(
+        [ctr + rng.normal(size=(80, DIM)) for ctr in centers]
+    ).astype(np.float32)
+    t.append_vectors(
+        X, num_files=3, rows_per_group=80,
+        attributes={
+            "category": np.repeat([f"c{i}" for i in range(6)], 80),
+            "price": rng.integers(0, 100, size=len(X)).astype(np.int64),
+        },
+    )
+    c.coordinator.create_index(
+        "emb", IndexConfig(name="idx", R=16, L=32, partitions_per_shard=2, build_passes=1)
+    )
+    X_new = (X[:80] + 0.02 * rng.normal(size=(80, DIM))).astype(np.float32)
+    t.append_vectors(
+        X_new, num_files=1, rows_per_group=80,
+        attributes={
+            "category": np.asarray(["c_new"] * 80),
+            "price": rng.integers(0, 100, size=80).astype(np.int64),
+        },
+    )
+    rr = c.coordinator.refresh_index("emb", "idx")
+    assert rr.inserted == 80
+    meta, snap, path, reader = c.coordinator._resolve_index("emb")
+    assert reader.blobs_of_type(ATTR_ZONEMAP_BLOB_TYPE)
+    # the rebuilt map covers the appended file's category
+    zm = c.coordinator._read_zonemap(reader, path)
+    assert any(
+        "c_new" in z.get("category").values
+        for per_file in zm.zones.values()
+        for z in per_file
+        if z.get("category") is not None and z["category"].values
+    )
+    where = "category = 'c_new'"
+    oracle = c.coordinator.probe("emb", X_new[0], 5, strategy="scan", filter=where)
+    got = c.coordinator.probe("emb", X_new[0], 5, strategy="diskann", filter=where)
+    assert _locs(got.hits[0]) == _locs(oracle.hits[0])
+    assert len(got.hits[0]) == 5
+
+
+# ---------------------------------------------------------------------------
+# SQL frontend + serving
+# ---------------------------------------------------------------------------
+
+
+def test_frontend_where_grammar(filtered_cluster):
+    c, t, X, category, price, rep = filtered_cluster
+    fe = SqlFrontend(c.coordinator)
+    q = ",".join(str(float(v)) for v in X[3])
+    hits = fe.execute(
+        f"SELECT * FROM emb WHERE category = 'c1' AND price < 50 "
+        f"ORDER BY L2_DISTANCE(vec, [{q}]) LIMIT 5"
+    )
+    oracle = c.coordinator.probe(
+        "emb", X[3], 5, strategy="scan", filter="category = 'c1' AND price < 50"
+    )
+    assert _locs(hits) == _locs(oracle.hits[0])
+    # unfiltered grammar unchanged; threshold grammar not shadowed by WHERE
+    assert len(fe.execute(f"SELECT * FROM emb ORDER BY L2_DISTANCE(vec, [{q}]) LIMIT 5")) == 5
+    with pytest.raises(SqlError):
+        fe.execute(f"SELECT * FROM emb WHERE bogus ~ 3 ORDER BY L2_DISTANCE(vec, [{q}]) LIMIT 5")
+
+
+def test_frontend_execute_many_mixed_filters(filtered_cluster):
+    c, t, X, category, price, rep = filtered_cluster
+    fe = SqlFrontend(c.coordinator)
+    qs = [",".join(str(float(v)) for v in X[i]) for i in range(4)]
+    sqls = [
+        f"SELECT * FROM emb ORDER BY L2_DISTANCE(vec, [{qs[0]}]) LIMIT 5",
+        f"SELECT * FROM emb WHERE price < 30 ORDER BY L2_DISTANCE(vec, [{qs[1]}]) LIMIT 5",
+        f"SELECT * FROM emb WHERE category = 'c2' ORDER BY L2_DISTANCE(vec, [{qs[2]}]) LIMIT 5",
+        f"SELECT * FROM emb ORDER BY L2_DISTANCE(vec, [{qs[3]}]) LIMIT 5",
+    ]
+    stats = c.coordinator.scheduler.stats
+    d0 = stats.dispatched
+    batched = fe.execute_many(sqls)
+    frags_batched = stats.dispatched - d0
+    single = [fe.execute(s) for s in sqls]
+    for a, b in zip(single, batched):
+        assert _locs(a) == _locs(b)
+    frags_single = stats.dispatched - d0 - frags_batched
+    assert frags_batched < frags_single  # one coalesced wave for the block
+
+
+def test_micro_batcher_filtered_and_unfiltered_together(filtered_cluster):
+    c, t, X, category, price, rep = filtered_cluster
+    with ProbeMicroBatcher(c.coordinator, "emb", max_batch=8, max_wait_s=0.1) as mb:
+        futs = [
+            mb.submit(X[0], k=5),
+            mb.submit(X[1], k=5, filter="price < 30"),
+            mb.submit(X[2], k=5, filter="category = 'c1'"),
+        ]
+        got = [f.result() for f in futs]
+    assert mb.stats.filtered_queries == 2
+    assert mb.stats.batches <= 2  # they shared batch probes
+    expect = [
+        c.coordinator.probe("emb", X[0], 5).hits[0],
+        c.coordinator.probe("emb", X[1], 5, filter="price < 30").hits[0],
+        c.coordinator.probe("emb", X[2], 5, filter="category = 'c1'").hits[0],
+    ]
+    for a, b in zip(expect, got):
+        assert _locs(a) == _locs(b)

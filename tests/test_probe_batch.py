@@ -139,3 +139,56 @@ def test_frontend_batcher_attachment(built_cluster):
     with ProbeMicroBatcher(c.coordinator, "emb", max_wait_s=0.01) as mb:
         via_batcher = SqlFrontend(c.coordinator, batcher=mb).execute(sql)
     _assert_same_hits([plain], [via_batcher])
+
+
+def test_micro_batcher_adaptive_sizing():
+    """Adaptive sizing unit contract: a full drain with backlog doubles
+    max_batch (up to the cap), a light drain with an idle queue halves it
+    (down to the floor), steady state holds."""
+    from concurrent.futures import Future
+
+    import queue as queue_mod
+
+    from repro.runtime.coordinator import ProbeReport
+
+    class _StubCoordinator:
+        def probe_batch(self, table, queries, k, **kw):
+            return ProbeReport(
+                hits=[[] for _ in range(queries.shape[0])],
+                strategy="stub", files_scanned=0, bytes_read=0,
+            )
+
+    mb = ProbeMicroBatcher(
+        _StubCoordinator(), "t", max_batch=8, adaptive=True,
+        min_batch=2, max_batch_cap=64,
+    )
+    mb._adapt(8, 4)
+    assert mb.max_batch == 16 and mb.stats.grows == 1
+    mb._adapt(16, 1)
+    assert mb.max_batch == 32
+    mb._adapt(20, 0)            # steady state: no resize
+    assert mb.max_batch == 32
+    mb._adapt(4, 0)
+    assert mb.max_batch == 16 and mb.stats.shrinks == 1
+    for _ in range(4):
+        mb._adapt(1, 0)
+    assert mb.max_batch == 2     # floored at min_batch
+    mb.max_batch = 64
+    mb._adapt(64, 10)
+    assert mb.max_batch == 64    # capped at max_batch_cap
+
+    # end-to-end: a pre-filled backlog grows the window on the first drains
+    mb2 = ProbeMicroBatcher(
+        _StubCoordinator(), "t", max_batch=4, adaptive=True,
+        min_batch=2, max_batch_cap=64, max_wait_s=0.01,
+    )
+    futs = []
+    for i in range(40):
+        f = Future()
+        mb2._queue.put((np.zeros(4, np.float32), 5, None, f))
+        futs.append(f)
+    with mb2:
+        for f in futs:
+            assert f.result(timeout=5.0) == []
+    assert mb2.stats.grows >= 1
+    assert mb2.max_batch > 4

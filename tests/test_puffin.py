@@ -128,3 +128,78 @@ def test_property_roundtrip(payloads, codec):
     assert len(r.blobs) == len(payloads)
     for i, p in enumerate(payloads):
         assert r.read_first(f"t{i}") == p
+
+
+def _tiny_shard():
+    import numpy as np
+    from repro.core.blobs import ShardLocationMap
+    from repro.core.vamana import VamanaParams, build_vamana
+
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(48, 8)).astype(np.float32)
+    graph = build_vamana(vecs, VamanaParams(R=8, L=16, alpha=1.2, metric="l2"),
+                         passes=1, batch=48)
+    n = graph.n
+    locmap = ShardLocationMap(
+        ["f0"],
+        np.zeros(n, np.uint32),
+        np.zeros(n, np.uint32),
+        np.arange(n, dtype=np.uint32),
+    )
+    return graph, locmap
+
+
+@pytest.mark.parametrize("force_zlib", [False, True],
+                         ids=["env-codec", "zlib-fallback"])
+def test_shard_blob_codec_roundtrip(monkeypatch, force_zlib):
+    """DANN shard blobs roundtrip under the environment codec (zstd when
+    available) AND under the zlib fallback path the module falls back to
+    when zstandard is absent."""
+    import zlib
+
+    import numpy as np
+    from repro.core import blobs as B
+
+    if force_zlib:
+        monkeypatch.setattr(B, "_c", lambda b: zlib.compress(b, 6))
+        monkeypatch.setattr(B, "_d", zlib.decompress)
+    graph, locmap = _tiny_shard()
+    blob = B.encode_shard_blob(graph, locmap, include_vectors=True)
+    g2, lm2 = B.decode_shard_blob(blob)
+    assert g2.n == graph.n and g2.medoid == graph.medoid
+    np.testing.assert_allclose(g2.vectors[: graph.n], graph.vectors[: graph.n])
+    np.testing.assert_array_equal(g2.adjacency[: graph.n], graph.adjacency[: graph.n])
+    assert lm2.file_paths == locmap.file_paths
+    np.testing.assert_array_equal(lm2.row_offset, locmap.row_offset)
+
+
+@pytest.mark.parametrize("force_zlib", [False, True],
+                         ids=["env-codec", "zlib-fallback"])
+def test_zonemap_blob_codec_roundtrip(monkeypatch, force_zlib):
+    import zlib
+
+    from repro.core import blobs as B
+    from repro.runtime.predicates import ZoneStats
+
+    if force_zlib:
+        monkeypatch.setattr(B, "_c", lambda b: zlib.compress(b, 6))
+        monkeypatch.setattr(B, "_d", zlib.decompress)
+    zm = B.AttrZoneMap(
+        columns={"price": "int", "category": "dict"},
+        zones={
+            "f0": [
+                {"price": ZoneStats(count=10, min=1, max=9),
+                 "category": ZoneStats(count=10, values={"a": 4, "b": 6})},
+                {"price": ZoneStats(count=5, min=50, max=99),
+                 "category": ZoneStats(count=5, values={"c": 5})},
+            ]
+        },
+        shard_membership={0: [("f0", 0)], 1: [("f0", 0), ("f0", 1)]},
+    )
+    zm2 = B.decode_zonemap_blob(B.encode_zonemap_blob(zm))
+    assert zm2.columns == zm.columns
+    assert zm2.shard_membership == zm.shard_membership
+    assert zm2.zones["f0"][0]["category"].values == {"a": 4, "b": 6}
+    assert zm2.zones["f0"][1]["price"].min == 50
+    assert zm2.shard_zones(1) == zm.zones["f0"]
+    assert zm2.shard_zones(9) is None

@@ -85,3 +85,38 @@ def test_full_lifecycle(tmp_path):
     orphans = expire_and_collect(c.store, c.catalog.load_table("docs"), keep_last=1, delete=False)
     assert rep.puffin_path in orphans
     assert rr.puffin_path not in orphans
+
+
+def test_refresh_then_committed_expire_collects_old_puffin(tmp_path):
+    """Regression (refresh_index ↔ gc interplay): after a REFRESH commit the
+    superseded index Puffin must be collectible — and actually deletable —
+    via a *committed* expiration.  The uncommitted form left the catalog
+    serving expired snapshots whose backing objects were gone (time travel
+    crashed with NoSuchKey after delete=True)."""
+    rng = np.random.default_rng(2)
+    c = make_local_cluster(str(tmp_path), num_executors=2)
+    t = LakehouseTable(c.catalog, "docs")
+    t.create(dim=8)
+    X = rng.normal(size=(400, 8)).astype(np.float32)
+    t.append_vectors(X, num_files=3, rows_per_group=64)
+    rep = c.coordinator.create_index(
+        "docs", IndexConfig(name="v", R=12, L=24, partitions_per_shard=2, build_passes=1)
+    )
+    t.append_vectors(rng.normal(size=(100, 8)).astype(np.float32), num_files=1)
+    rr = c.coordinator.refresh_index("docs", "v")
+    assert rr.puffin_path != rep.puffin_path
+
+    # committed expiration: the catalog's served metadata agrees with storage
+    orphans = expire_and_collect(
+        c.store, c.catalog.load_table("docs"), keep_last=1, delete=True,
+        catalog=c.catalog, table_name="docs",
+    )
+    assert rep.puffin_path in orphans       # superseded index reaped
+    assert rr.puffin_path not in orphans    # live index untouched
+    meta = c.catalog.load_table("docs")
+    assert len(meta.snapshots) == 1         # expiration is visible to readers
+    assert meta.current_snapshot().statistics_file == rr.puffin_path
+
+    # the refreshed index still probes after the sweep deleted the orphans
+    pr = c.coordinator.probe("docs", X[:3], 5, strategy="diskann")
+    assert all(len(h) == 5 for h in pr.hits)

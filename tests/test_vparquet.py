@@ -71,3 +71,49 @@ def test_property_roundtrip(n, d, rows_per_group):
     # per-group reads concatenate to the whole
     parts = [r.read_column("vec", [g]) for g in range(r.num_row_groups)]
     np.testing.assert_allclose(np.concatenate(parts), vecs)
+
+
+def test_attribute_columns_and_dictionary_encoding(tmp_store, rng):
+    """String attribute columns dictionary-encode per file: stored ints are
+    codes into the footer's value table; numeric attributes store raw."""
+    vecs = rng.normal(size=(200, 8)).astype(np.float32)
+    cat = np.asarray(["news", "games", "books", "games"] * 50)
+    price = rng.integers(0, 100, size=200).astype(np.int64)
+    write_vector_file(
+        tmp_store, "a.vpq", vecs, rows_per_group=64,
+        extra_columns={"category": cat, "price": price},
+    )
+    r = VParquetReader.from_store(tmp_store, "a.vpq")
+    spec = r.columns["category"]
+    assert spec.dtype == "int32"
+    assert spec.dictionary == ["books", "games", "news"]  # sorted uniques
+    codes = r.read_column("category")
+    decoded = np.asarray(spec.dictionary, dtype=object)[codes]
+    np.testing.assert_array_equal(decoded.astype(str), cat)
+    assert r.columns["price"].dictionary is None
+    np.testing.assert_array_equal(r.read_column("price"), price)
+    # row-group projection of attribute columns works like any column
+    np.testing.assert_array_equal(r.read_column("price", [1]), price[64:128])
+
+
+def test_table_append_scan_attributes(tmp_store, rng):
+    from repro.iceberg.catalog import RestCatalog
+    from repro.lakehouse.table import LakehouseTable
+
+    cat = RestCatalog(tmp_store)
+    t = LakehouseTable(cat, "t")
+    t.create(dim=8)
+    vecs = rng.normal(size=(120, 8)).astype(np.float32)
+    tags = np.asarray([f"t{i % 5}" for i in range(120)])
+    price = rng.integers(0, 10, size=120).astype(np.int64)
+    t.append_vectors(vecs, num_files=3, rows_per_group=32,
+                     attributes={"tag": tags, "price": price})
+    attrs = t.scan_attributes()
+    _, locs = t.scan_vectors()
+    assert len(attrs["tag"]) == len(locs) == 120
+    # row alignment with scan_vectors: files are written by index split
+    np.testing.assert_array_equal(attrs["price"], price)
+    np.testing.assert_array_equal(attrs["tag"].astype(str), tags)
+    assert set(t.attribute_schema()) == {"tag", "price"}
+    with pytest.raises(ValueError):
+        t.append_vectors(vecs, attributes={"short": price[:5]})
