@@ -47,6 +47,30 @@ def main() -> None:
     delta = float(jnp.abs(small_p - small_r).max())
     emit("kernel.pq_scan", s * 1e6, f"glookups_{lut_ops/s/1e9:.2f}_pallas_delta_{delta:.2e}")
 
+    # masked exact top-k: 64 queries × 32768 points × 96 d, ~30% selectivity
+    # (the filtered-probe Stage-A kernel: mask fused before the in-kernel
+    # per-tile top-k — no pool widening, no post-hoc filter)
+    Qm = jnp.asarray(rng.normal(size=(64, 96)).astype(np.float32))
+    Xm = jnp.asarray(rng.normal(size=(32768, 96)).astype(np.float32))
+    mask = jnp.asarray(rng.random(32768) < 0.3)
+    s, _ = _bench(lambda a, b, m: ops.masked_exact_topk(a, b, m, 40, backend="ref"), Qm, Xm, mask)
+    flops = 2 * 64 * 32768 * 96
+    dp, _ = ops.masked_exact_topk(Qm[:8], Xm[:256], mask[:256], 10, backend="pallas")
+    dr, _ = ops.masked_exact_topk(Qm[:8], Xm[:256], mask[:256], 10, backend="ref")
+    dp, dr = np.asarray(dp), np.asarray(dr)
+    delta = float(np.abs(np.where(np.isinf(dp), 0, dp) - np.where(np.isinf(dr), 0, dr)).max())
+    emit("kernel.masked_exact_topk", s * 1e6, f"gflops_{flops/s/1e9:.1f}_pallas_delta_{delta:.2e}")
+
+    # masked PQ-ADC top-k: 16 queries × 65536 codes, m=48 K=256, ~30% pass
+    maskc = jnp.asarray(rng.random(65536) < 0.3)
+    s, _ = _bench(lambda a, b, m: ops.masked_pq_topk(a, b, m, 40, backend="ref"), luts, codes, maskc)
+    lut_ops = 16 * 65536 * 48
+    dp, _ = ops.masked_pq_topk(luts[:2], codes[:256], maskc[:256], 10, backend="pallas", tile_q=2)
+    dr, _ = ops.masked_pq_topk(luts[:2], codes[:256], maskc[:256], 10, backend="ref")
+    dp, dr = np.asarray(dp), np.asarray(dr)
+    delta = float(np.abs(np.where(np.isinf(dp), 0, dp) - np.where(np.isinf(dr), 0, dr)).max())
+    emit("kernel.masked_pq_topk", s * 1e6, f"glookups_{lut_ops/s/1e9:.2f}_pallas_delta_{delta:.2e}")
+
     # k-means assign: 65536 points × 1024 centroids × 96 d
     P = jnp.asarray(rng.normal(size=(65536, 96)).astype(np.float32))
     C = jnp.asarray(rng.normal(size=(1024, 96)).astype(np.float32))

@@ -12,9 +12,16 @@ wave, so its throughput must come out strictly higher.
 
 ``--tiny`` shrinks everything to a seconds-scale smoke run (used by
 scripts/ci.sh to catch query-path regressions).
+
+Every row is also written to ``--json`` (default ``BENCH_query_paths.json``)
+as ``{"rows": {name: {"throughput_qps": ..., "recall": ..., ...}}}`` —
+the machine-readable record scripts/check_bench.py gates CI on (absolute
+floors plus >20% throughput / any-recall regression vs the committed
+baseline in benchmarks/baselines/).
 """
 
 import argparse
+import json
 import time
 
 import numpy as np
@@ -25,7 +32,22 @@ from repro.lakehouse.table import LakehouseTable
 from repro.runtime.coordinator import IndexConfig
 
 
-def main(tiny: bool = False) -> None:
+def _best_of(fn, repeats: int = 3):
+    """Best-of-N wall time for a warm code path.  Single-shot timings of
+    ~10 ms sections swing well past the CI gate's 20% budget from scheduler
+    and allocator noise alone; the minimum over a few repeats is the stable
+    statistic (the true cost plus the least interference)."""
+    best, out = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def main(tiny: bool = False, json_path: str = "BENCH_query_paths.json") -> None:
+    rows: dict = {}  # row name -> machine-readable fields for check_bench
+
     rng = np.random.default_rng(0)
     if tiny:
         n_vec, n_files, n_exec, D, n_clusters = 2_048, 8, 2, 32, 16
@@ -96,14 +118,17 @@ def main(tiny: bool = False) -> None:
         pr_cold = c.coordinator.probe("bench", Q[:1], 10, strategy=probe_strat, **kw)
         cold_s = time.perf_counter() - t0
         # warm, PER QUERY (the paper's Table 2 counts files/bytes per query)
-        hits, files, bytes_ = [], [], []
-        t0 = time.perf_counter()
-        for qi in range(len(Q)):
-            pr = c.coordinator.probe("bench", Q[qi], 10, strategy=probe_strat, **kw)
-            hits.append(pr.hits[0])
-            files.append(pr.files_scanned)
-            bytes_.append(pr.bytes_read)
-        warm_s = (time.perf_counter() - t0) / len(Q)
+        def _warm_loop():
+            hits, files, bytes_ = [], [], []
+            for qi in range(len(Q)):
+                pr = c.coordinator.probe("bench", Q[qi], 10, strategy=probe_strat, **kw)
+                hits.append(pr.hits[0])
+                files.append(pr.files_scanned)
+                bytes_.append(pr.bytes_read)
+            return hits, files, bytes_
+
+        loop_s, (hits, files, bytes_) = _best_of(_warm_loop)
+        warm_s = loop_s / len(Q)
         r = recall(hits)
         results[strat] = (float(np.mean(files)), float(np.mean(bytes_)))
         emit(
@@ -112,6 +137,12 @@ def main(tiny: bool = False) -> None:
             f"files_per_query_{np.mean(files):.1f}_bytes_per_query_{np.mean(bytes_):.0f}"
             f"_cold_ms_{cold_s*1e3:.0f}_warm_ms_{warm_s*1e3:.0f}_recall_{r:.3f}",
         )
+        rows[f"table2.{strat}"] = {
+            "throughput_qps": 1.0 / warm_s,
+            "recall": r,
+            "files_per_query": float(np.mean(files)),
+            "bytes_per_query": float(np.mean(bytes_)),
+        }
     emit(
         "table2.read_reduction",
         0.0,
@@ -124,15 +155,15 @@ def main(tiny: bool = False) -> None:
     # warm both paths (jit + caches already hot from the loop above), then
     # time B sequential probes against ONE probe_batch over the same block
     c.coordinator.probe_batch("bench", Q, 10, strategy="diskann")
-    t0 = time.perf_counter()
-    seq_hits = [
-        c.coordinator.probe("bench", Q[qi], 10, strategy="diskann").hits[0]
-        for qi in range(len(Q))
-    ]
-    seq_s = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    pr_b = c.coordinator.probe_batch("bench", Q, 10, strategy="diskann")
-    batch_s = time.perf_counter() - t0
+    seq_s, seq_hits = _best_of(
+        lambda: [
+            c.coordinator.probe("bench", Q[qi], 10, strategy="diskann").hits[0]
+            for qi in range(len(Q))
+        ]
+    )
+    batch_s, pr_b = _best_of(
+        lambda: c.coordinator.probe_batch("bench", Q, 10, strategy="diskann")
+    )
     seq_qps = len(Q) / seq_s
     batch_qps = len(Q) / batch_s
     # parity check rides along: the batch must return the sequential hits
@@ -148,27 +179,32 @@ def main(tiny: bool = False) -> None:
         f"_speedup_{batch_qps/seq_qps:.2f}x_fragments_{pr_b.probe_fragments}"
         f"_recall_{recall(pr_b.hits):.3f}_parity_{'ok' if same else 'BROKEN'}",
     )
-    if not same:
-        raise SystemExit("regression: batched hits diverge from sequential probes")
-    if batch_qps <= seq_qps:
-        raise SystemExit(
-            f"regression: batched probe throughput {batch_qps:.1f} qps is not "
-            f"above the sequential path {seq_qps:.1f} qps"
-        )
+    rows["table2.batched"] = {
+        "throughput_qps": batch_qps,
+        "seq_qps": seq_qps,
+        "speedup": batch_qps / seq_qps,
+        "recall": recall(pr_b.hits),
+        "parity_ok": bool(same),
+        "probe_fragments": pr_b.probe_fragments,
+    }
 
     # ---- filtered probe vs brute-force post-filter oracle ----------------
     # High-selectivity predicate on the cluster-correlated attribute: the
     # zone map must prune shards (fewer fragments than the unfiltered
     # batch), and recall against the scan+post-filter oracle must stay
-    # ≥ 0.95 (scripts/ci.sh fails otherwise).
+    # ≥ 0.95 — both gated by scripts/check_bench.py on the emitted JSON.
     target = f"cat{int(labels[order][len(X) // 2])}"
     flt = f"category = '{target}' AND price < 90"
-    t0 = time.perf_counter()
-    oracle = c.coordinator.probe("bench", Q, 10, strategy="scan", filter=flt)
-    oracle_s = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    pr_f = c.coordinator.probe_batch("bench", Q, 10, strategy="diskann", filter=flt)
-    filt_s = time.perf_counter() - t0
+    # warm both paths (first call pays one-time jit tracing of the masked
+    # kernels; the row measures steady-state throughput, like the batched row)
+    c.coordinator.probe("bench", Q[:1], 10, strategy="scan", filter=flt)
+    c.coordinator.probe_batch("bench", Q, 10, strategy="diskann", filter=flt)
+    oracle_s, oracle = _best_of(
+        lambda: c.coordinator.probe("bench", Q, 10, strategy="scan", filter=flt)
+    )
+    filt_s, pr_f = _best_of(
+        lambda: c.coordinator.probe_batch("bench", Q, 10, strategy="diskann", filter=flt)
+    )
     truth_f = [
         {(h.file_path, h.row_group, h.row_offset) for h in hits} for hits in oracle.hits
     ]
@@ -185,20 +221,33 @@ def main(tiny: bool = False) -> None:
         f"_vs_unfiltered_{pr_b.probe_fragments}_oracle_ms_{oracle_s*1e3:.0f}"
         f"_filtered_ms_{filt_s*1e3:.0f}_recall_vs_oracle_{recall_f:.3f}",
     )
-    if recall_f < 0.95:
-        raise SystemExit(
-            f"regression: filtered-probe recall vs oracle {recall_f:.3f} < 0.95"
-        )
-    if pr_f.probe_fragments >= pr_b.probe_fragments and pr_f.shards_pruned == 0:
-        raise SystemExit(
-            "regression: zone-map pruning dispatched no fewer shard fragments "
-            f"({pr_f.probe_fragments} vs {pr_b.probe_fragments}) on a "
-            "high-selectivity predicate"
-        )
+    rows["table2.filtered"] = {
+        "throughput_qps": len(Q) / filt_s,
+        "recall": recall_f,
+        "filter_plan": pr_f.filter_plan,
+        "est_selectivity": pr_f.est_selectivity,
+        "shards_pruned": pr_f.shards_pruned,
+        "probe_fragments": pr_f.probe_fragments,
+        "unfiltered_fragments": pr_b.probe_fragments,
+        "oracle_qps": len(Q) / oracle_s,
+    }
+
+    if json_path:
+        doc = {
+            "meta": {"bench": "bench_query_paths", "tiny": tiny, "n_vec": n_vec,
+                     "n_queries": n_q, "dim": D},
+            "rows": rows,
+        }
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
                     help="seconds-scale smoke run (CI)")
+    ap.add_argument("--json", dest="json_path", default="BENCH_query_paths.json",
+                    help="machine-readable output for scripts/check_bench.py "
+                         "('' disables)")
     main(**vars(ap.parse_args()))

@@ -1,11 +1,14 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
-Three kernels, each with a pure-jnp oracle in :mod:`repro.kernels.ref` and a
-padded/jit'd public wrapper in :mod:`repro.kernels.ops`:
+Four kernel families, each with a pure-jnp oracle in
+:mod:`repro.kernels.ref` and a padded/jit'd public wrapper in
+:mod:`repro.kernels.ops`:
 
 - ``pq_scan``       — PQ asymmetric-distance scan (one-hot-matmul MXU form)
 - ``rerank``        — tiled exact-distance matrix for the rerank stage
 - ``kmeans_assign`` — K-tiled nearest-centroid assignment (running min)
+- ``masked_topk``   — mask-aware exact / PQ-ADC top-k for filtered probes
+  (predicate bitmask fused into the tile, in-kernel top-k reduction)
 
 On CPU the kernels run under ``interpret=True`` for validation; production
 CPU paths dispatch to the oracles (see ops.py backend rules).
@@ -15,6 +18,8 @@ from repro.kernels.ops import (  # noqa: F401
     exact_distances,
     exact_topk,
     kmeans_assign,
+    masked_exact_topk,
+    masked_pq_topk,
     pq_scan,
     pq_scan_topk,
 )

@@ -1,0 +1,227 @@
+"""Pallas TPU kernels: mask-aware distance scan with in-kernel top-k.
+
+Filtered probes (attribute predicates, paper §6 + PR 2) previously faked
+predicate awareness on the executor: the "mask" plan widened the beam pool
+by 1/selectivity and filtered in NumPy afterwards, and the pre-filter exact
+scan was a host-side gather.  Both burn compute that a predicate-aware
+kernel avoids — the executor-side distance-compute bottleneck SHINE
+(arXiv:2507.17647) identifies as the scaling limiter.  These kernels fuse
+the per-row predicate/tombstone bitmask into the distance computation
+itself: masked-out rows are forced to a ``+inf`` sentinel inside the tile,
+and a per-tile top-k reduction keeps only ``k`` survivors per grid step, so
+a filtered Stage A is ONE kernel call over (queries × shard rows) with no
+pool widening and no post-hoc filtering.
+
+Two scoring flavors share the reduction:
+
+- ``masked_exact_topk_pallas`` — f32 points, squared-L2 / negative-IP via
+  the expanded-form matmul (same tiling as the rerank kernel);
+- ``masked_pq_topk_pallas``    — PQ-ADC scores via the one-hot matmul
+  reformulation of the LUT gather (same trick as ``pq_scan``), with the
+  mask fused into the accumulation.
+
+Accumulation pattern: grid ``(Q_tiles, N_tiles)`` with the N axis
+innermost; the output BlockSpecs pin ``(i, 0)`` so the same ``(TILE_Q, k)``
+distance/id accumulator blocks stay resident in VMEM across the whole N
+sweep (the standard Pallas revisiting-reduction idiom — TPU grids execute
+sequentially, last axis fastest).  Each step merges the incoming tile's
+masked distances into the running top-k with a k-step argmin-extraction
+loop built from iota / where / min only — no per-lane gathers, so it
+lowers to pure VPU work; the candidate matmul is MXU work.
+
+VMEM per grid step (exact flavor, TILE_Q=8, TILE_N=128, D≤4096, f32):
+  q tile 8×4096×4 ≈ 128 KB, x tile 128×4096×4 ≈ 2 MB, mask 0.5 KB,
+  accumulators 2 × 8×k×4 — comfortably under the 16 MB budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# sentinel for masked-out / empty slots: large f32 that real (squared-L2 or
+# negative-IP) scores never reach; converted to +inf by the ops.py wrapper.
+# Plain Python floats — jnp scalars would be captured as kernel constants.
+MASKED = 3.0e38
+MASKED_THRESHOLD = 1.0e38  # scores >= this are "no candidate"
+
+
+def _topk_merge(cat_d: jnp.ndarray, cat_i: jnp.ndarray, k: int):
+    """(TQ, W) masked scores + ids -> ascending (TQ, k) top-k of each row.
+
+    k-step selection: each step one-hot-extracts the row argmin (iota ==
+    argmin — no gather), records it into output column ``s`` via an iota
+    mask, and overwrites the extracted slot with the sentinel.  Slots whose
+    score is the sentinel report id -1.
+    """
+    tq, w = cat_d.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (tq, w), 1)
+    out_col = jax.lax.broadcasted_iota(jnp.int32, (tq, k), 1)
+
+    def body(s, carry):
+        cd, od, oi = carry
+        pick = jnp.argmin(cd, axis=1)  # (TQ,)
+        val = jnp.min(cd, axis=1)  # (TQ,)
+        sel = col == pick[:, None]  # one-hot (TQ, W)
+        pid = jnp.sum(jnp.where(sel, cat_i, 0), axis=1)  # picked id per row
+        pid = jnp.where(val < MASKED_THRESHOLD, pid, -1)
+        od = jnp.where(out_col == s, val[:, None], od)
+        oi = jnp.where(out_col == s, pid[:, None], oi)
+        cd = jnp.where(sel, MASKED, cd)
+        return cd, od, oi
+
+    od = jnp.full((tq, k), MASKED, jnp.float32)
+    oi = jnp.full((tq, k), -1, jnp.int32)
+    _, od, oi = jax.lax.fori_loop(0, k, body, (cat_d, od, oi))
+    return od, oi
+
+
+def _merge_tile(d, j, tile_n, od_ref, oi_ref, k):
+    """Shared epilogue: mask'd tile scores ``d`` + running accumulators ->
+    updated accumulators."""
+    tq, tn = d.shape
+    ids = j * tile_n + jax.lax.broadcasted_iota(jnp.int32, (tq, tn), 1)
+    cat_d = jnp.concatenate([od_ref[...], d], axis=1)
+    cat_i = jnp.concatenate([oi_ref[...], ids], axis=1)
+    od, oi = _topk_merge(cat_d, cat_i, k)
+    od_ref[...] = od
+    oi_ref[...] = oi
+
+
+def _masked_exact_kernel(q_ref, x_ref, m_ref, od_ref, oi_ref, *, metric, k, tile_n):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        od_ref[...] = jnp.full(od_ref.shape, MASKED, jnp.float32)
+        oi_ref[...] = jnp.full(oi_ref.shape, -1, jnp.int32)
+
+    q = q_ref[...]  # (TILE_Q, D)
+    x = x_ref[...]  # (TILE_N, D)
+    m = m_ref[...]  # (1, TILE_N) f32, 1.0 = live
+    cross = jax.lax.dot_general(
+        q, x, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (TILE_Q, TILE_N)
+    if metric == "l2":
+        q2 = jnp.sum(q * q, axis=-1, keepdims=True)
+        x2 = jnp.sum(x * x, axis=-1)[None, :]
+        d = q2 - 2.0 * cross + x2
+    else:  # ip
+        d = -cross
+    d = jnp.where(m > 0.5, d, MASKED)  # mask fused before the reduction
+    _merge_tile(d, j, tile_n, od_ref, oi_ref, k)
+
+
+def _masked_pq_kernel(lut_ref, codes_ref, m_ref, od_ref, oi_ref, *, K, k, tile_n):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        od_ref[...] = jnp.full(od_ref.shape, MASKED, jnp.float32)
+        oi_ref[...] = jnp.full(oi_ref.shape, -1, jnp.int32)
+
+    lut = lut_ref[...]  # (TILE_Q, m, K)
+    codes = codes_ref[...]  # (TILE_N, m)
+    m_mask = m_ref[...]  # (1, TILE_N)
+    tile_q, m_sub, _ = lut.shape
+    tn = codes.shape[0]
+    # ADC gather as a one-hot matmul (MXU-rate; see pq_scan.py)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (tn, m_sub, K), 2)
+    onehot = (codes[:, :, None] == iota_k).astype(jnp.float32)
+    d = jax.lax.dot_general(
+        lut.reshape(tile_q, m_sub * K),
+        onehot.reshape(tn, m_sub * K),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (TILE_Q, TILE_N)
+    d = jnp.where(m_mask > 0.5, d, MASKED)
+    _merge_tile(d, j, tile_n, od_ref, oi_ref, k)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "metric", "tile_q", "tile_n", "interpret")
+)
+def masked_exact_topk_pallas(
+    queries: jnp.ndarray,
+    points: jnp.ndarray,
+    mask: jnp.ndarray,
+    k: int,
+    *,
+    metric: str = "l2",
+    tile_q: int = 8,
+    tile_n: int = 128,
+    interpret: bool = True,
+):
+    """Masked exact top-k.  queries (Q, D) f32, points (N, D) f32, mask
+    (1, N) f32 (1.0 = row may win).  Q, N, D must be tile-aligned — the
+    ops.py wrapper pads (padded rows carry mask 0, so they never win).
+    Returns (dists (Q, k) f32 with MASKED sentinels, ids (Q, k) int32 with
+    -1 sentinels), each row ascending."""
+    q, d = queries.shape
+    n, d2 = points.shape
+    assert d == d2, (d, d2)
+    assert q % tile_q == 0 and n % tile_n == 0, (q, n, tile_q, tile_n)
+    assert mask.shape == (1, n), (mask.shape, n)
+    grid = (q // tile_q, n // tile_n)
+    return pl.pallas_call(
+        functools.partial(_masked_exact_kernel, metric=metric, k=k, tile_n=tile_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, tile_n), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_q, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_q, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), jnp.float32),
+            jax.ShapeDtypeStruct((q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries.astype(jnp.float32), points.astype(jnp.float32), mask.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile_q", "tile_n", "interpret"))
+def masked_pq_topk_pallas(
+    luts: jnp.ndarray,
+    codes: jnp.ndarray,
+    mask: jnp.ndarray,
+    k: int,
+    *,
+    tile_q: int = 8,
+    tile_n: int = 128,
+    interpret: bool = True,
+):
+    """Masked PQ-ADC top-k.  luts (Q, m, K) f32, codes (N, m) int32, mask
+    (1, N) f32.  Same alignment/sentinel contract as
+    :func:`masked_exact_topk_pallas`."""
+    q, m, kcode = luts.shape
+    n, m2 = codes.shape
+    assert m == m2, (m, m2)
+    assert q % tile_q == 0 and n % tile_n == 0, (q, n, tile_q, tile_n)
+    assert mask.shape == (1, n), (mask.shape, n)
+    grid = (q // tile_q, n // tile_n)
+    return pl.pallas_call(
+        functools.partial(_masked_pq_kernel, K=kcode, k=k, tile_n=tile_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, m, kcode), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((tile_n, m), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, tile_n), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_q, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_q, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), jnp.float32),
+            jax.ShapeDtypeStruct((q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(luts.astype(jnp.float32), codes.astype(jnp.int32), mask.astype(jnp.float32))

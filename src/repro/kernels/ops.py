@@ -12,6 +12,23 @@ Each op handles tile padding, dtype coercion, and backend dispatch:
 Padding rules preserve semantics: feature dims pad with zeros (no effect on
 L2/IP), point/centroid tiles pad with +inf sentinels that can never win a
 min/top-k, query tiles pad with zeros and are sliced off the output.
+
+Masked-op contract (``masked_exact_topk`` / ``masked_pq_topk``):
+
+- ``mask`` is a per-row bitmask over the N points/codes (bool or 0/1
+  numeric, length N): truthy = the row may appear in results; falsy rows —
+  predicate misses, tombstones — are forced to ``+inf`` *inside* the
+  kernel, before the top-k reduction, so they can never displace a passing
+  row.  No pool widening, no post-hoc filtering.
+- Outputs are ``(dists (Q, k) f32, ids (Q, k) int32)``, each row ascending.
+  When fewer than ``k`` rows pass, trailing slots hold ``(+inf, -1)`` —
+  callers must treat non-finite distance or negative id as "no candidate".
+  ``k`` may exceed N; the extra slots are sentinels too.
+- Backend dispatch matches every other op: ``auto`` → Pallas on TPU / ref
+  on CPU; ``pallas`` forces the kernel (``interpret=True`` off-TPU — the
+  parity tests); ``ref`` forces the jnp oracle.  Point/code rows pad to the
+  N tile with mask 0 (never win), query rows pad with zeros and are sliced
+  off, feature dims pad with zeros.
 """
 
 from __future__ import annotations
@@ -23,6 +40,11 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.kmeans_assign import kmeans_assign_pallas
+from repro.kernels.masked_topk import (
+    MASKED_THRESHOLD,
+    masked_exact_topk_pallas,
+    masked_pq_topk_pallas,
+)
 from repro.kernels.pq_scan import pq_scan_pallas
 from repro.kernels.rerank import rerank_distances_pallas
 
@@ -91,6 +113,80 @@ def exact_topk(
     d = exact_distances(queries, points, metric=metric, backend=backend)
     neg, idx = jax.lax.top_k(-d, k)
     return -neg, idx
+
+
+# -- mask-aware top-k --------------------------------------------------------
+
+def _finalize_masked(out_d, out_i, q0: int):
+    """Slice off query padding and normalize sentinels to (+inf, -1)."""
+    d = out_d[:q0]
+    i = out_i[:q0]
+    empty = d >= MASKED_THRESHOLD
+    return jnp.where(empty, jnp.inf, d), jnp.where(empty, -1, i)
+
+
+def _mask_row(mask: jnp.ndarray, tile_n: int) -> jnp.ndarray:
+    """(N,) truthy mask -> (1, N_padded) f32; padded rows get 0 (never win)."""
+    m = mask.astype(jnp.float32).reshape(1, -1)
+    m, _ = _pad_to(m, 1, tile_n, 0.0)
+    return m
+
+
+def masked_exact_topk(
+    queries: jnp.ndarray,
+    points: jnp.ndarray,
+    mask: jnp.ndarray,
+    k: int,
+    *,
+    metric: str = "l2",
+    backend: str = "auto",
+    tile_q: int = 8,
+    tile_n: int = 128,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Masked exact top-k: (Q, D) × (N, D) under a (N,) row bitmask →
+    (dists (Q, k), ids (Q, k)) per the masked-op contract above."""
+    backend = _resolve(backend)
+    k = int(k)
+    if backend == "ref":
+        return ref.masked_exact_topk(queries, points, mask, k, metric=metric)
+    interpret = not _on_tpu()
+    q_pad, q0 = _pad_to(queries.astype(jnp.float32), 0, tile_q, 0.0)
+    x_pad, _n0 = _pad_to(points.astype(jnp.float32), 0, tile_n, 0.0)
+    q_pad, _ = _pad_to(q_pad, 1, 128, 0.0)
+    x_pad, _ = _pad_to(x_pad, 1, 128, 0.0)
+    m = _mask_row(jnp.asarray(mask), tile_n)
+    out_d, out_i = masked_exact_topk_pallas(
+        q_pad, x_pad, m, k, metric=metric, tile_q=tile_q, tile_n=tile_n,
+        interpret=interpret,
+    )
+    return _finalize_masked(out_d, out_i, q0)
+
+
+def masked_pq_topk(
+    luts: jnp.ndarray,
+    codes: jnp.ndarray,
+    mask: jnp.ndarray,
+    k: int,
+    *,
+    backend: str = "auto",
+    tile_q: int = 8,
+    tile_n: int = 128,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Masked PQ-ADC top-k: per-query LUTs (Q, m, K) × codes (N, m) under a
+    (N,) row bitmask → (scores (Q, k), ids (Q, k)) per the masked-op
+    contract above."""
+    backend = _resolve(backend)
+    k = int(k)
+    if backend == "ref":
+        return ref.masked_pq_topk(luts, codes, mask, k)
+    interpret = not _on_tpu()
+    luts_p, q0 = _pad_to(luts.astype(jnp.float32), 0, tile_q, 0.0)
+    codes_p, _n0 = _pad_to(codes.astype(jnp.int32), 0, tile_n, 0)
+    m = _mask_row(jnp.asarray(mask), tile_n)
+    out_d, out_i = masked_pq_topk_pallas(
+        luts_p, codes_p, m, k, tile_q=tile_q, tile_n=tile_n, interpret=interpret
+    )
+    return _finalize_masked(out_d, out_i, q0)
 
 
 # -- PQ ADC scan ---------------------------------------------------------------

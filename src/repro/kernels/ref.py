@@ -8,6 +8,7 @@ inside heavily-iterated host-side build loops).
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -61,6 +62,43 @@ def build_pq_luts(
     if metric == "ip":
         return -jnp.einsum("qmd,mkd->qmk", q_sub, codebook)
     raise ValueError(f"unknown metric {metric}")
+
+
+def _masked_topk(scores: jnp.ndarray, mask: jnp.ndarray, k: int):
+    """Shared masked top-k epilogue: scores (Q, N), mask (N,) truthy.
+
+    Masked-out rows are forced to +inf before the reduction.  Returns
+    (dists (Q, k) f32, ids (Q, k) int32) per row ascending; slots beyond
+    the number of passing rows hold (+inf, -1) — the masked-op contract
+    ops.py documents."""
+    n = scores.shape[1]
+    scores = jnp.where(mask.astype(bool)[None, :], scores, jnp.inf)
+    k_avail = min(k, n)
+    neg, idx = jax.lax.top_k(-scores, k_avail)
+    d = -neg
+    idx = jnp.where(jnp.isinf(d), -1, idx).astype(jnp.int32)
+    if k_avail < k:
+        pad = ((0, 0), (0, k - k_avail))
+        d = jnp.pad(d, pad, constant_values=jnp.inf)
+        idx = jnp.pad(idx, pad, constant_values=-1)
+    return d.astype(jnp.float32), idx
+
+
+def masked_exact_topk(
+    queries: jnp.ndarray,
+    points: jnp.ndarray,
+    mask: jnp.ndarray,
+    k: int,
+    metric: str = "l2",
+):
+    """Mask-aware exact top-k: queries (Q, D), points (N, D), mask (N,)."""
+    fn = l2_distances if metric == "l2" else ip_distances
+    return _masked_topk(fn(queries, points), mask, k)
+
+
+def masked_pq_topk(luts: jnp.ndarray, codes: jnp.ndarray, mask: jnp.ndarray, k: int):
+    """Mask-aware PQ-ADC top-k: luts (Q, m, K), codes (N, m), mask (N,)."""
+    return _masked_topk(pq_adc_scores(luts, codes), mask, k)
 
 
 def kmeans_assign(points: jnp.ndarray, centroids: jnp.ndarray):

@@ -72,10 +72,14 @@ TOMBSTONE_REBUILD_THRESHOLD = 0.20  # paper §7.3
 
 # Selectivity-adaptive filtered-probe planning: estimated passing fraction
 # at or below PREFILTER_MAX_FRAC gets the pre-filter exact scan, up to
-# MASK_MAX_FRAC the filter-aware (bitmask-widened) beam, above it the
-# over-fetched post-filter beam.
+# MASK_MAX_FRAC the mask-aware kernel scan (kernels/masked_topk.py: the
+# predicate bitmask rides into the kernel and masked rows lose inside the
+# tile), above it the over-fetched post-filter beam.  The mask plan used to
+# widen a beam pool by 1/selectivity — worth it only below ~0.5; as a
+# single masked kernel call it stays cheaper than post-filter over-fetch up
+# to much higher fractions, so the band widened.
 PREFILTER_MAX_FRAC = 0.10
-MASK_MAX_FRAC = 0.50
+MASK_MAX_FRAC = 0.75
 
 
 @dataclass

@@ -248,8 +248,13 @@ class Executor:
         """Executor-side row bitmask: does vector id's source row satisfy
         ``pred``?  Each (file, row_group) referenced by the location map is
         evaluated once with attribute-column projection; the per-id gather is
-        cached per (shard, predicate) so repeated filtered probes reuse it."""
-        key = (shard_key, pred)
+        cached per (shard, row-count, predicate) so repeated filtered probes
+        reuse it.  ``n`` rides in the key as the shard's version: a refresh
+        appends rows (the location map is append-only), so a mask computed
+        against the pre-refresh row set can never be served for the
+        refreshed shard — and ``_refresh_shard`` also drops this shard's
+        entries outright."""
+        key = (shard_key, n, pred)
         with self._lock:
             if key in self._mask_cache:
                 self._mask_cache.move_to_end(key)
@@ -275,34 +280,82 @@ class Executor:
     def _exact_masked(
         self, graph, queries: np.ndarray, live_mask: np.ndarray, k_eff: int
     ) -> Tuple[np.ndarray, np.ndarray]:
-        """Pre-filter exact scan: rank ONLY the rows passing the mask.
+        """Kernel-backed pre-filter exact scan: one ``masked_exact_topk``
+        call ranks only the rows passing the mask (masked-out rows are
+        forced to +inf inside the kernel tile — no host-side gather).
         Exact by construction — the high-selectivity plan and the fallback
-        when beam search can't surface enough passing candidates."""
-        ids = np.flatnonzero(live_mask)
-        d = np.asarray(
-            ops.exact_distances(
-                jnp.asarray(np.ascontiguousarray(queries, np.float32)),
-                jnp.asarray(graph.vectors[ids]),
-                metric=graph.params.metric,
-                backend="ref",
-            )
+        when beam search can't surface enough passing candidates.  Output
+        is always (Q, k_eff); slots beyond the passing-row count hold
+        (+inf, -1) per the masked-op contract."""
+        d, ids = ops.masked_exact_topk(
+            jnp.asarray(np.ascontiguousarray(queries, np.float32)),
+            jnp.asarray(graph.vectors[: graph.n]),
+            jnp.asarray(live_mask),
+            int(k_eff),
+            metric=graph.params.metric,
+            backend="auto",
         )
-        k = min(k_eff, len(ids))
-        order = np.argsort(d, axis=1)[:, :k]
-        return np.take_along_axis(d, order, axis=1), ids[order]
+        return np.asarray(d), np.asarray(ids, np.int64)
+
+    def _masked_pq_stage(
+        self, graph, queries: np.ndarray, live_mask: np.ndarray, k_eff: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """mask-plan Stage A on PQ shards: ONE masked ADC kernel call scores
+        every passing code row (mask fused into the pq_scan accumulation),
+        then the pooled survivors get the same full-precision rerank the
+        unfiltered PQ path applies to its beam pool.  Every passing row is
+        scored, so the pool can never under-deliver below
+        min(pool, match_count)."""
+        from repro.core.pq import build_luts
+
+        q = np.ascontiguousarray(queries, np.float32)
+        match_count = int(live_mask.sum())
+        pool = int(min(match_count, max(4 * k_eff, 32)))
+        luts = build_luts(graph.pq, q)  # (Q, m, K)
+        # codes are immutable between refreshes; cache the int32 device copy
+        # on the graph object (keyed by n — insert_batch grows n, refresh
+        # swaps the graph) instead of re-widening O(N·m) bytes per probe
+        codes = getattr(graph, "_codes_i32", None)
+        if codes is None or codes.shape[0] != graph.n:
+            codes = jnp.asarray(graph.pq_codes[: graph.n].astype(np.int32))
+            graph._codes_i32 = codes
+        _pq_d, pids = ops.masked_pq_topk(
+            jnp.asarray(luts),
+            codes,
+            jnp.asarray(live_mask),
+            pool,
+            backend="auto",
+        )
+        pids = np.asarray(pids, np.int64)
+        # exact rerank of the ADC pool (sentinel slots stay +inf / -1)
+        safe = np.clip(pids, 0, graph.n - 1)
+        vecs = graph.vectors[safe]  # (Q, pool, D)
+        if graph.params.metric == "ip":
+            d = -np.einsum("qcd,qd->qc", vecs, q)
+        else:
+            d = np.sum((vecs - q[:, None, :]) ** 2, axis=-1)
+        d = np.where(pids < 0, np.inf, d).astype(np.float32)
+        order = np.argsort(d, axis=1)[:, :k_eff]
+        return np.take_along_axis(d, order, axis=1), np.take_along_axis(pids, order, axis=1)
 
     def _filtered_search(
         self, task, graph, locmap, queries: np.ndarray, pred, mode: str
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Stage-A search under an attribute predicate.
 
-        ``mode`` is the coordinator's per-shard plan: ``prefilter`` scans
-        exactly the passing rows; ``mask`` runs a filter-aware beam search
-        whose pool is widened by the bitmask's observed selectivity;
-        ``postfilter`` over-fetches the ordinary beam and filters after.
-        Whenever the beam cannot produce enough passing candidates the shard
-        falls back to the exact masked scan, so a filtered probe never
-        silently returns fewer candidates than the shard actually holds."""
+        ``mode`` is the coordinator's per-shard plan.  ``prefilter`` and
+        ``mask`` both ride the mask-aware kernels (kernels/masked_topk.py):
+        the predicate/tombstone bitmask goes into the kernel as a tile
+        input, masked-out rows score +inf before the in-kernel top-k, and
+        the whole query group is answered by one batched call — no pool
+        widening, no post-hoc NumPy filtering.  On PQ shards the mask plan
+        scores codes with the masked ADC kernel and exact-reranks the pool;
+        otherwise (and for prefilter) the masked exact scan is used, which
+        is exact by construction.  ``postfilter`` (most rows pass)
+        over-fetches the ordinary beam and filters after, falling back to
+        the kernel-backed exact masked scan whenever the beam cannot
+        surface enough passing candidates — a filtered probe never silently
+        returns fewer candidates than the shard actually holds."""
         shard_key = f"{task.cache_key or task.puffin_path}@{task.blob_offset}"
         mask = self._predicate_mask(locmap, graph.n, pred, shard_key)
         live_mask = mask & ~graph.tombstones[: graph.n]
@@ -315,16 +368,19 @@ class Executor:
             )
         k_eff = min(task.k * task.oversample, match_count)
         # tiny passing sets are cheaper to scan exactly than to search
-        if mode == "prefilter" or match_count <= max(4 * k_eff, 64):
+        if mode in ("prefilter", "mask") or match_count <= max(4 * k_eff, 64):
+            if (
+                mode == "mask"
+                and task.use_pq
+                and graph.pq is not None
+                and match_count > max(4 * k_eff, 64)
+            ):
+                return self._masked_pq_stage(graph, queries, live_mask, k_eff)
             return self._exact_masked(graph, queries, live_mask, k_eff)
+        # postfilter: most rows pass, so the ordinary beam surfaces enough
         n_live = graph.num_live
-        if mode == "postfilter":
-            pool = min(2 * task.k * task.oversample, n_live)
-            L = max(task.L, pool)
-        else:  # mask: widen by observed selectivity so ~3·k_eff survive
-            widen = max(1.0, n_live / match_count)
-            pool = min(int(np.ceil(k_eff * widen * 3.0)), n_live)
-            L = max(task.L, pool)
+        pool = min(2 * task.k * task.oversample, n_live)
+        L = max(task.L, pool)
         if task.use_pq and graph.pq is not None:
             dists, ids = graph.search_pq(queries, pool, L=L)
         else:
@@ -336,21 +392,14 @@ class Executor:
         order = np.argsort(dists, axis=1)[:, :k_eff]
         dists = np.take_along_axis(dists, order, axis=1)
         ids = np.take_along_axis(ids, order, axis=1)
-        want = min(k_eff, match_count)
-        short = np.isinf(dists[:, :want]).any(axis=1) if dists.shape[1] >= want else np.ones(Qn, bool)
+        short = np.isinf(dists).any(axis=1)
         if short.any():
-            # beam under-delivered for some queries — exact-scan the mask
-            ed, ei = self._exact_masked(graph, queries[short], live_mask, k_eff)
-            out_d = np.full((Qn, max(dists.shape[1], ed.shape[1])), np.inf, np.float32)
-            out_i = np.full_like(out_d, -1, dtype=np.int64)
-            out_d[:, : dists.shape[1]] = dists
-            out_i[:, : dists.shape[1]] = ids
+            # beam under-delivered for some queries — kernel-backed exact
+            # masked scan returns exactly k_eff columns, so rows align
             rows = np.flatnonzero(short)
-            out_d[rows] = np.inf
-            out_i[rows] = -1
-            out_d[rows, : ed.shape[1]] = ed
-            out_i[rows, : ei.shape[1]] = ei
-            return out_d, out_i
+            ed, ei = self._exact_masked(graph, queries[rows], live_mask, k_eff)
+            dists[rows] = ed
+            ids[rows] = ei
         return dists, ids
 
     # -- dispatch ------------------------------------------------------------
@@ -617,6 +666,17 @@ class Executor:
                     locmap.row_offset = np.concatenate([locmap.row_offset, roff[sel]])
         blob = encode_shard_blob(graph, locmap, include_vectors=task.include_vectors)
         self.store.put(task.output_path, blob)
+        # The refresh mutated the graph/locmap objects IN PLACE — the very
+        # objects the L1 cache serves under the pre-refresh key.  Evict that
+        # entry (a later probe of the old snapshot must re-decode the
+        # pristine old blob) and drop every cached predicate mask for this
+        # shard: the row set changed, so (shard, predicate) bitmasks
+        # computed before the refresh are stale.
+        l1_key = f"{task.cache_key or task.puffin_path}@{task.blob_offset}"
+        with self._lock:
+            self._l1.pop(l1_key, None)
+            for key in [kk for kk in self._mask_cache if kk[0] == l1_key]:
+                del self._mask_cache[key]
         return F.RefreshResult(
             shard_id=task.shard_id,
             output_path=task.output_path,

@@ -1,0 +1,176 @@
+"""scripts/check_bench.py: the CI benchmark-regression gate.
+
+The acceptance contract: the gate must demonstrably FAIL on an injected
+regression (doctored JSON) and pass on a clean run — both through the pure
+``check()`` function and the CLI entry point's exit codes.
+"""
+
+import copy
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_SCRIPT = pathlib.Path(__file__).resolve().parents[1] / "scripts" / "check_bench.py"
+_spec = importlib.util.spec_from_file_location("check_bench", _SCRIPT)
+check_bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_bench)
+
+
+def _clean_doc():
+    return {
+        "meta": {"bench": "bench_query_paths", "tiny": True},
+        "rows": {
+            "table2.scan": {"throughput_qps": 25.0, "recall": 1.0},
+            "table2.diskann": {"throughput_qps": 5.2, "recall": 0.96},
+            "table2.batched": {
+                "throughput_qps": 130.0,
+                "seq_qps": 19.0,
+                "speedup": 6.8,
+                "recall": 0.96,
+                "parity_ok": True,
+                "probe_fragments": 2,
+            },
+            "table2.filtered": {
+                "throughput_qps": 60.0,
+                "recall": 1.0,
+                "shards_pruned": 1,
+                "probe_fragments": 1,
+                "unfiltered_fragments": 2,
+            },
+        },
+    }
+
+
+def test_clean_run_passes():
+    doc = _clean_doc()
+    assert check_bench.check(doc, copy.deepcopy(doc)) == []
+    assert check_bench.check(doc, None) == []  # no baseline: absolute gates only
+
+
+def test_throughput_regression_fails():
+    base = _clean_doc()
+    cur = copy.deepcopy(base)
+    cur["rows"]["table2.filtered"]["throughput_qps"] = 60.0 * 0.7  # −30% > 20% budget
+    failures = check_bench.check(cur, base)
+    assert len(failures) == 1 and "table2.filtered" in failures[0]
+    assert "throughput" in failures[0]
+
+
+def test_throughput_within_budget_passes():
+    base = _clean_doc()
+    cur = copy.deepcopy(base)
+    cur["rows"]["table2.filtered"]["throughput_qps"] = 60.0 * 0.85  # −15% < 20%
+    assert check_bench.check(cur, base) == []
+
+
+def test_ungated_row_throughput_is_informational_but_recall_is_not():
+    """Beam-search-driven rows (the table rows and the batched row) are too
+    timing-noisy to gate on wall clock — but their recall is deterministic
+    and stays gated, and batched keeps its speedup gate."""
+    base = _clean_doc()
+    cur = copy.deepcopy(base)
+    cur["rows"]["table2.diskann"]["throughput_qps"] = 5.2 * 0.3  # huge, ignored
+    cur["rows"]["table2.batched"]["throughput_qps"] = 130.0 * 0.3  # ignored too
+    assert check_bench.check(cur, base) == []
+    cur["rows"]["table2.diskann"]["recall"] = 0.90
+    failures = check_bench.check(cur, base)
+    assert any("table2.diskann" in f and "recall" in f for f in failures)
+
+
+def test_baseline_row_missing_from_current_fails():
+    """A row silently dropped from the bench output must fail the gate —
+    otherwise deleting/renaming a row un-gates it."""
+    base = _clean_doc()
+    cur = copy.deepcopy(base)
+    del cur["rows"]["table2.filtered"]
+    failures = check_bench.check(cur, base)
+    assert any("table2.filtered" in f and "missing" in f for f in failures)
+
+
+def test_uniform_machine_slowdown_passes():
+    """Every row slower by the same factor = a slower machine, not a
+    regression: the median-ratio normalization must absorb it."""
+    base = _clean_doc()
+    cur = copy.deepcopy(base)
+    for row in cur["rows"].values():
+        if "throughput_qps" in row:
+            row["throughput_qps"] *= 0.4  # 2.5x slower across the board
+    assert check_bench.check(cur, base) == []
+
+
+def test_single_row_regression_sticks_out_of_machine_factor():
+    """One row regressing on an otherwise-identical machine is caught even
+    though the median ratio stays ~1."""
+    base = _clean_doc()
+    cur = copy.deepcopy(base)
+    cur["rows"]["table2.filtered"]["throughput_qps"] *= 0.5
+    failures = check_bench.check(cur, base)
+    assert any("table2.filtered" in f and "machine factor" in f for f in failures)
+
+
+def test_any_recall_drop_fails():
+    base = _clean_doc()
+    cur = copy.deepcopy(base)
+    cur["rows"]["table2.filtered"]["recall"] = 0.999  # tiny, still a drop
+    failures = check_bench.check(cur, base)
+    assert any("table2.filtered" in f and "recall" in f for f in failures)
+
+
+def test_absolute_gates_without_baseline():
+    cur = _clean_doc()
+    cur["rows"]["table2.filtered"]["recall"] = 0.80  # below the 0.95 floor
+    cur["rows"]["table2.batched"]["speedup"] = 0.9
+    cur["rows"]["table2.batched"]["parity_ok"] = False
+    failures = check_bench.check(cur, None)
+    assert any("recall vs oracle" in f for f in failures)
+    assert any("not above the sequential" in f for f in failures)
+    assert any("diverge" in f for f in failures)
+
+
+def test_zone_prune_gate():
+    cur = _clean_doc()
+    cur["rows"]["table2.filtered"]["shards_pruned"] = 0
+    cur["rows"]["table2.filtered"]["probe_fragments"] = 2  # == unfiltered
+    failures = check_bench.check(cur, None)
+    assert any("zone-map pruning" in f for f in failures)
+
+
+def test_new_row_without_baseline_entry_is_not_gated():
+    base = _clean_doc()
+    cur = copy.deepcopy(base)
+    cur["rows"]["table2.new_path"] = {"throughput_qps": 0.001, "recall": 0.1}
+    assert check_bench.check(cur, base) == []
+
+
+@pytest.mark.parametrize(
+    "doctor,expected_exit",
+    [
+        (lambda rows: None, 0),  # untouched => clean
+        (lambda rows: rows["table2.filtered"].__setitem__("throughput_qps", 1.0), 1),
+        (lambda rows: rows["table2.batched"].__setitem__("recall", 0.5), 1),
+    ],
+)
+def test_cli_exit_codes(tmp_path, capsys, doctor, expected_exit):
+    base = _clean_doc()
+    cur = copy.deepcopy(base)
+    doctor(cur["rows"])
+    cur_p, base_p = tmp_path / "cur.json", tmp_path / "base.json"
+    cur_p.write_text(json.dumps(cur))
+    base_p.write_text(json.dumps(base))
+    rc = check_bench.main([str(cur_p), "--baseline", str(base_p)])
+    out = capsys.readouterr().out
+    assert rc == expected_exit
+    if expected_exit:
+        assert "BENCH-REGRESSION:" in out
+    else:
+        assert "OK" in out
+
+
+def test_cli_unreadable_input(tmp_path):
+    missing = tmp_path / "nope.json"
+    assert check_bench.main([str(missing), "--baseline", ""]) == 2
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert check_bench.main([str(bad), "--baseline", ""]) == 2

@@ -441,6 +441,144 @@ def test_filtered_survives_refresh(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# mask-aware kernel path (PR 3)
+# ---------------------------------------------------------------------------
+
+
+def test_mask_plan_calls_masked_kernels(filtered_cluster, monkeypatch):
+    """The acceptance contract of the kernel path: a ``mask``-plan filtered
+    probe goes through ops.masked_* (bitmask into the kernel) — no widened
+    beam pool, no post-hoc NumPy filter.  The beam search must not run at
+    all for that plan."""
+    from repro.core.vamana import VamanaGraph
+    from repro.kernels import ops as kops
+
+    c, t, X, category, price, rep = filtered_cluster
+    calls = {"masked": 0, "beam": 0}
+    real = kops.masked_exact_topk
+
+    def spy(*a, **kw):
+        calls["masked"] += 1
+        return real(*a, **kw)
+
+    def no_beam(self, *a, **kw):
+        calls["beam"] += 1
+        raise AssertionError("beam search ran on a mask-plan filtered probe")
+
+    monkeypatch.setattr(kops, "masked_exact_topk", spy)
+    monkeypatch.setattr(VamanaGraph, "search", no_beam)
+    monkeypatch.setattr(VamanaGraph, "search_pq", no_beam)
+    Q = _queries(X, 3, seed=29)
+    got = c.coordinator.probe(
+        "emb", Q, 10, strategy="diskann", filter="price BETWEEN 20 AND 50"
+    )
+    assert "mask" in got.filter_plan or "prefilter" in got.filter_plan
+    assert calls["masked"] >= 1 and calls["beam"] == 0
+    oracle = c.coordinator.probe(
+        "emb", Q, 10, strategy="scan", filter="price BETWEEN 20 AND 50"
+    )
+    for a, b in zip(oracle.hits, got.hits):
+        assert _locs(a) == _locs(b)
+
+
+@pytest.mark.parametrize("batched", [False, True])
+def test_filtered_fewer_matches_than_k(filtered_cluster, batched):
+    """match_count < k_eff: a predicate passing only a handful of rows must
+    return exactly those rows (every one of them, ranked), not k — on the
+    single-query and batched paths alike."""
+    c, t, X, category, price, rep = filtered_cluster
+    where = "price < 2"  # ~2% of ~960 rows => typically < 20 matches
+    n_pass = int((price < 2).sum())
+    assert 0 < n_pass < 25  # fixture sanity: genuinely fewer than k_eff
+    Q = _queries(X, 3, seed=41)
+    k = n_pass + 10  # ask for more than can exist
+    oracle = c.coordinator.probe("emb", Q, k, strategy="scan", filter=where)
+    if batched:
+        got = c.coordinator.probe_batch("emb", Q, k, strategy="diskann", filter=where)
+    else:
+        got = c.coordinator.probe("emb", Q, k, strategy="diskann", filter=where)
+    for a, b in zip(oracle.hits, got.hits):
+        assert len(b) == n_pass  # all passing rows surfaced, nothing padded
+        assert _locs(a) == _locs(b)
+
+
+def test_exact_masked_short_delivery_backends():
+    """Executor._exact_masked on a shard whose passing rows < k_eff: both
+    kernel backends return exactly k_eff columns with (+inf, -1) sentinels
+    past the passing count — batched and single-query."""
+    import jax.numpy as jnp
+
+    from repro.core.vamana import VamanaParams, build_vamana
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(120, 8)).astype(np.float32)
+    graph = build_vamana(X, VamanaParams(R=8, L=16), passes=1)
+    live = np.zeros(graph.n, bool)
+    live[[3, 50, 101]] = True
+    for backend in ("pallas", "ref"):
+        for Q in (X[:1], X[:5]):  # single-query and batched
+            d, ids = kops.masked_exact_topk(
+                jnp.asarray(Q), jnp.asarray(graph.vectors[: graph.n]),
+                jnp.asarray(live), 10, backend=backend,
+            )
+            d, ids = np.asarray(d), np.asarray(ids)
+            assert d.shape == (len(Q), 10)
+            assert (ids[:, :3] >= 0).all() and (ids[:, 3:] == -1).all()
+            assert np.isinf(d[:, 3:]).all()
+            assert set(ids[:, :3].ravel()) <= {3, 50, 101}
+
+
+def test_mask_cache_invalidated_on_refresh(tmp_path):
+    """Regression (PR 3 bugfix): build → filtered probe → append+refresh →
+    same filtered probe.  The refresh mutates the shard graph/locmap that
+    the executor's L1 cache holds and changes the row set, so pre-refresh
+    (shard, predicate) bitmasks must not survive — and a time-travel probe
+    of the PRE-refresh snapshot must re-decode the pristine old blob rather
+    than serve the mutated graph."""
+    from repro.lakehouse.table import LakehouseTable
+    from repro.runtime.cluster import make_local_cluster
+    from repro.runtime.coordinator import IndexConfig
+
+    rng = np.random.default_rng(77)
+    c = make_local_cluster(str(tmp_path), num_executors=1)  # one executor => caches MUST be reused
+    t = LakehouseTable(c.catalog, "emb")
+    t.create(dim=DIM)
+    X = rng.normal(size=(300, DIM)).astype(np.float32)
+    price = rng.integers(0, 100, size=len(X)).astype(np.int64)
+    t.append_vectors(X, num_files=2, rows_per_group=80, attributes={"price": price})
+    c.coordinator.create_index(
+        "emb", IndexConfig(name="idx", R=12, L=32, partitions_per_shard=2, build_passes=1)
+    )
+    where = "price < 30"
+    old_snap = c.catalog.load_table("emb").current_snapshot().snapshot_id
+    first = c.coordinator.probe("emb", X[0], 8, strategy="diskann", filter=where, L=128)
+    oracle0 = c.coordinator.probe("emb", X[0], 8, strategy="scan", filter=where)
+    assert _locs(first.hits[0]) == _locs(oracle0.hits[0])
+    assert any(len(ex._mask_cache) for ex in c.executors)  # masks were cached
+    # append rows matching the same predicate, then refresh
+    X_new = (X[:60] + 0.01 * rng.normal(size=(60, DIM))).astype(np.float32)
+    t.append_vectors(
+        X_new, num_files=1, rows_per_group=80,
+        attributes={"price": np.full(60, 5, np.int64)},  # all pass price < 30
+    )
+    rr = c.coordinator.refresh_index("emb", "idx")
+    assert rr.inserted == 60
+    # same filtered probe: must see the refreshed row set (oracle includes
+    # the appended rows, which dominate — they duplicate existing vectors)
+    oracle = c.coordinator.probe("emb", X[0], 8, strategy="scan", filter=where)
+    got = c.coordinator.probe("emb", X[0], 8, strategy="diskann", filter=where, L=128)
+    assert _locs(got.hits[0]) == _locs(oracle.hits[0])
+    assert any("data-00002" in fp for fp, _, _ in _locs(got.hits[0]))  # new rows served
+    # time-travel to the pre-refresh snapshot: the old shard blobs must be
+    # re-decoded (not the refresh-mutated L1 objects), masks recomputed
+    back = c.coordinator.probe(
+        "emb", X[0], 8, strategy="diskann", filter=where, snapshot_id=old_snap, L=128
+    )
+    assert _locs(back.hits[0]) == _locs(oracle0.hits[0])
+
+
+# ---------------------------------------------------------------------------
 # SQL frontend + serving
 # ---------------------------------------------------------------------------
 

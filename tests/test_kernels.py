@@ -1,4 +1,11 @@
-"""Per-kernel validation: shape/dtype sweeps, Pallas(interpret) vs ref oracle."""
+"""Per-kernel validation: shape/dtype sweeps, Pallas(interpret) vs ref oracle.
+
+Every test here carries the ``kernels`` marker: ``pytest -m "kernels and not
+slow"`` is the CI tier-1 kernel-parity gate (scripts/ci.sh) asserting that
+the Pallas path (``interpret=True`` off-TPU) agrees with the ref.py oracle
+for every op in ops.py — including the masked ops' all-masked / one-row /
+non-tile-aligned edge cases.
+"""
 
 import jax.numpy as jnp
 import numpy as np
@@ -6,6 +13,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
+
+pytestmark = pytest.mark.kernels
 
 
 def _np(*shape, seed=0, scale=1.0):
@@ -80,6 +89,122 @@ def test_kmeans_assign_matches_ref(n, k, d):
     ir, dr = ops.kmeans_assign(jnp.asarray(X), jnp.asarray(C), backend="ref")
     np.testing.assert_array_equal(np.asarray(ip), np.asarray(ir))
     np.testing.assert_allclose(np.asarray(dp), np.asarray(dr), rtol=2e-4, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# masked top-k (mask-aware filtered-probe kernels)
+# ---------------------------------------------------------------------------
+
+
+def _assert_masked_contract(dists, ids, full_d, mask, k):
+    """Masked-op contract: rows ascending, only passing rows appear, each
+    returned distance equals the oracle's distance for that id, and exactly
+    min(k, passing) slots are populated (the rest are (+inf, -1))."""
+    q = dists.shape[0]
+    n_pass = int(np.asarray(mask).sum())
+    for qi in range(q):
+        d_row, i_row = np.asarray(dists[qi]), np.asarray(ids[qi])
+        valid = i_row >= 0
+        assert valid.sum() == min(k, n_pass)
+        assert np.isfinite(d_row[valid]).all() and np.isinf(d_row[~valid]).all()
+        assert (i_row[~valid] == -1).all()
+        assert np.all(np.diff(d_row[valid]) >= -1e-4)  # ascending
+        if valid.any():
+            assert np.asarray(mask)[i_row[valid]].all()  # never a masked row
+            np.testing.assert_allclose(
+                d_row[valid], full_d[qi, i_row[valid]], rtol=2e-4, atol=2e-3
+            )
+
+
+# shapes deliberately non-tile-aligned (tile_q=8, tile_n=128 defaults),
+# plus the one-row and k>N edges
+@pytest.mark.parametrize("q,n,k", [(1, 1, 1), (3, 37, 5), (7, 130, 10), (5, 300, 320)])
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_masked_exact_topk_matches_ref(q, n, k, metric):
+    rng = np.random.default_rng(q * 13 + n)
+    Q, X = _np(q, 16, seed=q), _np(n, 16, seed=n)
+    mask = rng.random(n) < 0.4
+    full = np.asarray(
+        ops.exact_distances(jnp.asarray(Q), jnp.asarray(X), metric=metric, backend="ref")
+    )
+    for backend in ("pallas", "ref"):
+        d, i = ops.masked_exact_topk(
+            jnp.asarray(Q), jnp.asarray(X), jnp.asarray(mask), k,
+            metric=metric, backend=backend,
+        )
+        _assert_masked_contract(np.asarray(d), np.asarray(i), full, mask, k)
+    dp, ipal = ops.masked_exact_topk(
+        jnp.asarray(Q), jnp.asarray(X), jnp.asarray(mask), k, metric=metric, backend="pallas"
+    )
+    dr, _ = ops.masked_exact_topk(
+        jnp.asarray(Q), jnp.asarray(X), jnp.asarray(mask), k, metric=metric, backend="ref"
+    )
+    dp, dr = np.asarray(dp), np.asarray(dr)
+    np.testing.assert_allclose(
+        np.where(np.isinf(dp), 0.0, dp), np.where(np.isinf(dr), 0.0, dr),
+        rtol=2e-4, atol=2e-3,
+    )
+    assert (np.isinf(dp) == np.isinf(dr)).all()
+
+
+@pytest.mark.parametrize("backend", ["pallas", "ref"])
+def test_masked_exact_topk_all_masked(backend):
+    Q, X = _np(2, 8, seed=1), _np(40, 8, seed=2)
+    d, i = ops.masked_exact_topk(
+        jnp.asarray(Q), jnp.asarray(X), jnp.zeros(40, bool), 5, backend=backend
+    )
+    assert np.isinf(np.asarray(d)).all() and (np.asarray(i) == -1).all()
+
+
+@pytest.mark.parametrize("backend", ["pallas", "ref"])
+def test_masked_exact_topk_single_passing_row(backend):
+    """One passing row, k > 1: exactly one populated slot, and it is that row."""
+    Q, X = _np(3, 8, seed=3), _np(50, 8, seed=4)
+    mask = np.zeros(50, bool)
+    mask[17] = True
+    d, i = ops.masked_exact_topk(
+        jnp.asarray(Q), jnp.asarray(X), jnp.asarray(mask), 4, backend=backend
+    )
+    i = np.asarray(i)
+    assert (i[:, 0] == 17).all() and (i[:, 1:] == -1).all()
+    assert np.isinf(np.asarray(d)[:, 1:]).all()
+
+
+@pytest.mark.parametrize("q,n,m,K,k", [(1, 1, 1, 2, 1), (5, 77, 8, 16, 9), (3, 300, 4, 64, 12)])
+def test_masked_pq_topk_matches_ref(q, n, m, K, k):
+    rng = np.random.default_rng(q * 31 + n)
+    luts = rng.normal(size=(q, m, K)).astype(np.float32)
+    codes = rng.integers(0, K, size=(n, m)).astype(np.int32)
+    mask = rng.random(n) < 0.5
+    full = np.asarray(ref.pq_adc_scores(jnp.asarray(luts), jnp.asarray(codes)))
+    for backend in ("pallas", "ref"):
+        d, i = ops.masked_pq_topk(
+            jnp.asarray(luts), jnp.asarray(codes), jnp.asarray(mask), k, backend=backend
+        )
+        _assert_masked_contract(np.asarray(d), np.asarray(i), full, mask, k)
+    dp, _ = ops.masked_pq_topk(
+        jnp.asarray(luts), jnp.asarray(codes), jnp.asarray(mask), k, backend="pallas"
+    )
+    dr, _ = ops.masked_pq_topk(
+        jnp.asarray(luts), jnp.asarray(codes), jnp.asarray(mask), k, backend="ref"
+    )
+    dp, dr = np.asarray(dp), np.asarray(dr)
+    np.testing.assert_allclose(
+        np.where(np.isinf(dp), 0.0, dp), np.where(np.isinf(dr), 0.0, dr),
+        rtol=1e-4, atol=1e-4,
+    )
+    assert (np.isinf(dp) == np.isinf(dr)).all()
+
+
+@pytest.mark.parametrize("backend", ["pallas", "ref"])
+def test_masked_pq_topk_all_masked(backend):
+    rng = np.random.default_rng(5)
+    luts = rng.normal(size=(2, 4, 16)).astype(np.float32)
+    codes = rng.integers(0, 16, size=(60, 4)).astype(np.int32)
+    d, i = ops.masked_pq_topk(
+        jnp.asarray(luts), jnp.asarray(codes), jnp.zeros(60, bool), 6, backend=backend
+    )
+    assert np.isinf(np.asarray(d)).all() and (np.asarray(i) == -1).all()
 
 
 # ---------------------------------------------------------------------------
