@@ -46,10 +46,9 @@ def main() -> None:
         (np.arange(n) % 4096).astype(np.uint32),
     )
     with timed() as t:
-        full = encode_shard_blob(g, loc, include_vectors=True)
+        encode_shard_blob(g, loc, include_vectors=True)
     lean = encode_shard_blob(g, loc, include_vectors=False)
     # measured structural bytes/vector (graph + codes + locmap), minus vectors
-    vec_bytes = n * 64 * 4
     structural = len(lean) / n  # codes(m=8) + adjacency(R=32) + locmap
     # paper params: R=64 (≈2× adjacency), m=48 codes
     adj_per_vec = (len(lean) - n * 8 - len(loc.file_paths) * 8) / n

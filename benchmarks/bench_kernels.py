@@ -3,8 +3,24 @@
 Wall-clock here is CPU (the TPU numbers are the roofline analysis in
 EXPERIMENTS.md); the derived field reports achieved GFLOP/s on CPU plus a
 correctness delta vs the oracle.
+
+Every row is also written to ``--json`` (default ``BENCH_kernels.json``)
+as ``{"rows": {name: {"throughput_qps": ..., ...}}}`` — the second bench
+record scripts/check_bench.py gates CI on.  Kernel rows are
+throughput-gated against the committed baseline in benchmarks/baselines/
+with the median-ratio machine-factor normalization, so the measurement
+must be noise-robust: timing is best-of-N with the rounds INTERLEAVED
+across all kernels (round-robin), not N back-to-back calls per kernel.
+A load spike on a shared runner then hits every kernel's same rounds
+instead of unluckily sinking one row — either every row's min comes from
+a clean round, or every row is uniformly slow and the machine factor
+divides the slowdown out.  (Measured: per-kernel best-of swings up to 4x
+between runs on a busy container; interleaved best-of holds the
+cross-row RATIOS steady, which is all the gate needs.)
 """
 
+import argparse
+import json
 import time
 
 import jax
@@ -14,73 +30,144 @@ import numpy as np
 from benchmarks.common import emit
 from repro.kernels import ops
 
-
-def _bench(fn, *args, iters=5):
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters, out
+TIMING_ROUNDS = 16
 
 
-def main() -> None:
+def _masked_delta(dp, dr):
+    dp, dr = np.asarray(dp), np.asarray(dr)
+    return float(
+        np.abs(np.where(np.isinf(dp), 0, dp) - np.where(np.isinf(dr), 0, dr)).max()
+    )
+
+
+def main(json_path: str = "BENCH_kernels.json") -> None:
     rng = np.random.default_rng(0)
-    # exact rerank: 256 queries × 8192 candidates × 768 d
-    Q = jnp.asarray(rng.normal(size=(256, 768)).astype(np.float32))
-    X = jnp.asarray(rng.normal(size=(8192, 768)).astype(np.float32))
-    s, out = _bench(lambda a, b: ops.exact_distances(a, b, backend="ref"), Q, X)
-    flops = 2 * 256 * 8192 * 768
-    small = ops.exact_distances(Q[:8], X[:64], backend="pallas")
-    ref_small = ops.exact_distances(Q[:8], X[:64], backend="ref")
-    delta = float(jnp.abs(small - ref_small).max())
-    emit("kernel.rerank", s * 1e6, f"gflops_{flops/s/1e9:.1f}_pallas_delta_{delta:.2e}")
 
-    # PQ ADC scan: 16 queries × 65536 codes, m=48 K=256
-    luts = jnp.asarray(rng.normal(size=(16, 48, 256)).astype(np.float32))
-    codes = jnp.asarray(rng.integers(0, 256, size=(65536, 48)).astype(np.int32))
-    s, _ = _bench(lambda a, b: ops.pq_scan(a, b, backend="ref"), luts, codes)
-    lut_ops = 16 * 65536 * 48
-    small_p = ops.pq_scan(luts[:2], codes[:256], backend="pallas", tile_q=2, tile_n=128)
-    small_r = ops.pq_scan(luts[:2], codes[:256], backend="ref")
-    delta = float(jnp.abs(small_p - small_r).max())
-    emit("kernel.pq_scan", s * 1e6, f"glookups_{lut_ops/s/1e9:.2f}_pallas_delta_{delta:.2e}")
-
-    # masked exact top-k: 64 queries × 32768 points × 96 d, ~30% selectivity
+    # ---- inputs ----------------------------------------------------------
+    # exact rerank: 128 queries × 4096 candidates × 768 d
+    Q = jnp.asarray(rng.normal(size=(128, 768)).astype(np.float32))
+    X = jnp.asarray(rng.normal(size=(4096, 768)).astype(np.float32))
+    # PQ ADC scan: 8 queries × 32768 codes, m=48 K=256
+    luts = jnp.asarray(rng.normal(size=(8, 48, 256)).astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, 256, size=(32768, 48)).astype(np.int32))
+    # masked exact top-k: 32 queries × 16384 points × 96 d, ~30% selectivity
     # (the filtered-probe Stage-A kernel: mask fused before the in-kernel
     # per-tile top-k — no pool widening, no post-hoc filter)
-    Qm = jnp.asarray(rng.normal(size=(64, 96)).astype(np.float32))
-    Xm = jnp.asarray(rng.normal(size=(32768, 96)).astype(np.float32))
-    mask = jnp.asarray(rng.random(32768) < 0.3)
-    s, _ = _bench(lambda a, b, m: ops.masked_exact_topk(a, b, m, 40, backend="ref"), Qm, Xm, mask)
-    flops = 2 * 64 * 32768 * 96
-    dp, _ = ops.masked_exact_topk(Qm[:8], Xm[:256], mask[:256], 10, backend="pallas")
-    dr, _ = ops.masked_exact_topk(Qm[:8], Xm[:256], mask[:256], 10, backend="ref")
-    dp, dr = np.asarray(dp), np.asarray(dr)
-    delta = float(np.abs(np.where(np.isinf(dp), 0, dp) - np.where(np.isinf(dr), 0, dr)).max())
-    emit("kernel.masked_exact_topk", s * 1e6, f"gflops_{flops/s/1e9:.1f}_pallas_delta_{delta:.2e}")
+    Qm = jnp.asarray(rng.normal(size=(32, 96)).astype(np.float32))
+    Xm = jnp.asarray(rng.normal(size=(16384, 96)).astype(np.float32))
+    mask = jnp.asarray(rng.random(16384) < 0.3)
+    maskc = jnp.asarray(rng.random(32768) < 0.3)
+    # multi-mask variants: same loads but EACH query carries its own (N,)
+    # bitmask — the heterogeneous-filter plane path: one call instead of
+    # one per predicate group
+    planes = jnp.asarray(rng.random((32, 16384)) < 0.3)
+    planes_c = jnp.asarray(rng.random((8, 32768)) < 0.3)
+    # k-means assign: 16384 points × 512 centroids × 96 d
+    P = jnp.asarray(rng.normal(size=(16384, 96)).astype(np.float32))
+    C = jnp.asarray(rng.normal(size=(512, 96)).astype(np.float32))
+    # machine-speed anchor: a fixed PURE-NUMPY matmul no repo change can
+    # touch.  check_bench derives the machine factor from anchor.* rows
+    # when present, so a uniform slowdown of every kernel.* row (a real
+    # regression in a shared helper) is no longer indistinguishable from
+    # a slower runner — the anchor pins what "machine speed" means.
+    A_anchor = rng.normal(size=(512, 512)).astype(np.float32)
+    B_anchor = rng.normal(size=(512, 512)).astype(np.float32)
 
-    # masked PQ-ADC top-k: 16 queries × 65536 codes, m=48 K=256, ~30% pass
-    maskc = jnp.asarray(rng.random(65536) < 0.3)
-    s, _ = _bench(lambda a, b, m: ops.masked_pq_topk(a, b, m, 40, backend="ref"), luts, codes, maskc)
-    lut_ops = 16 * 65536 * 48
-    dp, _ = ops.masked_pq_topk(luts[:2], codes[:256], maskc[:256], 10, backend="pallas", tile_q=2)
-    dr, _ = ops.masked_pq_topk(luts[:2], codes[:256], maskc[:256], 10, backend="ref")
-    dp, dr = np.asarray(dp), np.asarray(dr)
-    delta = float(np.abs(np.where(np.isinf(dp), 0, dp) - np.where(np.isinf(dr), 0, dr)).max())
-    emit("kernel.masked_pq_topk", s * 1e6, f"glookups_{lut_ops/s/1e9:.2f}_pallas_delta_{delta:.2e}")
+    # ---- timed thunks (ref backend — the production CPU path) ------------
+    cases = {
+        "kernel.rerank": lambda: ops.exact_distances(Q, X, backend="ref"),
+        "kernel.pq_scan": lambda: ops.pq_scan(luts, codes, backend="ref"),
+        "kernel.masked_exact_topk": lambda: ops.masked_exact_topk(
+            Qm, Xm, mask, 40, backend="ref"
+        ),
+        "kernel.masked_pq_topk": lambda: ops.masked_pq_topk(
+            luts, codes, maskc, 40, backend="ref"
+        ),
+        "kernel.masked_exact_topk_multi": lambda: ops.masked_exact_topk_multi(
+            Qm, Xm, planes, 40, backend="ref"
+        ),
+        "kernel.masked_pq_topk_multi": lambda: ops.masked_pq_topk_multi(
+            luts, codes, planes_c, 40, backend="ref"
+        ),
+        "kernel.kmeans_assign": lambda: ops.kmeans_assign(P, C, backend="ref"),
+        "anchor.numpy_matmul": lambda: A_anchor @ B_anchor,
+    }
+    best = {name: float("inf") for name in cases}
+    for name, fn in cases.items():  # warm (traces, allocator)
+        jax.block_until_ready(fn())
+    for _ in range(TIMING_ROUNDS):  # interleaved rounds (see module doc)
+        for name, fn in cases.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best[name] = min(best[name], time.perf_counter() - t0)
 
-    # k-means assign: 65536 points × 1024 centroids × 96 d
-    P = jnp.asarray(rng.normal(size=(65536, 96)).astype(np.float32))
-    C = jnp.asarray(rng.normal(size=(1024, 96)).astype(np.float32))
-    s, _ = _bench(lambda a, b: ops.kmeans_assign(a, b, backend="ref"), P, C)
-    flops = 2 * 65536 * 1024 * 96
-    ip, dp = ops.kmeans_assign(P[:512], C[:128], backend="pallas", tile_n=128, tile_k=64)
-    ir, dr = ops.kmeans_assign(P[:512], C[:128], backend="ref")
+    # ---- Pallas(interpret) parity on small slices ------------------------
+    delta = {}
+    small = ops.exact_distances(Q[:8], X[:64], backend="pallas")
+    ref_small = ops.exact_distances(Q[:8], X[:64], backend="ref")
+    delta["kernel.rerank"] = float(jnp.abs(small - ref_small).max())
+    small_p = ops.pq_scan(luts[:2], codes[:256], backend="pallas", tile_q=2, tile_n=128)
+    small_r = ops.pq_scan(luts[:2], codes[:256], backend="ref")
+    delta["kernel.pq_scan"] = float(jnp.abs(small_p - small_r).max())
+    delta["kernel.masked_exact_topk"] = _masked_delta(
+        ops.masked_exact_topk(Qm[:8], Xm[:256], mask[:256], 10, backend="pallas")[0],
+        ops.masked_exact_topk(Qm[:8], Xm[:256], mask[:256], 10, backend="ref")[0],
+    )
+    delta["kernel.masked_pq_topk"] = _masked_delta(
+        ops.masked_pq_topk(luts[:2], codes[:256], maskc[:256], 10, backend="pallas", tile_q=2)[0],
+        ops.masked_pq_topk(luts[:2], codes[:256], maskc[:256], 10, backend="ref")[0],
+    )
+    small_pl = jnp.asarray(np.asarray(planes)[:8, :256])
+    delta["kernel.masked_exact_topk_multi"] = _masked_delta(
+        ops.masked_exact_topk_multi(Qm[:8], Xm[:256], small_pl, 10, backend="pallas")[0],
+        ops.masked_exact_topk_multi(Qm[:8], Xm[:256], small_pl, 10, backend="ref")[0],
+    )
+    small_pc = jnp.asarray(np.asarray(planes_c)[:2, :256])
+    delta["kernel.masked_pq_topk_multi"] = _masked_delta(
+        ops.masked_pq_topk_multi(luts[:2], codes[:256], small_pc, 10, backend="pallas", tile_q=2)[0],
+        ops.masked_pq_topk_multi(luts[:2], codes[:256], small_pc, 10, backend="ref")[0],
+    )
+    ip, _ = ops.kmeans_assign(P[:512], C[:128], backend="pallas", tile_n=128, tile_k=64)
+    ir, _ = ops.kmeans_assign(P[:512], C[:128], backend="ref")
     agree = float(np.mean(np.asarray(ip) == np.asarray(ir)))
-    emit("kernel.kmeans_assign", s * 1e6, f"gflops_{flops/s/1e9:.1f}_pallas_agree_{agree:.3f}")
+
+    # ---- report ----------------------------------------------------------
+    work = {  # per-call work for the derived column
+        "kernel.rerank": ("gflops", 2 * 128 * 4096 * 768),
+        "kernel.pq_scan": ("glookups", 8 * 32768 * 48),
+        "kernel.masked_exact_topk": ("gflops", 2 * 32 * 16384 * 96),
+        "kernel.masked_pq_topk": ("glookups", 8 * 32768 * 48),
+        "kernel.masked_exact_topk_multi": ("gflops", 2 * 32 * 16384 * 96),
+        "kernel.masked_pq_topk_multi": ("glookups", 8 * 32768 * 48),
+        "kernel.kmeans_assign": ("gflops", 2 * 16384 * 512 * 96),
+        "anchor.numpy_matmul": ("gflops", 2 * 512 * 512 * 512),
+    }
+    rows: dict = {}
+    for name in cases:
+        s = best[name]
+        unit, amount = work[name]
+        if name == "anchor.numpy_matmul":
+            tail = "machine_speed_anchor"
+            extra = {}
+        elif name == "kernel.kmeans_assign":
+            tail = f"pallas_agree_{agree:.3f}"
+            extra = {"pallas_agree": agree}
+        else:
+            tail = f"pallas_delta_{delta[name]:.2e}"
+            extra = {"pallas_delta": delta[name]}
+        emit(name, s * 1e6, f"{unit}_{amount/s/1e9:.2f}_{tail}")
+        rows[name] = {"throughput_qps": 1.0 / s, **extra}
+
+    if json_path:
+        doc = {"meta": {"bench": "bench_kernels", "rounds": TIMING_ROUNDS}, "rows": rows}
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", dest="json_path", default="BENCH_kernels.json",
+                    help="machine-readable output for scripts/check_bench.py "
+                         "('' disables)")
+    main(**vars(ap.parse_args()))

@@ -115,7 +115,7 @@ def main(tiny: bool = False, json_path: str = "BENCH_query_paths.json") -> None:
         for ex in c.executors:
             ex._l1.clear()
         t0 = time.perf_counter()
-        pr_cold = c.coordinator.probe("bench", Q[:1], 10, strategy=probe_strat, **kw)
+        c.coordinator.probe("bench", Q[:1], 10, strategy=probe_strat, **kw)
         cold_s = time.perf_counter() - t0
         # warm, PER QUERY (the paper's Table 2 counts files/bytes per query)
         def _warm_loop():
@@ -196,15 +196,22 @@ def main(tiny: bool = False, json_path: str = "BENCH_query_paths.json") -> None:
     target = f"cat{int(labels[order][len(X) // 2])}"
     flt = f"category = '{target}' AND price < 90"
     # warm both paths (first call pays one-time jit tracing of the masked
-    # kernels; the row measures steady-state throughput, like the batched row)
+    # kernels; the row measures steady-state throughput, like the batched
+    # row), then INTERLEAVE the oracle/filtered timing rounds so the
+    # speedup-vs-oracle ratio check_bench gates on sees the same load in
+    # numerator and denominator (wall clock alone swings >2x with ambient
+    # load at this scale — measured live tripping the old baseline gate)
     c.coordinator.probe("bench", Q[:1], 10, strategy="scan", filter=flt)
     c.coordinator.probe_batch("bench", Q, 10, strategy="diskann", filter=flt)
-    oracle_s, oracle = _best_of(
-        lambda: c.coordinator.probe("bench", Q, 10, strategy="scan", filter=flt)
-    )
-    filt_s, pr_f = _best_of(
-        lambda: c.coordinator.probe_batch("bench", Q, 10, strategy="diskann", filter=flt)
-    )
+    oracle_s = filt_s = float("inf")
+    oracle = pr_f = None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        oracle = c.coordinator.probe("bench", Q, 10, strategy="scan", filter=flt)
+        oracle_s = min(oracle_s, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        pr_f = c.coordinator.probe_batch("bench", Q, 10, strategy="diskann", filter=flt)
+        filt_s = min(filt_s, time.perf_counter() - t0)
     truth_f = [
         {(h.file_path, h.row_group, h.row_offset) for h in hits} for hits in oracle.hits
     ]
@@ -230,6 +237,83 @@ def main(tiny: bool = False, json_path: str = "BENCH_query_paths.json") -> None:
         "probe_fragments": pr_f.probe_fragments,
         "unfiltered_fragments": pr_b.probe_fragments,
         "oracle_qps": len(Q) / oracle_s,
+        "speedup_vs_oracle": oracle_s / filt_s,
+    }
+
+    # ---- heterogeneous-filter batch: per-query mask planes ----------------
+    # Every query carries a DISTINCT predicate (8+ of them).  The legacy
+    # executor path degrades to one masked-kernel pass per predicate group;
+    # the mask-plane path answers the whole coalesced fragment with one
+    # multi-mask call per shard (per scoring flavor).  Both paths are
+    # measured in the same window (load cancels in the ratio) and must
+    # return identical hits; check_bench gates: fewer kernel dispatches
+    # than the per-group path, speedup > 1, recall vs oracle >= 0.95.
+    hetero_filters = [
+        f"price < {5 + (63 * i) // max(len(Q) - 1, 1)}" for i in range(len(Q))
+    ]  # est selectivities ~0.05..0.68 — all mask-/prefilter-planned
+    assert len(set(hetero_filters)) >= 8
+    # warm both paths (masks cached, jit traced), then INTERLEAVE the
+    # grouped/plane timing rounds: a load spike hits the same rounds of
+    # both paths, so the speedup ratio check_bench hard-gates on stays
+    # clean — two back-to-back best-of windows would let one unlucky
+    # window fail the gate with no real regression (same reasoning as
+    # bench_kernels' round-robin timing).
+    def _hetero_probe():
+        return c.coordinator.probe_batch(
+            "bench", Q, 10, strategy="diskann", filter=hetero_filters
+        )
+
+    def _grouped(flag):
+        for ex in c.executors:
+            ex.force_group_loop = flag
+
+    _hetero_probe()
+    _grouped(True)
+    _hetero_probe()
+    grp_s = het_s = float("inf")
+    pr_g = pr_h = None
+    for _ in range(3):
+        _grouped(True)
+        t0 = time.perf_counter()
+        pr_g = _hetero_probe()
+        grp_s = min(grp_s, time.perf_counter() - t0)
+        _grouped(False)
+        t0 = time.perf_counter()
+        pr_h = _hetero_probe()
+        het_s = min(het_s, time.perf_counter() - t0)
+    oracle_h = c.coordinator.probe_batch(
+        "bench", Q, 10, strategy="scan", filter=hetero_filters
+    )
+    truth_h = [
+        {(h.file_path, h.row_group, h.row_offset) for h in hits} for hits in oracle_h.hits
+    ]
+    recall_h = float(np.mean([
+        len({(h.file_path, h.row_group, h.row_offset) for h in hits} & th) / max(len(th), 1)
+        for hits, th in zip(pr_h.hits, truth_h)
+    ]))
+    parity_h = all(
+        [(h.file_path, h.row_group, h.row_offset) for h in a]
+        == [(h.file_path, h.row_group, h.row_offset) for h in b]
+        for a, b in zip(pr_h.hits, pr_g.hits)
+    )
+    emit(
+        "table2.filtered_hetero",
+        het_s / len(Q) * 1e6,
+        f"B_{len(Q)}_distinct_{len(set(hetero_filters))}"
+        f"_dispatches_{pr_h.kernel_dispatches}_vs_grouped_{pr_g.kernel_dispatches}"
+        f"_speedup_{grp_s/het_s:.2f}x_recall_vs_oracle_{recall_h:.3f}"
+        f"_parity_{'ok' if parity_h else 'BROKEN'}",
+    )
+    rows["table2.filtered_hetero"] = {
+        "throughput_qps": len(Q) / het_s,
+        "grouped_qps": len(Q) / grp_s,
+        "speedup_vs_grouped": grp_s / het_s,
+        "recall": recall_h,
+        "kernel_dispatches": pr_h.kernel_dispatches,
+        "grouped_dispatches": pr_g.kernel_dispatches,
+        "distinct_filters": len(set(hetero_filters)),
+        "probe_fragments": pr_h.probe_fragments,
+        "parity_ok": bool(parity_h),
     }
 
     if json_path:

@@ -12,7 +12,7 @@ import tempfile
 
 import numpy as np
 
-from repro.core.vamana import brute_force_topk, recall_at_k
+from repro.core.vamana import brute_force_topk
 from repro.iceberg.gc import expire_and_collect
 from repro.lakehouse.table import LakehouseTable
 from repro.runtime.cluster import make_local_cluster

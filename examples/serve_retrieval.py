@@ -58,7 +58,6 @@ def main() -> None:
         cluster.store.stat(rep.puffin_path).size, cluster.store.range_reader(rep.puffin_path)
     )
     graphs, payloads = [], []
-    offset = 0
     for bm in reader.blobs_of_type(SHARD_BLOB_TYPE):
         g, locmap = decode_shard_blob(reader.read_blob(bm))
         graphs.append(g)

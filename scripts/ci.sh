@@ -3,32 +3,49 @@
 # log section (.github/workflows/ci.yml runs one stage per job):
 #
 #   --lint    ruff check over src/tests/benchmarks/scripts when ruff is
-#             installed; otherwise degrades to a python -m compileall
-#             syntax pass (the container gates optional tooling — CI
-#             images install ruff, minimal dev boxes may not).
+#             installed (rule set + line length pinned in ruff.toml so the
+#             local run and CI agree byte-for-byte); otherwise degrades to
+#             a python -m compileall syntax pass (the container gates
+#             optional tooling — CI images install ruff, minimal dev boxes
+#             may not).
 #   --tier1   kernel-parity gate first (pytest -m "kernels and not slow":
 #             every op in kernels/ops.py, Pallas-interpret vs ref.py,
-#             including the masked ops' edge cases), then the full tier-1
-#             suite (pytest -x -q, slow cases deselected per pytest.ini).
-#   --bench   benchmark smoke + regression gate: bench_query_paths --tiny
-#             writes BENCH_query_paths.json (throughput + recall per row);
-#             scripts/check_bench.py fails on broken batched/sequential
-#             parity, batched throughput not above sequential, filtered
-#             recall-vs-oracle < 0.95, zone pruning not reducing fragments,
-#             >20% throughput regression on the kernel-dominated filtered
-#             row vs the committed baseline (median-ratio machine-factor
-#             normalization keeps a uniformly slower runner from tripping
-#             the gate; beam-driven rows are recall/speedup-gated only —
-#             their wall clock is load-sensitive), ANY recall drop vs the
-#             baseline, or a baseline row missing from the run.
+#             including the masked ops' and the multi-mask (Q, N)-plane
+#             ops' edge cases), then the full tier-1 suite (pytest -x -q,
+#             slow cases deselected per pytest.ini).
+#   --bench   benchmark smoke + regression gate, TWO bench records:
+#               bench_query_paths --tiny  -> BENCH_query_paths.json
+#               bench_kernels             -> BENCH_kernels.json
+#             Stale records are deleted first and each file must exist
+#             non-empty after its run — a bench that crashes before
+#             writing its record fails the stage loudly instead of letting
+#             check_bench green-light leftover data (check_bench itself
+#             also exits 2 on a missing/empty/row-less input).
+#             scripts/check_bench.py gates both files against their
+#             committed baselines (benchmarks/baselines/<same name>):
+#             broken batched/sequential parity, batched throughput not
+#             above sequential, filtered recall-vs-oracle < 0.95, zone
+#             pruning not reducing fragments, the heterogeneous-filter
+#             row (table2.filtered_hetero) not beating the
+#             per-predicate-group path in its interleaved timing window
+#             or not reducing kernel dispatches, throughput
+#             regression vs baseline on the kernel.* rows (35% noise
+#             budget; machine factor pinned by the pure-numpy anchor.*
+#             row, so even a uniform kernel regression is caught — table2
+#             rows are never wall-clock-gated: they ride the scheduler and
+#             swing >2x with load, so they gate on same-window ratios and
+#             recall), ANY recall drop vs the baseline, or a baseline row
+#             missing from the run.
 #
 # No stage flags (or --all) runs every stage in order.
 #
-# Updating the benchmark baseline (after an intentional perf/recall change):
+# Updating a benchmark baseline (after an intentional perf/recall change):
 #   PYTHONPATH=src python -m benchmarks.bench_query_paths --tiny \
 #       --json benchmarks/baselines/BENCH_query_paths.json
+#   PYTHONPATH=src python -m benchmarks.bench_kernels \
+#       --json benchmarks/baselines/BENCH_kernels.json
 # then commit the new baseline alongside the change that justifies it, and
-# say why in the commit message.  Never refresh the baseline to silence a
+# say why in the commit message.  Never refresh a baseline to silence a
 # regression you cannot explain.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -69,9 +86,19 @@ if $run_tier1; then
 fi
 
 if $run_bench; then
-  echo "== benchmark smoke (batched + filtered query paths) =="
+  echo "== benchmark smoke (batched + filtered query paths, kernels) =="
+  # never let a stale record from an earlier run satisfy the gate
+  rm -f BENCH_query_paths.json BENCH_kernels.json
   python -m benchmarks.bench_query_paths --tiny --json BENCH_query_paths.json
+  python -m benchmarks.bench_kernels --json BENCH_kernels.json
+  for rec in BENCH_query_paths.json BENCH_kernels.json; do
+    if [ ! -s "$rec" ]; then
+      echo "BENCH-ERROR: $rec missing or empty — the bench run crashed before writing it" >&2
+      exit 1
+    fi
+  done
   echo "== benchmark regression gate =="
-  python scripts/check_bench.py BENCH_query_paths.json \
-    --baseline benchmarks/baselines/BENCH_query_paths.json
+  python scripts/check_bench.py BENCH_query_paths.json BENCH_kernels.json \
+    --baseline benchmarks/baselines/BENCH_query_paths.json \
+    --baseline benchmarks/baselines/BENCH_kernels.json
 fi

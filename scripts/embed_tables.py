@@ -3,7 +3,6 @@
     PYTHONPATH=src python scripts/embed_tables.py
 """
 
-import io
 import re
 import subprocess
 import sys

@@ -14,8 +14,6 @@ for arithmetic elementwise/reduce ops.  ``cond`` branches contribute their
 
 from __future__ import annotations
 
-from typing import Any, Dict
-
 import jax
 import numpy as np
 from jax import core
@@ -55,7 +53,6 @@ def _jaxpr_flops(jaxpr: core.Jaxpr) -> float:
             total += _dot_flops(eqn)
         elif prim in ("conv_general_dilated",):
             out = eqn.outvars[0].aval
-            lhs = eqn.invars[0].aval
             rhs = eqn.invars[1].aval
             total += 2.0 * _size(out) * int(np.prod(rhs.shape[:-1]))
         elif prim == "scan":

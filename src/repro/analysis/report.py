@@ -9,7 +9,6 @@ output (regenerated whenever the dry-run or hillclimb JSONLs change).
 from __future__ import annotations
 
 import json
-import sys
 
 
 def _rows(path):

@@ -31,7 +31,7 @@ from __future__ import annotations
 import io
 import json
 import struct
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -361,7 +361,6 @@ def decode_shard_blob(
         dsub = d // pq_m
         pq = PQCodebook.frombytes(data[off_codebook:off_codes], pq_m, K, dsub, metric)
         codes = np.frombuffer(_d(data[off_codes:off_offsets]), np.uint8).reshape(n, pq_m)
-    offsets = np.frombuffer(data[off_offsets:off_adjacency], np.uint64)
     adj_raw = _d(data[off_adjacency:off_vectors])
     cap = _round_capacity(n)
     adjacency = np.full((cap, R), -1, np.int32)

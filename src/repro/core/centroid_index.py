@@ -16,15 +16,11 @@ Pruning rules:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional
 
 import numpy as np
 
-from repro.core.blobs import (
-    CENTROID_BLOB_TYPE,
-    decode_centroid_blob,
-    encode_centroid_blob,
-)
+from repro.core.blobs import decode_centroid_blob, encode_centroid_blob
 from repro.lakehouse.table import LakehouseTable
 
 

@@ -85,7 +85,6 @@ def _beam_search(
     """
     cap = vectors.shape[0]
     B = queries.shape[0]
-    R = adjacency.shape[1]
     INF = jnp.float32(jnp.inf)
 
     def dist_to(ids: jnp.ndarray) -> jnp.ndarray:  # ids (B, K) -> (B, K)
@@ -431,7 +430,6 @@ class VamanaGraph:
 
     def _add_reverse_edges(self, src_ids: np.ndarray, nbrs: np.ndarray) -> None:
         """Host-side scatter of reverse edges with robust-prune on overflow."""
-        p = self.params
         overflow: dict[int, list[int]] = {}
         for sid, row in zip(src_ids, nbrs):
             for nbr in row:

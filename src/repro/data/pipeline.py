@@ -18,7 +18,7 @@ Batches are (ids, labels) int32 arrays with labels = ids shifted left
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, Optional, Tuple
+from typing import Iterator, Tuple
 
 import numpy as np
 

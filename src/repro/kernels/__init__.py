@@ -19,7 +19,9 @@ from repro.kernels.ops import (  # noqa: F401
     exact_topk,
     kmeans_assign,
     masked_exact_topk,
+    masked_exact_topk_multi,
     masked_pq_topk,
+    masked_pq_topk_multi,
     pq_scan,
     pq_scan_topk,
 )

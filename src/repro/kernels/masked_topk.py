@@ -20,6 +20,16 @@ Two scoring flavors share the reduction:
   reformulation of the LUT gather (same trick as ``pq_scan``), with the
   mask fused into the accumulation.
 
+Each flavor also has a **multi-mask** variant (``*_multi_pallas``) whose
+mask input is a per-query plane ``(Q, N)`` instead of a shared row
+``(1, N)``: tile ``(i, j)`` of the plane rides into grid step ``(i, j)``
+alongside the query and point tiles, so a coalesced batch whose queries
+carry HETEROGENEOUS predicates is still ONE kernel call — each query's
+rows are forced to +inf under its own bitmask before the shared top-k
+reduction.  The kernel bodies are identical (``jnp.where(m > 0.5, ...)``
+broadcasts a ``(1, TILE_N)`` row and applies a ``(TILE_Q, TILE_N)`` plane
+elementwise); only the mask BlockSpec differs.
+
 Accumulation pattern: grid ``(Q_tiles, N_tiles)`` with the N axis
 innermost; the output BlockSpecs pin ``(i, 0)`` so the same ``(TILE_Q, k)``
 distance/id accumulator blocks stay resident in VMEM across the whole N
@@ -187,6 +197,51 @@ def masked_exact_topk_pallas(
     )(queries.astype(jnp.float32), points.astype(jnp.float32), mask.astype(jnp.float32))
 
 
+@functools.partial(
+    jax.jit, static_argnames=("k", "metric", "tile_q", "tile_n", "interpret")
+)
+def masked_exact_topk_multi_pallas(
+    queries: jnp.ndarray,
+    points: jnp.ndarray,
+    masks: jnp.ndarray,
+    k: int,
+    *,
+    metric: str = "l2",
+    tile_q: int = 8,
+    tile_n: int = 128,
+    interpret: bool = True,
+):
+    """Per-query-mask exact top-k.  queries (Q, D) f32, points (N, D) f32,
+    masks (Q, N) f32 (row q is query q's bitmask; 1.0 = row may win).  Same
+    alignment and (MASKED, -1) sentinel contract as
+    :func:`masked_exact_topk_pallas`; the kernel body is shared — only the
+    mask BlockSpec changes from a broadcast row to a (i, j) plane tile."""
+    q, d = queries.shape
+    n, d2 = points.shape
+    assert d == d2, (d, d2)
+    assert q % tile_q == 0 and n % tile_n == 0, (q, n, tile_q, tile_n)
+    assert masks.shape == (q, n), (masks.shape, q, n)
+    grid = (q // tile_q, n // tile_n)
+    return pl.pallas_call(
+        functools.partial(_masked_exact_kernel, metric=metric, k=k, tile_n=tile_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_q, tile_n), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_q, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_q, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), jnp.float32),
+            jax.ShapeDtypeStruct((q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries.astype(jnp.float32), points.astype(jnp.float32), masks.astype(jnp.float32))
+
+
 @functools.partial(jax.jit, static_argnames=("k", "tile_q", "tile_n", "interpret"))
 def masked_pq_topk_pallas(
     luts: jnp.ndarray,
@@ -225,3 +280,43 @@ def masked_pq_topk_pallas(
         ],
         interpret=interpret,
     )(luts.astype(jnp.float32), codes.astype(jnp.int32), mask.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile_q", "tile_n", "interpret"))
+def masked_pq_topk_multi_pallas(
+    luts: jnp.ndarray,
+    codes: jnp.ndarray,
+    masks: jnp.ndarray,
+    k: int,
+    *,
+    tile_q: int = 8,
+    tile_n: int = 128,
+    interpret: bool = True,
+):
+    """Per-query-mask PQ-ADC top-k.  luts (Q, m, K) f32, codes (N, m) int32,
+    masks (Q, N) f32.  Same alignment/sentinel contract as
+    :func:`masked_pq_topk_pallas`, mask plane tiled (i, j)."""
+    q, m, kcode = luts.shape
+    n, m2 = codes.shape
+    assert m == m2, (m, m2)
+    assert q % tile_q == 0 and n % tile_n == 0, (q, n, tile_q, tile_n)
+    assert masks.shape == (q, n), (masks.shape, q, n)
+    grid = (q // tile_q, n // tile_n)
+    return pl.pallas_call(
+        functools.partial(_masked_pq_kernel, K=kcode, k=k, tile_n=tile_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, m, kcode), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((tile_n, m), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_q, tile_n), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_q, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_q, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), jnp.float32),
+            jax.ShapeDtypeStruct((q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(luts.astype(jnp.float32), codes.astype(jnp.int32), masks.astype(jnp.float32))

@@ -13,13 +13,18 @@ Padding rules preserve semantics: feature dims pad with zeros (no effect on
 L2/IP), point/centroid tiles pad with +inf sentinels that can never win a
 min/top-k, query tiles pad with zeros and are sliced off the output.
 
-Masked-op contract (``masked_exact_topk`` / ``masked_pq_topk``):
+Masked-op contract (``masked_exact_topk`` / ``masked_pq_topk`` and their
+``*_multi`` per-query-mask variants):
 
 - ``mask`` is a per-row bitmask over the N points/codes (bool or 0/1
   numeric, length N): truthy = the row may appear in results; falsy rows —
   predicate misses, tombstones — are forced to ``+inf`` *inside* the
   kernel, before the top-k reduction, so they can never displace a passing
   row.  No pool widening, no post-hoc filtering.
+- the ``*_multi`` ops take a mask PLANE ``(Q, N)`` instead: row ``q`` is
+  query ``q``'s own bitmask, so a coalesced batch carrying heterogeneous
+  predicates is still ONE kernel call.  ``Q == 1`` degenerates to the
+  single-mask kernel (same tile schedule, no plane materialization).
 - Outputs are ``(dists (Q, k) f32, ids (Q, k) int32)``, each row ascending.
   When fewer than ``k`` rows pass, trailing slots hold ``(+inf, -1)`` —
   callers must treat non-finite distance or negative id as "no candidate".
@@ -42,7 +47,9 @@ from repro.kernels import ref
 from repro.kernels.kmeans_assign import kmeans_assign_pallas
 from repro.kernels.masked_topk import (
     MASKED_THRESHOLD,
+    masked_exact_topk_multi_pallas,
     masked_exact_topk_pallas,
+    masked_pq_topk_multi_pallas,
     masked_pq_topk_pallas,
 )
 from repro.kernels.pq_scan import pq_scan_pallas
@@ -184,6 +191,89 @@ def masked_pq_topk(
     codes_p, _n0 = _pad_to(codes.astype(jnp.int32), 0, tile_n, 0)
     m = _mask_row(jnp.asarray(mask), tile_n)
     out_d, out_i = masked_pq_topk_pallas(
+        luts_p, codes_p, m, k, tile_q=tile_q, tile_n=tile_n, interpret=interpret
+    )
+    return _finalize_masked(out_d, out_i, q0)
+
+
+def _mask_plane(masks: jnp.ndarray, tile_q: int, tile_n: int) -> jnp.ndarray:
+    """(Q, N) truthy plane -> (Q_pad, N_pad) f32; padded rows/cols get 0
+    (padded queries see every row masked, padded rows never win)."""
+    m = masks.astype(jnp.float32)
+    m, _ = _pad_to(m, 0, tile_q, 0.0)
+    m, _ = _pad_to(m, 1, tile_n, 0.0)
+    return m
+
+
+def masked_exact_topk_multi(
+    queries: jnp.ndarray,
+    points: jnp.ndarray,
+    masks: jnp.ndarray,
+    k: int,
+    *,
+    metric: str = "l2",
+    backend: str = "auto",
+    tile_q: int = 8,
+    tile_n: int = 128,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-query-mask exact top-k: (Q, D) × (N, D) under a (Q, N) mask
+    PLANE (row q masks query q) → (dists (Q, k), ids (Q, k)) per the
+    masked-op contract above.  One kernel call for a whole heterogeneous-
+    predicate batch; Q == 1 dispatches to the single-mask kernel."""
+    masks = jnp.asarray(masks)
+    q = queries.shape[0]
+    assert masks.shape == (q, points.shape[0]), (masks.shape, queries.shape, points.shape)
+    if q == 1:
+        return masked_exact_topk(
+            queries, points, masks[0], k,
+            metric=metric, backend=backend, tile_q=tile_q, tile_n=tile_n,
+        )
+    backend = _resolve(backend)
+    k = int(k)
+    if backend == "ref":
+        return ref.masked_exact_topk_multi(queries, points, masks, k, metric=metric)
+    interpret = not _on_tpu()
+    q_pad, q0 = _pad_to(queries.astype(jnp.float32), 0, tile_q, 0.0)
+    x_pad, _n0 = _pad_to(points.astype(jnp.float32), 0, tile_n, 0.0)
+    q_pad, _ = _pad_to(q_pad, 1, 128, 0.0)
+    x_pad, _ = _pad_to(x_pad, 1, 128, 0.0)
+    m = _mask_plane(masks, tile_q, tile_n)
+    out_d, out_i = masked_exact_topk_multi_pallas(
+        q_pad, x_pad, m, k, metric=metric, tile_q=tile_q, tile_n=tile_n,
+        interpret=interpret,
+    )
+    return _finalize_masked(out_d, out_i, q0)
+
+
+def masked_pq_topk_multi(
+    luts: jnp.ndarray,
+    codes: jnp.ndarray,
+    masks: jnp.ndarray,
+    k: int,
+    *,
+    backend: str = "auto",
+    tile_q: int = 8,
+    tile_n: int = 128,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-query-mask PQ-ADC top-k: per-query LUTs (Q, m, K) × codes (N, m)
+    under a (Q, N) mask plane → (scores (Q, k), ids (Q, k)) per the
+    masked-op contract above.  Q == 1 dispatches to the single-mask kernel."""
+    masks = jnp.asarray(masks)
+    q = luts.shape[0]
+    assert masks.shape == (q, codes.shape[0]), (masks.shape, luts.shape, codes.shape)
+    if q == 1:
+        return masked_pq_topk(
+            luts, codes, masks[0], k, backend=backend, tile_q=tile_q, tile_n=tile_n
+        )
+    backend = _resolve(backend)
+    k = int(k)
+    if backend == "ref":
+        return ref.masked_pq_topk_multi(luts, codes, masks, k)
+    interpret = not _on_tpu()
+    luts_p, q0 = _pad_to(luts.astype(jnp.float32), 0, tile_q, 0.0)
+    codes_p, _n0 = _pad_to(codes.astype(jnp.int32), 0, tile_n, 0)
+    m = _mask_plane(masks, tile_q, tile_n)
+    out_d, out_i = masked_pq_topk_multi_pallas(
         luts_p, codes_p, m, k, tile_q=tile_q, tile_n=tile_n, interpret=interpret
     )
     return _finalize_masked(out_d, out_i, q0)

@@ -65,14 +65,18 @@ def build_pq_luts(
 
 
 def _masked_topk(scores: jnp.ndarray, mask: jnp.ndarray, k: int):
-    """Shared masked top-k epilogue: scores (Q, N), mask (N,) truthy.
+    """Shared masked top-k epilogue: scores (Q, N), mask (N,) shared across
+    queries or (Q, N) per query, truthy.
 
     Masked-out rows are forced to +inf before the reduction.  Returns
     (dists (Q, k) f32, ids (Q, k) int32) per row ascending; slots beyond
     the number of passing rows hold (+inf, -1) — the masked-op contract
     ops.py documents."""
     n = scores.shape[1]
-    scores = jnp.where(mask.astype(bool)[None, :], scores, jnp.inf)
+    mask = jnp.asarray(mask).astype(bool)
+    if mask.ndim == 1:
+        mask = mask[None, :]
+    scores = jnp.where(mask, scores, jnp.inf)
     k_avail = min(k, n)
     neg, idx = jax.lax.top_k(-scores, k_avail)
     d = -neg
@@ -99,6 +103,28 @@ def masked_exact_topk(
 def masked_pq_topk(luts: jnp.ndarray, codes: jnp.ndarray, mask: jnp.ndarray, k: int):
     """Mask-aware PQ-ADC top-k: luts (Q, m, K), codes (N, m), mask (N,)."""
     return _masked_topk(pq_adc_scores(luts, codes), mask, k)
+
+
+def masked_exact_topk_multi(
+    queries: jnp.ndarray,
+    points: jnp.ndarray,
+    masks: jnp.ndarray,
+    k: int,
+    metric: str = "l2",
+):
+    """Per-query-mask exact top-k: queries (Q, D), points (N, D), masks
+    (Q, N) — row q masks query q independently (heterogeneous predicates
+    in one call)."""
+    fn = l2_distances if metric == "l2" else ip_distances
+    return _masked_topk(fn(queries, points), masks, k)
+
+
+def masked_pq_topk_multi(
+    luts: jnp.ndarray, codes: jnp.ndarray, masks: jnp.ndarray, k: int
+):
+    """Per-query-mask PQ-ADC top-k: luts (Q, m, K), codes (N, m), masks
+    (Q, N)."""
+    return _masked_topk(pq_adc_scores(luts, codes), masks, k)
 
 
 def kmeans_assign(points: jnp.ndarray, centroids: jnp.ndarray):

@@ -27,13 +27,12 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.flops import count_jaxpr_flops
 from repro.analysis.hlo import collective_bytes_from_hlo
 from repro.analysis.roofline import compute_roofline
-from repro.configs.base import ARCH_IDS, SHAPES, get_config, shape_cells
+from repro.configs.base import ARCH_IDS, get_config, shape_cells
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import build_cell
 

@@ -10,12 +10,10 @@ the before/after deltas.  Variants are cumulative within a cell where noted.
     PYTHONPATH=src python -m repro.launch.hillclimb qwen.b16   # one
 """
 
-import dataclasses
 import json
 import sys
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

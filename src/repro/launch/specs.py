@@ -13,24 +13,17 @@ All inputs are ShapeDtypeStructs — nothing is allocated.
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig, ShapeConfig, get_config, SHAPES
 from repro.models.model import Model, build_model, param_shapes
-from repro.models.sharding import (
-    DEFAULT_RULES,
-    LogicalRules,
-    logical_to_sharding,
-    spec_for,
-    with_rules,
-)
+from repro.models.sharding import DEFAULT_RULES, LogicalRules, with_rules
 from repro.training.optimizer import AdamWState
 from repro.training.train_loop import TrainStepConfig, make_train_step
 from repro.serving.serve_loop import ServeConfig, make_serve_fns

@@ -16,7 +16,6 @@ import argparse
 import tempfile
 import time
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config, reduced as make_reduced

@@ -13,8 +13,6 @@ attends one query position against a (optionally ring-buffered) cache.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -362,7 +360,6 @@ def decode_attention(
     window: int = 0,
 ) -> jnp.ndarray:
     B, _, H, hd = q.shape
-    W = k_cache.shape[1]
     KV = k_cache.shape[2]
     G = H // KV
     scale = 1.0 / np.sqrt(hd)

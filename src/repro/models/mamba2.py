@@ -29,7 +29,6 @@ def add_mamba2_params(b: ParamBuilder, path: str, cfg, layer_axes=()) -> None:
     d = cfg.d_model
     inner = cfg.ssm_expand * d
     H = cfg.ssm_heads_eff  # inner // P
-    P = inner // H
     N = cfg.ssm_state
     la = tuple([None] * len(layer_axes))
     import numpy as _np

@@ -16,7 +16,7 @@ MODEL_FLOPS/HLO_FLOPs roofline ratio honest for the MoE archs.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -29,6 +29,11 @@ fragment): the coordinator zone-map-prunes shards/row-groups, then plans
 per shard by estimated selectivity — pre-filter exact scan (few rows
 pass), filter-aware masked beam (mid), or over-fetched post-filter (most
 rows pass) — with per-query predicates surviving fragment coalescing.
+A batch carrying heterogeneous predicates is NOT split per predicate
+group on the kernel path: each coalesced fragment ships its per-query
+predicate list and the executor answers every kernel-planned query with
+one multi-mask (Q, N)-plane kernel call per shard
+(``ProbeReport.kernel_dispatches`` counts the calls).
 """
 
 from __future__ import annotations
@@ -63,7 +68,6 @@ from repro.iceberg.diff import diff_snapshots
 from repro.iceberg.puffin import PuffinReader, PuffinWriter, preferred_codec
 from repro.iceberg.snapshot import Snapshot, TableMetadata
 from repro.lakehouse.table import LakehouseTable
-from repro.lakehouse.vparquet import VParquetReader
 from repro.runtime import fragments as F
 from repro.runtime.predicates import Predicate, parse_predicate, row_group_mask
 from repro.runtime.scheduler import ExecutorPool, Scheduler
@@ -154,6 +158,10 @@ class ProbeReport:
     fragments_pruned: int = 0
     row_groups_pruned: int = 0
     est_selectivity: float = 1.0
+    # masked top-k kernel calls summed over the probed shards: with the
+    # mask-plane executor path a coalesced fragment costs one dispatch per
+    # scoring flavor however many distinct predicates the batch carries
+    kernel_dispatches: int = 0
 
 
 @dataclass
@@ -861,6 +869,7 @@ class Coordinator:
                 out.shards_pruned += rep.shards_pruned
                 out.fragments_pruned += rep.fragments_pruned
                 out.row_groups_pruned += rep.row_groups_pruned
+                out.kernel_dispatches += rep.kernel_dispatches
         assert out is not None
         out.hits = hits
         # per-group bytes_read snapshots are cumulative since the batch's
@@ -1049,6 +1058,7 @@ class Coordinator:
         report.stage_b_seconds = time.time() - t1 - report.stage_c_seconds
         report.shards_probed = len(tasks)
         report.cache_hits = sum(1 for r in probe_results if r.cache_hit)
+        report.kernel_dispatches = sum(r.kernel_dispatches for r in probe_results)
         report.bytes_read = self.store.metrics.bytes_read
         if pred is not None:
             report.filtered = True
@@ -1206,6 +1216,7 @@ class Coordinator:
         report.shards_probed = len(probe_results)
         report.probe_fragments = len(probe_results)
         report.cache_hits = sum(1 for r in probe_results if r.cache_hit)
+        report.kernel_dispatches = sum(r.kernel_dispatches for r in probe_results)
         report.bytes_read = self.store.metrics.bytes_read
         if plans:
             report.filtered = True

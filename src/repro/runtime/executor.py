@@ -23,7 +23,6 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import blobs as blobmod
 from repro.core.blobs import ShardLocationMap, decode_shard_blob, encode_shard_blob
 from repro.runtime.predicates import row_group_mask
 from repro.core.vamana import VamanaGraph, VamanaParams, build_vamana
@@ -123,6 +122,11 @@ class Executor:
         self._mask_cache: "OrderedDict[tuple, np.ndarray]" = OrderedDict()
         self._mask_cache_capacity = 64
         self._lock = threading.Lock()
+        # debug/bench escape hatch: route heterogeneous-filter fragments
+        # through the legacy one-kernel-call-per-predicate-group loop
+        # instead of the single mask-plane call (parity tests and the
+        # table2.filtered_hetero bench compare the two paths)
+        self.force_group_loop = False
         # failure injection
         self.dead = False
         self._fail_budget = 0
@@ -131,6 +135,13 @@ class Executor:
         self.tasks_done = 0
         self.cache_hits = 0
         self.cache_misses = 0
+        # masked top-k kernel calls issued (single- and multi-mask flavors).
+        # The executor-wide total is lock-guarded; the per-TASK counts in
+        # Probe/BatchProbeResult come from a thread-local tally (each task
+        # attempt runs on its own scheduler thread), so concurrent probes
+        # on one executor cannot misattribute each other's dispatches.
+        self.masked_kernel_dispatches = 0
+        self._dispatch_tls = threading.local()
 
     # -- health -----------------------------------------------------------
     def heartbeat(self) -> bool:
@@ -244,6 +255,38 @@ class Executor:
         return out if out is not None else np.empty((0, 0), np.float32)
 
     # -- filtered search ----------------------------------------------------
+    def _count_dispatch(self) -> None:
+        """Record one masked-kernel call: executor-wide total (locked) +
+        the current task's thread-local tally (see __init__)."""
+        with self._lock:
+            self.masked_kernel_dispatches += 1
+        self._dispatch_tls.count = getattr(self._dispatch_tls, "count", 0) + 1
+
+    def _task_dispatches(self) -> int:
+        return getattr(self._dispatch_tls, "count", 0)
+
+    @staticmethod
+    def _plan_flavor(mode: str, match_count: int, k_eff: int, use_pq: bool, has_pq: bool) -> str:
+        """Per-query scoring-flavor classification, shared by the legacy
+        per-group path (_filtered_search) and the mask-plane path
+        (_probe_mask_plane) so the two can NEVER drift apart — the
+        bit-for-bit parity the tests and the table2.filtered_hetero gate
+        assert depends on both applying exactly these thresholds.
+        Returns 'beam' (over-fetched postfilter), 'pq' (masked ADC +
+        exact rerank), or 'exact' (masked exact scan; tiny passing sets
+        are cheaper to scan exactly than to search, whatever the mode)."""
+        small = match_count <= max(4 * k_eff, 64)
+        if mode == "postfilter" and not small:
+            return "beam"
+        if mode == "mask" and use_pq and has_pq and not small:
+            return "pq"
+        return "exact"
+
+    @staticmethod
+    def _pq_pool(match_count: int, k_eff: int) -> int:
+        """ADC pool size for the mask plan — shared for the same reason."""
+        return int(min(match_count, max(4 * k_eff, 32)))
+
     def _predicate_mask(self, locmap: ShardLocationMap, n: int, pred, shard_key: str) -> np.ndarray:
         """Executor-side row bitmask: does vector id's source row satisfy
         ``pred``?  Each (file, row_group) referenced by the location map is
@@ -287,6 +330,7 @@ class Executor:
         when beam search can't surface enough passing candidates.  Output
         is always (Q, k_eff); slots beyond the passing-row count hold
         (+inf, -1) per the masked-op contract."""
+        self._count_dispatch()
         d, ids = ops.masked_exact_topk(
             jnp.asarray(np.ascontiguousarray(queries, np.float32)),
             jnp.asarray(graph.vectors[: graph.n]),
@@ -309,16 +353,10 @@ class Executor:
         from repro.core.pq import build_luts
 
         q = np.ascontiguousarray(queries, np.float32)
-        match_count = int(live_mask.sum())
-        pool = int(min(match_count, max(4 * k_eff, 32)))
+        pool = self._pq_pool(int(live_mask.sum()), k_eff)
         luts = build_luts(graph.pq, q)  # (Q, m, K)
-        # codes are immutable between refreshes; cache the int32 device copy
-        # on the graph object (keyed by n — insert_batch grows n, refresh
-        # swaps the graph) instead of re-widening O(N·m) bytes per probe
-        codes = getattr(graph, "_codes_i32", None)
-        if codes is None or codes.shape[0] != graph.n:
-            codes = jnp.asarray(graph.pq_codes[: graph.n].astype(np.int32))
-            graph._codes_i32 = codes
+        codes = self._device_codes(graph)
+        self._count_dispatch()
         _pq_d, pids = ops.masked_pq_topk(
             jnp.asarray(luts),
             codes,
@@ -326,8 +364,26 @@ class Executor:
             pool,
             backend="auto",
         )
-        pids = np.asarray(pids, np.int64)
-        # exact rerank of the ADC pool (sentinel slots stay +inf / -1)
+        return self._rerank_pq_pool(graph, q, np.asarray(pids, np.int64), k_eff)
+
+    def _device_codes(self, graph):
+        """Codes are immutable between refreshes; cache the int32 device
+        copy on the graph object (keyed by n — insert_batch grows n,
+        refresh swaps the graph) instead of re-widening O(N·m) bytes per
+        probe."""
+        codes = getattr(graph, "_codes_i32", None)
+        if codes is None or codes.shape[0] != graph.n:
+            codes = jnp.asarray(graph.pq_codes[: graph.n].astype(np.int32))
+            graph._codes_i32 = codes
+        return codes
+
+    def _rerank_pq_pool(
+        self, graph, q: np.ndarray, pids: np.ndarray, k_out: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact full-precision rerank of an ADC pool (Q, pool): sentinel
+        slots (pid < 0) stay (+inf, -1); rows are independent, so the math
+        is identical whether the pool came from a per-group call or one
+        multi-mask call over the whole fragment."""
         safe = np.clip(pids, 0, graph.n - 1)
         vecs = graph.vectors[safe]  # (Q, pool, D)
         if graph.params.metric == "ip":
@@ -335,8 +391,57 @@ class Executor:
         else:
             d = np.sum((vecs - q[:, None, :]) ** 2, axis=-1)
         d = np.where(pids < 0, np.inf, d).astype(np.float32)
-        order = np.argsort(d, axis=1)[:, :k_eff]
+        order = np.argsort(d, axis=1)[:, :k_out]
         return np.take_along_axis(d, order, axis=1), np.take_along_axis(pids, order, axis=1)
+
+    def _exact_masked_multi(
+        self, graph, queries: np.ndarray, mask_plane: np.ndarray, k_out: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Heterogeneous-predicate Stage A: ONE ``masked_exact_topk_multi``
+        call answers every query of a coalesced fragment under its own
+        (Q, N) bitmask row — the per-predicate-group kernel loop collapses
+        to a single dispatch per shard."""
+        self._count_dispatch()
+        d, ids = ops.masked_exact_topk_multi(
+            jnp.asarray(np.ascontiguousarray(queries, np.float32)),
+            jnp.asarray(graph.vectors[: graph.n]),
+            jnp.asarray(mask_plane),
+            int(k_out),
+            metric=graph.params.metric,
+            backend="auto",
+        )
+        return np.asarray(d), np.asarray(ids, np.int64)
+
+    def _masked_pq_stage_multi(
+        self,
+        graph,
+        queries: np.ndarray,
+        mask_plane: np.ndarray,
+        pool: int,
+        k_out: int,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Heterogeneous-predicate mask plan on PQ shards: ONE multi-mask
+        ADC kernel call scores every query's passing codes at the shared
+        ``pool`` size, then the shared exact rerank.  One pool suffices for
+        bit-for-bit parity with the per-group path: the 'pq' flavor
+        requires match_count > max(4·k_eff, 64), which pins
+        k_eff = k·oversample and collapses each group's
+        min(match_count, max(4·k_eff, 32)) to the same constant — see
+        _plan_flavor / _pq_pool."""
+        from repro.core.pq import build_luts
+
+        q = np.ascontiguousarray(queries, np.float32)
+        luts = build_luts(graph.pq, q)  # (Q, m, K)
+        codes = self._device_codes(graph)
+        self._count_dispatch()
+        _pq_d, pids = ops.masked_pq_topk_multi(
+            jnp.asarray(luts),
+            codes,
+            jnp.asarray(mask_plane),
+            int(pool),
+            backend="auto",
+        )
+        return self._rerank_pq_pool(graph, q, np.asarray(pids, np.int64), k_out)
 
     def _filtered_search(
         self, task, graph, locmap, queries: np.ndarray, pred, mode: str
@@ -367,15 +472,12 @@ class Executor:
                 np.full((Qn, 1), -1, np.int64),
             )
         k_eff = min(task.k * task.oversample, match_count)
-        # tiny passing sets are cheaper to scan exactly than to search
-        if mode in ("prefilter", "mask") or match_count <= max(4 * k_eff, 64):
-            if (
-                mode == "mask"
-                and task.use_pq
-                and graph.pq is not None
-                and match_count > max(4 * k_eff, 64)
-            ):
-                return self._masked_pq_stage(graph, queries, live_mask, k_eff)
+        flavor = self._plan_flavor(
+            mode, match_count, k_eff, task.use_pq, graph.pq is not None
+        )
+        if flavor == "pq":
+            return self._masked_pq_stage(graph, queries, live_mask, k_eff)
+        if flavor == "exact":
             return self._exact_masked(graph, queries, live_mask, k_eff)
         # postfilter: most rows pass, so the ordinary beam surfaces enough
         n_live = graph.num_live
@@ -528,6 +630,7 @@ class Executor:
         graph, locmap, hit = self._load_shard(
             task.puffin_path, task.blob_offset, task.blob_length, task.blob_codec, task.cache_key
         )
+        self._dispatch_tls.count = 0
         if task.predicate is not None:
             dists, ids = self._filtered_search(
                 task, graph, locmap, task.queries, task.predicate, task.filter_mode
@@ -535,7 +638,8 @@ class Executor:
         else:
             dists, ids = self._shard_search(task, graph)
         result = F.ProbeResult(
-            shard_id=task.shard_id, executor_id=self.executor_id, cache_hit=hit
+            shard_id=task.shard_id, executor_id=self.executor_id, cache_hit=hit,
+            kernel_dispatches=self._task_dispatches(),
         )
         for qi in range(task.queries.shape[0]):
             result.candidates.append(
@@ -545,10 +649,14 @@ class Executor:
         return result
 
     def _probe_shard_batch(self, task: F.BatchProbeTaskInfo) -> F.BatchProbeResult:
-        """Coalesced Stage A: one shard load, then one batched beam-search
-        pass per predicate group — queries sharing a predicate (or sharing
-        none) are answered together, so filtered and unfiltered queries ride
-        the same coalesced fragment without re-evaluating masks per query."""
+        """Coalesced Stage A: one shard load, then ONE multi-mask kernel
+        call for every kernel-planned query of the fragment — regardless of
+        how many distinct predicates the batch carries.  Each query gets its
+        own row of a (Q, N) mask plane assembled from the per-predicate
+        ``_mask_cache`` bitmasks (unfiltered queries an all-ones row,
+        tombstones AND-ed in); the legacy per-predicate-group loop survives
+        only for postfilter-planned beam queries (and behind
+        ``force_group_loop`` for parity/bench comparison)."""
         t0 = time.time()
         graph, locmap, hit = self._load_shard(
             task.puffin_path, task.blob_offset, task.blob_length, task.blob_codec, task.cache_key
@@ -556,8 +664,11 @@ class Executor:
         result = F.BatchProbeResult(
             shard_id=task.shard_id, executor_id=self.executor_id, cache_hit=hit
         )
+        self._dispatch_tls.count = 0
         qidx = np.asarray(task.query_index, np.int64)
         if not task.filters:
+            # fully-unfiltered fragments keep the batched beam search: its
+            # hits must stay byte-identical to sequential probe() calls
             dists, ids = self._shard_search(task, graph)
             for bi, qi in enumerate(qidx):
                 result.candidates[int(qi)] = self._row_candidates(
@@ -565,24 +676,127 @@ class Executor:
                 )
             result.probe_seconds = time.time() - t0
             return result
+        if self.force_group_loop:
+            self._probe_groups(task, graph, locmap, result, qidx, range(len(qidx)))
+        else:
+            self._probe_mask_plane(task, graph, locmap, result, qidx)
+        result.kernel_dispatches = self._task_dispatches()
+        result.probe_seconds = time.time() - t0
+        return result
+
+    def _probe_groups(
+        self, task, graph, locmap, result, qidx: np.ndarray, rows
+    ) -> None:
+        """Legacy per-predicate-group Stage A: one batched pass per distinct
+        (predicate, mode) among ``rows`` — N distinct predicates degrade to
+        N sequential kernel/beam passes.  Kept as the postfilter path and
+        the ``force_group_loop`` comparison baseline."""
         groups: Dict[tuple, List[int]] = {}
-        for bi in range(len(qidx)):
+        for bi in rows:
             mode = task.filter_modes[bi] if task.filter_modes else "mask"
             groups.setdefault((task.filters[bi], mode), []).append(bi)
-        for (pred, mode), rows in groups.items():
-            queries = task.queries[rows]
+        for (pred, mode), members in groups.items():
+            queries = task.queries[members]
             if pred is None:
                 dists, ids = self._shard_search(task, graph, queries)
             else:
                 dists, ids = self._filtered_search(
                     task, graph, locmap, queries, pred, mode
                 )
-            for j, bi in enumerate(rows):
+            for j, bi in enumerate(members):
                 result.candidates[int(qidx[bi])] = self._row_candidates(
                     graph, locmap, dists[j], ids[j], task.shard_id
                 )
-        result.probe_seconds = time.time() - t0
-        return result
+
+    def _probe_mask_plane(
+        self, task, graph, locmap, result, qidx: np.ndarray
+    ) -> None:
+        """Mask-plane Stage A: classify every query of the fragment by the
+        same per-query rules ``_filtered_search`` applies, then answer all
+        exact-flavor queries with one ``masked_exact_topk_multi`` call and
+        all PQ-flavor queries with one ``masked_pq_topk_multi`` call —
+        heterogeneous predicates no longer multiply kernel dispatches.
+        Only queries whose plan is a genuine over-fetched postfilter beam
+        (most rows pass, big shard) drop back to the group loop."""
+        shard_key = f"{task.cache_key or task.puffin_path}@{task.blob_offset}"
+        n = graph.n
+        tomb_live = ~graph.tombstones[:n]
+        k_out = max(1, min(task.k * task.oversample, n))
+        exact_rows: List[int] = []
+        exact_masks: List[np.ndarray] = []
+        exact_preds: List[object] = []
+        pq_rows: List[int] = []
+        pq_masks: List[np.ndarray] = []
+        pq_preds: List[object] = []
+        beam_rows: List[int] = []
+        # shared ADC pool for every pq-flavor row (see _masked_pq_stage_multi)
+        pq_pool = max(4 * task.k * task.oversample, 32)
+        for bi in range(len(qidx)):
+            pred = task.filters[bi]
+            mode = task.filter_modes[bi] if task.filter_modes else "mask"
+            if pred is None:
+                # unfiltered query in a mixed fragment: all-ones row (only
+                # tombstones masked) — it rides the same kernel call
+                exact_rows.append(bi)
+                exact_masks.append(tomb_live)
+                exact_preds.append(None)
+                continue
+            live = self._predicate_mask(locmap, n, pred, shard_key) & tomb_live
+            match = int(live.sum())
+            if match == 0:
+                result.candidates[int(qidx[bi])] = []
+                continue
+            k_eff = min(task.k * task.oversample, match)
+            flavor = self._plan_flavor(
+                mode, match, k_eff, task.use_pq, graph.pq is not None
+            )
+            if flavor == "beam":
+                beam_rows.append(bi)
+            elif flavor == "pq":
+                pq_rows.append(bi)
+                pq_masks.append(live)
+                pq_preds.append(pred)
+            else:
+                exact_rows.append(bi)
+                exact_masks.append(live)
+                exact_preds.append(pred)
+        # Homogeneous short-circuit: when every row of a flavor carries the
+        # SAME predicate (or all are unfiltered), their masks are equal, so
+        # ship the shared (N,) mask to the single-mask kernel instead of
+        # materializing Q identical plane rows ((Q, N) f32 host->device
+        # traffic for zero coalescing gain).  Same math, same single
+        # dispatch.
+        if exact_rows:
+            if len(set(exact_preds)) == 1:
+                dists, ids = self._exact_masked(
+                    graph, task.queries[exact_rows], exact_masks[0], k_out
+                )
+            else:
+                dists, ids = self._exact_masked_multi(
+                    graph, task.queries[exact_rows], np.stack(exact_masks), k_out
+                )
+            for j, bi in enumerate(exact_rows):
+                result.candidates[int(qidx[bi])] = self._row_candidates(
+                    graph, locmap, dists[j], ids[j], task.shard_id
+                )
+        if pq_rows:
+            if len(set(pq_preds)) == 1:
+                # k_out == k·oversample here (pq flavor pins k_eff; see
+                # _masked_pq_stage_multi), so the per-group entry point
+                # computes the identical pool
+                dists, ids = self._masked_pq_stage(
+                    graph, task.queries[pq_rows], pq_masks[0], k_out
+                )
+            else:
+                dists, ids = self._masked_pq_stage_multi(
+                    graph, task.queries[pq_rows], np.stack(pq_masks), pq_pool, k_out
+                )
+            for j, bi in enumerate(pq_rows):
+                result.candidates[int(qidx[bi])] = self._row_candidates(
+                    graph, locmap, dists[j], ids[j], task.shard_id
+                )
+        if beam_rows:
+            self._probe_groups(task, graph, locmap, result, qidx, beam_rows)
 
     def _rerank(self, task: F.RerankTaskInfo) -> F.RerankResult:
         rows_flat: List[Tuple[str, int, int]] = []

@@ -124,6 +124,9 @@ class ProbeResult:
     candidates: List[List[ProbeCandidate]] = field(default_factory=list)
     cache_hit: bool = False
     probe_seconds: float = 0.0
+    # masked top-k kernel calls this task issued (observability for the
+    # heterogeneous-filter coalescing win; 0 on pure beam paths)
+    kernel_dispatches: int = 0
 
 
 @dataclass
@@ -147,7 +150,12 @@ class BatchProbeTaskInfo(TaskBase):
     # per-query predicates, row-aligned with ``queries`` (None entry = that
     # query is unfiltered).  ``filters`` being None means the whole fragment
     # is unfiltered.  Per-query masks survive fragment coalescing: merged
-    # fragments concatenate these lists alongside the query block.
+    # fragments concatenate these lists alongside the query block.  The
+    # executor answers every kernel-planned (prefilter/mask/unfiltered-in-
+    # mixed) query of the merged fragment with ONE multi-mask kernel call
+    # per scoring flavor — a (Q, N) mask plane, one row per query — so the
+    # coalesce key deliberately ignores predicates: fragments are NEVER
+    # split per predicate group, however heterogeneous the batch.
     filters: Optional[List[Optional[object]]] = None
     filter_modes: Optional[List[str]] = None
 
@@ -173,6 +181,11 @@ class BatchProbeResult:
     candidates: Dict[int, List[ProbeCandidate]] = field(default_factory=dict)
     cache_hit: bool = False
     probe_seconds: float = 0.0
+    # masked top-k kernel calls this fragment cost: 1 per scoring flavor on
+    # the mask-plane path, vs one per distinct predicate on the legacy
+    # group loop — the coordinator sums these into
+    # ``ProbeReport.kernel_dispatches`` and the bench gates on the drop
+    kernel_dispatches: int = 0
 
 
 def coalesce_batch_probes(tasks: Sequence[object]) -> List[object]:

@@ -30,7 +30,7 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.runtime.coordinator import Coordinator, IndexConfig, ProbeHit
+from repro.runtime.coordinator import Coordinator, IndexConfig
 from repro.runtime.predicates import PredicateError, parse_predicate
 
 
@@ -208,7 +208,7 @@ class SqlFrontend:
         if ddl.action == "drop":
             # unbinding = metadata-only commit with no statistics-file; the
             # orphaned Puffin is reaped by GC
-            meta = self.coordinator.catalog.load_table(ddl.table)
+            self.coordinator.catalog.load_table(ddl.table)
 
             def mutate(m):
                 snap = m.current_snapshot()

@@ -22,8 +22,8 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 from repro.runtime import fragments as F
 from repro.runtime.executor import Executor, ExecutorDead, InjectedFailure

@@ -22,13 +22,13 @@ import queue as queue_mod
 import threading
 import time
 from concurrent.futures import Future
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.models.model import Model, param_shapes
 from repro.models.sharding import DEFAULT_RULES, LogicalRules, logical_to_sharding, spec_for
@@ -44,6 +44,10 @@ class MicroBatchStats:
     # adaptive sizing: how often the drainer grew / shrank max_batch
     grows: int = 0
     shrinks: int = 0
+    # masked top-k kernel calls the drained probes cost (mask-plane path:
+    # one per scoring flavor per shard per batch, however many distinct
+    # predicates the concurrent submitters carried)
+    kernel_dispatches: int = 0
 
 
 class ProbeMicroBatcher:
@@ -61,8 +65,12 @@ class ProbeMicroBatcher:
     until ``max_batch`` accumulate), groups requests by ``k`` (a batch probe
     shares one k), and resolves each Future with its query's hits.  Filtered
     and unfiltered submissions batch together: per-query predicates ride the
-    same ``probe_batch`` call.  Errors propagate to every Future in the
-    failed batch.
+    same ``probe_batch`` call, and a batch does NOT need filter-homogeneous
+    traffic to hit the kernel fast path — the executors answer a coalesced
+    fragment's kernel-planned queries with one multi-mask kernel call per
+    shard however many distinct predicates the submitters carried
+    (``stats.kernel_dispatches`` counts the calls).  Errors propagate to
+    every Future in the failed batch.
 
     With ``adaptive=True`` the drainer resizes ``max_batch`` from observed
     queue depth instead of holding the configured constant: a full drain
@@ -211,6 +219,7 @@ class ProbeMicroBatcher:
             self.stats.batches += 1
             self.stats.queries += len(items)
             self.stats.filtered_queries += sum(1 for f in filters if f is not None)
+            self.stats.kernel_dispatches += report.kernel_dispatches
             self.stats.max_batch_seen = max(self.stats.max_batch_seen, len(items))
             for f, hits in zip(futures, report.hits):
                 f.set_result(hits)

@@ -22,7 +22,6 @@ from __future__ import annotations
 import io
 import json
 import threading
-from dataclasses import dataclass
 from typing import Any, Optional, Tuple
 
 import jax

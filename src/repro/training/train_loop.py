@@ -12,13 +12,11 @@ runs as a ``lax.scan`` over gradient accumulation steps (essential for the
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.model import Model, param_shapes

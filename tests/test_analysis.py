@@ -2,7 +2,6 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.analysis.flops import count_jaxpr_flops
@@ -12,7 +11,8 @@ from repro.analysis.hlo import _shape_bytes, _trip_count, collective_bytes_from_
 def test_flops_plain_matmul():
     a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
     b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
-    f = lambda x, y: x @ y
+    def f(x, y):
+        return x @ y
     got = count_jaxpr_flops(f, a, b)
     assert got == 2 * 64 * 128 * 32
 

@@ -42,7 +42,7 @@ def test_snapshot_chain_and_time_travel(table):
 def test_diff_added_deleted(table):
     m1 = table.append_vectors(_vecs(100), num_files=2)
     s1 = m1.current_snapshot_id
-    m2 = table.append_vectors(_vecs(50, seed=1), num_files=1)
+    table.append_vectors(_vecs(50, seed=1), num_files=1)
     doomed = table.current_files()[0].path
     m3 = table.delete_files([doomed])
     d = diff_snapshots(table.store, m3, s1, m3.current_snapshot_id)
@@ -109,7 +109,7 @@ def test_statistics_file_binding_and_staleness(table):
     )
     assert m2.current_snapshot().statistics_file == "warehouse/t/metadata/idx.puffin"
     # appending carries the binding forward as stale (twice!)
-    m3 = table.append_vectors(_vecs(5, seed=2))
+    table.append_vectors(_vecs(5, seed=2))
     m4 = table.append_vectors(_vecs(5, seed=3))
     assert m4.current_snapshot().statistics_file is None
     assert (
@@ -130,7 +130,7 @@ def test_stale_base_guard(table):
 
 
 def test_orphan_gc(table):
-    m1 = table.append_vectors(_vecs(50), num_files=2)
+    table.append_vectors(_vecs(50), num_files=2)
     # an uncommitted leftover (e.g. crashed index build)
     table.store.put("warehouse/t/metadata/leftover-shard.blob", b"junk")
     orphans = collect_orphans(table.store, table.metadata())

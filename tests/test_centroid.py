@@ -6,7 +6,6 @@ match.  The hypothesis test drives that invariant over random corpora.
 """
 
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.centroid_index import CentroidIndex, build_centroid_index

@@ -38,7 +38,32 @@ def _clean_doc():
                 "shards_pruned": 1,
                 "probe_fragments": 1,
                 "unfiltered_fragments": 2,
+                "oracle_qps": 40.0,
+                "speedup_vs_oracle": 1.5,
             },
+            "table2.filtered_hetero": {
+                "throughput_qps": 45.0,
+                "grouped_qps": 20.0,
+                "speedup_vs_grouped": 2.25,
+                "recall": 1.0,
+                "kernel_dispatches": 2,
+                "grouped_dispatches": 16,
+                "distinct_filters": 8,
+                "parity_ok": True,
+            },
+        },
+    }
+
+
+def _kernels_doc():
+    return {
+        "meta": {"bench": "bench_kernels"},
+        "rows": {
+            "kernel.rerank": {"throughput_qps": 22.0},
+            "kernel.masked_exact_topk": {"throughput_qps": 45.0},
+            "kernel.masked_exact_topk_multi": {"throughput_qps": 65.0},
+            "kernel.masked_pq_topk_multi": {"throughput_qps": 5.0},
+            "anchor.numpy_matmul": {"throughput_qps": 300.0},
         },
     }
 
@@ -50,19 +75,36 @@ def test_clean_run_passes():
 
 
 def test_throughput_regression_fails():
-    base = _clean_doc()
+    """Wall-clock baseline gating lives on the kernel rows: a single
+    kernel row dropping past its budget fails."""
+    base = _kernels_doc()
     cur = copy.deepcopy(base)
-    cur["rows"]["table2.filtered"]["throughput_qps"] = 60.0 * 0.7  # −30% > 20% budget
+    cur["rows"]["kernel.rerank"]["throughput_qps"] *= 0.5  # −50% > 35% budget
     failures = check_bench.check(cur, base)
-    assert len(failures) == 1 and "table2.filtered" in failures[0]
+    assert len(failures) == 1 and "kernel.rerank" in failures[0]
     assert "throughput" in failures[0]
 
 
 def test_throughput_within_budget_passes():
+    base = _kernels_doc()
+    cur = copy.deepcopy(base)
+    cur["rows"]["kernel.rerank"]["throughput_qps"] *= 0.75  # −25% < 35%
+    assert check_bench.check(cur, base) == []
+
+
+def test_table2_rows_are_not_wall_clock_gated():
+    """Every table2 row rides the scheduler, so its wall clock never
+    gates against the baseline — only its same-window ratios and recall
+    do.  A filtered-row throughput drop (and a sub-1 oracle ratio, normal
+    at tiny scale) passes; its recall dropping fails."""
     base = _clean_doc()
     cur = copy.deepcopy(base)
-    cur["rows"]["table2.filtered"]["throughput_qps"] = 60.0 * 0.85  # −15% < 20%
+    cur["rows"]["table2.filtered"]["throughput_qps"] *= 0.4
+    cur["rows"]["table2.filtered"]["speedup_vs_oracle"] = 0.8
     assert check_bench.check(cur, base) == []
+    cur["rows"]["table2.filtered"]["recall"] = 0.96
+    failures = check_bench.check(cur, base)
+    assert any("table2.filtered" in f and "recall" in f for f in failures)
 
 
 def test_ungated_row_throughput_is_informational_but_recall_is_not():
@@ -92,7 +134,7 @@ def test_baseline_row_missing_from_current_fails():
 def test_uniform_machine_slowdown_passes():
     """Every row slower by the same factor = a slower machine, not a
     regression: the median-ratio normalization must absorb it."""
-    base = _clean_doc()
+    base = _kernels_doc()
     cur = copy.deepcopy(base)
     for row in cur["rows"].values():
         if "throughput_qps" in row:
@@ -102,12 +144,15 @@ def test_uniform_machine_slowdown_passes():
 
 def test_single_row_regression_sticks_out_of_machine_factor():
     """One row regressing on an otherwise-identical machine is caught even
-    though the median ratio stays ~1."""
-    base = _clean_doc()
+    though the anchor-pinned factor stays ~1."""
+    base = _kernels_doc()
     cur = copy.deepcopy(base)
-    cur["rows"]["table2.filtered"]["throughput_qps"] *= 0.5
+    cur["rows"]["kernel.masked_pq_topk_multi"]["throughput_qps"] *= 0.5
     failures = check_bench.check(cur, base)
-    assert any("table2.filtered" in f and "machine factor" in f for f in failures)
+    assert any(
+        "kernel.masked_pq_topk_multi" in f and "machine factor" in f
+        for f in failures
+    )
 
 
 def test_any_recall_drop_fails():
@@ -148,7 +193,7 @@ def test_new_row_without_baseline_entry_is_not_gated():
     "doctor,expected_exit",
     [
         (lambda rows: None, 0),  # untouched => clean
-        (lambda rows: rows["table2.filtered"].__setitem__("throughput_qps", 1.0), 1),
+        (lambda rows: rows["table2.filtered"].__setitem__("recall", 0.5), 1),
         (lambda rows: rows["table2.batched"].__setitem__("recall", 0.5), 1),
     ],
 )
@@ -174,3 +219,146 @@ def test_cli_unreadable_input(tmp_path):
     bad = tmp_path / "bad.json"
     bad.write_text("{not json")
     assert check_bench.main([str(bad), "--baseline", ""]) == 2
+
+
+def test_cli_empty_or_rowless_input_is_an_error(tmp_path, capsys):
+    """A bench that crashed before writing its record must FAIL the gate,
+    not pass vacuously: an empty file and a row-less document are both
+    invocation errors (exit 2), never exit 0."""
+    empty = tmp_path / "empty.json"
+    empty.write_text("")
+    assert check_bench.main([str(empty), "--baseline", ""]) == 2
+    assert "empty" in capsys.readouterr().err
+    rowless = tmp_path / "rowless.json"
+    rowless.write_text(json.dumps({"meta": {"bench": "x"}, "rows": {}}))
+    assert check_bench.main([str(rowless), "--baseline", ""]) == 2
+    assert "no benchmark rows" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous-filter row gates
+# ---------------------------------------------------------------------------
+
+
+def test_hetero_absolute_gates():
+    """The mask-plane acceptance gates: worse-or-equal dispatch count than
+    the per-group path, speedup <= 1, parity breakage, and recall below the
+    floor each fail without any baseline."""
+    cur = _clean_doc()
+    h = cur["rows"]["table2.filtered_hetero"]
+    h["kernel_dispatches"] = 16  # == grouped: coalescing win lost
+    h["speedup_vs_grouped"] = 0.8
+    h["parity_ok"] = False
+    h["recall"] = 0.90
+    failures = check_bench.check(cur, None)
+    assert any("no fewer kernel dispatches" in f for f in failures)
+    assert any("not above the per-predicate-group path" in f for f in failures)
+    assert any("diverge from the per-predicate-group" in f for f in failures)
+    assert any("table2.filtered_hetero" in f and "recall vs oracle" in f for f in failures)
+
+
+def test_hetero_clean_row_passes():
+    doc = _clean_doc()
+    assert check_bench.check(doc, copy.deepcopy(doc)) == []
+
+
+def test_hetero_gates_on_speedup_ratio_not_wall_clock():
+    """filtered_hetero spans two scheduler waves, so its wall clock is as
+    load-sensitive as the batched row's: a throughput drop alone must NOT
+    fail (it is not baseline-throughput-gated), but the same-window
+    speedup_vs_grouped ratio falling to 1 must."""
+    base = _clean_doc()
+    cur = copy.deepcopy(base)
+    cur["rows"]["table2.filtered_hetero"]["throughput_qps"] *= 0.4
+    cur["rows"]["table2.filtered_hetero"]["grouped_qps"] *= 0.4  # same window
+    assert check_bench.check(cur, base) == []
+    cur["rows"]["table2.filtered_hetero"]["speedup_vs_grouped"] = 0.97
+    failures = check_bench.check(cur, base)
+    assert any(
+        "table2.filtered_hetero" in f and "not above the per-predicate-group" in f
+        for f in failures
+    )
+
+
+# ---------------------------------------------------------------------------
+# kernel-bench file (multi-file gating)
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_rows_are_throughput_gated():
+    """Every kernel.* row is throughput-gated (prefix rule), with the same
+    median-ratio machine-factor normalization — including the multi-mask
+    rows."""
+    base = _kernels_doc()
+    cur = copy.deepcopy(base)
+    cur["rows"]["kernel.masked_exact_topk_multi"]["throughput_qps"] *= 0.5
+    failures = check_bench.check(cur, base)
+    assert len(failures) == 1
+    assert "kernel.masked_exact_topk_multi" in failures[0]
+    assert "machine factor" in failures[0]
+    # a uniform slowdown (slower CI runner) is absorbed by the factor —
+    # the anchor row slows down with everything else
+    uniform = copy.deepcopy(base)
+    for row in uniform["rows"].values():
+        row["throughput_qps"] *= 0.3
+    assert check_bench.check(uniform, base) == []
+
+
+def test_anchor_row_pins_the_machine_factor():
+    """A uniform regression of EVERY kernel row would read as a slower
+    machine under an all-rows median — the pure-numpy anchor row (which no
+    repo change can slow down) pins the factor, so it is caught."""
+    base = _kernels_doc()
+    cur = copy.deepcopy(base)
+    for name, row in cur["rows"].items():
+        if name.startswith("kernel."):
+            row["throughput_qps"] *= 0.3  # anchor stays at baseline speed
+    failures = check_bench.check(cur, base)
+    gated = [n for n in base["rows"] if n.startswith("kernel.")]
+    assert len(failures) == len(gated)
+    assert all("machine factor 1.00" in f for f in failures)
+
+
+def test_kernel_rows_use_wider_noise_budget():
+    """Eager-matmul timing floats ±20% on shared runners even after the
+    interleaved best-of measurement, so kernel rows gate at
+    KERNEL_MAX_REGRESS (35%) instead of the default 20%: a −30% drop
+    passes, a −50% drop fails (see test_throughput_regression_fails)."""
+    base = _kernels_doc()
+    cur = copy.deepcopy(base)
+    cur["rows"]["kernel.rerank"]["throughput_qps"] *= 0.70
+    assert check_bench.check(cur, base) == []
+
+
+def test_cli_multiple_bench_files(tmp_path):
+    """One invocation gates several bench records, each against its own
+    baseline; a regression in ANY file fails the run."""
+    qp_base, qp_cur = _clean_doc(), _clean_doc()
+    k_base, k_cur = _kernels_doc(), _kernels_doc()
+    k_cur["rows"]["kernel.masked_pq_topk_multi"]["throughput_qps"] *= 0.4
+    paths = {}
+    for name, doc in [
+        ("qp_cur", qp_cur), ("qp_base", qp_base), ("k_cur", k_cur), ("k_base", k_base)
+    ]:
+        p = tmp_path / f"{name}.json"
+        p.write_text(json.dumps(doc))
+        paths[name] = str(p)
+    rc = check_bench.main([
+        paths["qp_cur"], paths["k_cur"],
+        "--baseline", paths["qp_base"], "--baseline", paths["k_base"],
+    ])
+    assert rc == 1
+    # clean kernels file: whole invocation passes
+    pathlib.Path(paths["k_cur"]).write_text(json.dumps(_kernels_doc()))
+    rc = check_bench.main([
+        paths["qp_cur"], paths["k_cur"],
+        "--baseline", paths["qp_base"], "--baseline", paths["k_base"],
+    ])
+    assert rc == 0
+
+
+def test_cli_mismatched_baseline_count(tmp_path):
+    p = tmp_path / "cur.json"
+    p.write_text(json.dumps(_clean_doc()))
+    rc = check_bench.main([str(p), str(p), "--baseline", ""])
+    assert rc == 2

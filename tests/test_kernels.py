@@ -208,6 +208,129 @@ def test_masked_pq_topk_all_masked(backend):
 
 
 # ---------------------------------------------------------------------------
+# multi-mask top-k (per-query (Q, N) mask planes — heterogeneous filters)
+# ---------------------------------------------------------------------------
+
+
+def _assert_masked_contract_multi(dists, ids, full_d, masks, k):
+    """Per-query plane contract: each row obeys the single-mask contract
+    under ITS OWN mask row."""
+    for qi in range(dists.shape[0]):
+        _assert_masked_contract(
+            dists[qi : qi + 1], ids[qi : qi + 1], full_d[qi : qi + 1], masks[qi], k
+        )
+
+
+# non-tile-aligned Q and N (tile_q=8, tile_n=128 defaults), single-row, and
+# k > passing-rows edges
+@pytest.mark.parametrize("q,n,k", [(2, 1, 1), (3, 37, 5), (9, 130, 10), (5, 300, 320)])
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_masked_exact_topk_multi_matches_ref(q, n, k, metric):
+    rng = np.random.default_rng(q * 17 + n)
+    Q, X = _np(q, 16, seed=q), _np(n, 16, seed=n)
+    masks = rng.random((q, n)) < 0.4
+    if q > 1:
+        masks[1] = False  # one all-masked QUERY among live ones
+    full = np.asarray(
+        ops.exact_distances(jnp.asarray(Q), jnp.asarray(X), metric=metric, backend="ref")
+    )
+    outs = {}
+    for backend in ("pallas", "ref"):
+        d, i = ops.masked_exact_topk_multi(
+            jnp.asarray(Q), jnp.asarray(X), jnp.asarray(masks), k,
+            metric=metric, backend=backend,
+        )
+        d, i = np.asarray(d), np.asarray(i)
+        _assert_masked_contract_multi(d, i, full, masks, k)
+        if q > 1:
+            assert np.isinf(d[1]).all() and (i[1] == -1).all()
+        outs[backend] = (d, i)
+    dp, dr = outs["pallas"][0], outs["ref"][0]
+    np.testing.assert_allclose(
+        np.where(np.isinf(dp), 0.0, dp), np.where(np.isinf(dr), 0.0, dr),
+        rtol=2e-4, atol=2e-3,
+    )
+    assert (np.isinf(dp) == np.isinf(dr)).all()
+
+
+@pytest.mark.parametrize("q,n,m,K,k", [(2, 1, 1, 2, 1), (5, 77, 8, 16, 9), (3, 300, 4, 64, 12)])
+def test_masked_pq_topk_multi_matches_ref(q, n, m, K, k):
+    rng = np.random.default_rng(q * 29 + n)
+    luts = rng.normal(size=(q, m, K)).astype(np.float32)
+    codes = rng.integers(0, K, size=(n, m)).astype(np.int32)
+    masks = rng.random((q, n)) < 0.5
+    full = np.asarray(ref.pq_adc_scores(jnp.asarray(luts), jnp.asarray(codes)))
+    outs = {}
+    for backend in ("pallas", "ref"):
+        d, i = ops.masked_pq_topk_multi(
+            jnp.asarray(luts), jnp.asarray(codes), jnp.asarray(masks), k, backend=backend
+        )
+        d, i = np.asarray(d), np.asarray(i)
+        _assert_masked_contract_multi(d, i, full, masks, k)
+        outs[backend] = (d, i)
+    dp, dr = outs["pallas"][0], outs["ref"][0]
+    np.testing.assert_allclose(
+        np.where(np.isinf(dp), 0.0, dp), np.where(np.isinf(dr), 0.0, dr),
+        rtol=1e-4, atol=1e-4,
+    )
+    assert (np.isinf(dp) == np.isinf(dr)).all()
+
+
+@pytest.mark.parametrize("backend", ["pallas", "ref"])
+def test_masked_multi_all_queries_masked(backend):
+    Q, X = _np(3, 8, seed=1), _np(40, 8, seed=2)
+    d, i = ops.masked_exact_topk_multi(
+        jnp.asarray(Q), jnp.asarray(X), jnp.zeros((3, 40), bool), 5, backend=backend
+    )
+    assert np.isinf(np.asarray(d)).all() and (np.asarray(i) == -1).all()
+    rng = np.random.default_rng(3)
+    luts = rng.normal(size=(2, 4, 16)).astype(np.float32)
+    codes = rng.integers(0, 16, size=(60, 4)).astype(np.int32)
+    d, i = ops.masked_pq_topk_multi(
+        jnp.asarray(luts), jnp.asarray(codes), jnp.zeros((2, 60), bool), 6, backend=backend
+    )
+    assert np.isinf(np.asarray(d)).all() and (np.asarray(i) == -1).all()
+
+
+@pytest.mark.parametrize("backend", ["pallas", "ref"])
+def test_masked_multi_q1_degenerates_to_single_mask(backend):
+    """Q == 1 planes dispatch to the single-mask kernels and must return
+    exactly what the single-mask op returns."""
+    rng = np.random.default_rng(11)
+    Q, X = _np(1, 16, seed=5), _np(90, 16, seed=6)
+    mask = rng.random(90) < 0.3
+    dm, im = ops.masked_exact_topk_multi(
+        jnp.asarray(Q), jnp.asarray(X), jnp.asarray(mask[None, :]), 7, backend=backend
+    )
+    ds, is_ = ops.masked_exact_topk(
+        jnp.asarray(Q), jnp.asarray(X), jnp.asarray(mask), 7, backend=backend
+    )
+    np.testing.assert_array_equal(np.asarray(im), np.asarray(is_))
+    np.testing.assert_array_equal(np.asarray(dm), np.asarray(ds))
+
+
+@pytest.mark.parametrize("backend", ["pallas", "ref"])
+def test_masked_multi_rows_match_per_query_single_calls(backend):
+    """The plane call is semantically Q independent single-mask calls: each
+    row must equal the single-mask op run with that query's own bitmask."""
+    rng = np.random.default_rng(13)
+    Q, X = _np(6, 16, seed=7), _np(150, 16, seed=8)
+    masks = rng.random((6, 150)) < 0.35
+    dm, im = ops.masked_exact_topk_multi(
+        jnp.asarray(Q), jnp.asarray(X), jnp.asarray(masks), 8, backend=backend
+    )
+    for qi in range(6):
+        ds, is_ = ops.masked_exact_topk(
+            jnp.asarray(Q[qi : qi + 1]), jnp.asarray(X), jnp.asarray(masks[qi]), 8,
+            backend=backend,
+        )
+        np.testing.assert_array_equal(np.asarray(im)[qi], np.asarray(is_)[0])
+        np.testing.assert_allclose(
+            np.asarray(dm)[qi], np.asarray(ds)[0], rtol=2e-4, atol=2e-3
+        )
+
+
+# ---------------------------------------------------------------------------
 # property-based sweeps
 # ---------------------------------------------------------------------------
 

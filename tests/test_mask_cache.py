@@ -1,0 +1,115 @@
+"""Executor ``_mask_cache``: LRU bounds and refresh-time eviction scope.
+
+The cache maps (shard key, row count, predicate) → per-vector-id bool
+mask.  Two contracts under test:
+
+- insertion past the capacity (64) evicts least-recently-USED entries —
+  a re-touched mask survives a flood of fresh predicates;
+- ``_refresh_shard`` drops ONLY the refreshed shard's mask keys; other
+  shards' cached masks (still valid — their row sets did not change)
+  survive.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.blobs import ROUTING_BLOB_TYPE, decode_routing_blob
+from repro.lakehouse.table import LakehouseTable
+from repro.runtime import fragments as F
+from repro.runtime.cluster import make_local_cluster
+from repro.runtime.coordinator import IndexConfig
+from repro.runtime.predicates import parse_predicate
+
+DIM = 8
+
+
+@pytest.fixture(scope="module")
+def cache_cluster(tmp_path_factory):
+    rng = np.random.default_rng(0)
+    c = make_local_cluster(str(tmp_path_factory.mktemp("maskcache")), num_executors=1)
+    t = LakehouseTable(c.catalog, "emb")
+    t.create(dim=DIM)
+    X = rng.normal(size=(300, DIM)).astype(np.float32)
+    price = rng.integers(0, 100, size=len(X)).astype(np.int64)
+    t.append_vectors(X, num_files=2, rows_per_group=80, attributes={"price": price})
+    c.coordinator.create_index(
+        "emb",
+        IndexConfig(
+            name="idx", R=12, L=32, num_shards=2,
+            partitions_per_shard=2, build_passes=1,
+        ),
+    )
+    # one filtered probe loads both shards into the executor's L1 and
+    # caches one mask per shard
+    c.coordinator.probe("emb", X[0], 5, strategy="diskann", filter="price < 50")
+    return c, t, X
+
+
+def test_mask_cache_lru_eviction_at_capacity(cache_cluster):
+    c, t, X = cache_cluster
+    ex = c.executors[0]
+    assert ex._mask_cache_capacity == 64
+    l1_key, (graph, locmap) = next(iter(ex._l1.items()))
+    ex._mask_cache.clear()
+    keep = parse_predicate("price < 0")
+    ex._predicate_mask(locmap, graph.n, keep, l1_key)
+    keep_key = (l1_key, graph.n, keep)
+    assert keep_key in ex._mask_cache
+    # flood with 70 fresh predicates, re-touching the protected one along
+    # the way: LRU keeps the touched entry and bounds the cache at 64
+    for i in range(70):
+        ex._predicate_mask(locmap, graph.n, parse_predicate(f"price < {i + 1}"), l1_key)
+        ex._predicate_mask(locmap, graph.n, keep, l1_key)  # touch => MRU
+    assert len(ex._mask_cache) == 64
+    assert keep_key in ex._mask_cache
+    # the oldest untouched predicates were evicted, the newest survive
+    assert (l1_key, graph.n, parse_predicate("price < 1")) not in ex._mask_cache
+    assert (l1_key, graph.n, parse_predicate("price < 70")) in ex._mask_cache
+    # an evicted predicate recomputes to the same mask (cache is transparent)
+    m = ex._predicate_mask(locmap, graph.n, parse_predicate("price < 1"), l1_key)
+    assert m.shape == (graph.n,) and m.dtype == bool
+
+
+def test_refresh_evicts_only_refreshed_shards_masks(cache_cluster, tmp_path):
+    c, t, X = cache_cluster
+    ex = c.executors[0]
+    meta, snap, path, reader = c.coordinator._resolve_index("emb")
+    routing = decode_routing_blob(reader.read_first(ROUTING_BLOB_TYPE))
+    assert len(routing.shards) == 2
+    blobs = reader.blobs
+    # cache one distinct mask per shard under the real shard keys
+    shard_keys = []
+    pred = parse_predicate("price BETWEEN 10 AND 60")
+    for s in routing.shards:
+        b = blobs[s.blob_index]
+        cache_key = f"{path}#shard{s.shard_id}"
+        graph, locmap, _ = ex._load_shard(
+            path, b.offset, b.length, b.compression_codec, cache_key
+        )
+        skey = f"{cache_key}@{b.offset}"
+        ex._predicate_mask(locmap, graph.n, pred, skey)
+        shard_keys.append((skey, graph.n))
+    assert all((sk, n, pred) in ex._mask_cache for sk, n in shard_keys)
+    # refresh ONLY shard 0 (no data change needed — eviction is
+    # unconditional: the refresh mutates the cached graph/locmap in place)
+    s0 = routing.shards[0]
+    b0 = blobs[s0.blob_index]
+    ex.handle(
+        F.RefreshTaskInfo(
+            task_id="refresh-0",
+            cache_key=f"{path}#shard{s0.shard_id}",
+            shard_id=s0.shard_id,
+            puffin_path=path,
+            blob_offset=b0.offset,
+            blob_length=b0.length,
+            blob_codec=b0.compression_codec,
+            added_files=[],
+            removed_files=[],
+            partition_centroids=routing.partition_centroids,
+            shard_of_partition=routing.shard_of_partition,
+            output_path=str(tmp_path / "shard0-refreshed.blob"),
+        )
+    )
+    (sk0, n0), (sk1, n1) = shard_keys
+    assert (sk0, n0, pred) not in ex._mask_cache  # refreshed shard: dropped
+    assert (sk1, n1, pred) in ex._mask_cache  # other shard: survives

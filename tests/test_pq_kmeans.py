@@ -1,13 +1,11 @@
 """k-means + product quantization: convergence, codec quality, ADC."""
 
 import numpy as np
-import pytest
 
 from repro.core.kmeans import assign, train_kmeans
 from repro.core.pq import (
     PQCodebook,
     adc_scores,
-    build_luts,
     decode,
     encode,
     reconstruction_error,

@@ -147,8 +147,6 @@ def test_micro_batcher_adaptive_sizing():
     (down to the floor), steady state holds."""
     from concurrent.futures import Future
 
-    import queue as queue_mod
-
     from repro.runtime.coordinator import ProbeReport
 
     class _StubCoordinator:

@@ -11,7 +11,6 @@ from repro.iceberg.puffin import (
     PuffinReader,
     PuffinWriter,
     preferred_codec,
-    read_footer,
 )
 
 _zstd_only = pytest.mark.skipif(

@@ -6,7 +6,6 @@ speculation, elasticity, concurrent-refresh arbitration, tombstone-driven
 shard rebuild."""
 
 import numpy as np
-import pytest
 
 from repro.core.vamana import brute_force_topk
 from repro.lakehouse.table import LakehouseTable
@@ -107,7 +106,7 @@ def test_straggler_speculation(tmp_path):
     t.create(dim=16)
     X, _ = clustered_vectors(rng, n_clusters=8, per_cluster=60, dim=16)
     t.append_vectors(X, num_files=6)
-    rep = c.coordinator.create_index("emb", IndexConfig(name="idx", **CFG))
+    c.coordinator.create_index("emb", IndexConfig(name="idx", **CFG))
     # warm up first (jit compile + caches) so the wave's median latency is
     # small; then a 2 s straggler is far beyond speculation_factor × median
     c.coordinator.probe("emb", X[:2], 5, strategy="diskann")

@@ -1,9 +1,7 @@
 """Logical-axis sharding rules + mesh factory."""
 
-import os
 
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

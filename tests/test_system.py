@@ -8,7 +8,6 @@ superseded Puffin.
 """
 
 import numpy as np
-import pytest
 
 from repro.core.blobs import ROUTING_BLOB_TYPE, SHARD_BLOB_TYPE, decode_routing_blob
 from repro.core.vamana import brute_force_topk

@@ -5,7 +5,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config, reduced
 from repro.iceberg.catalog import RestCatalog
@@ -84,7 +83,7 @@ def test_error_feedback_is_unbiased_over_time():
 
 def test_compressed_psum_shard_map():
     from jax.experimental.shard_map import shard_map
-    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     from repro.training.compression import compressed_psum
 
     mesh = make_debug_mesh(1, 1)  # single device still exercises the path

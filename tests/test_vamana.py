@@ -139,10 +139,7 @@ def test_blob_roundtrip(built):
 def test_property_robust_prune(n, d, R, alpha):
     rng = np.random.default_rng(n * 13 + d)
     vectors = rng.normal(size=(n, d)).astype(np.float32)
-    cap = n
-    p_idx = 0
     cand = np.arange(1, n, dtype=np.int32)
-    C = len(cand)
     out = _robust_prune(
         jnp.asarray(vectors),
         jnp.asarray(vectors[:1]),
