@@ -62,6 +62,12 @@ def main(json_path: str = "BENCH_kernels.json") -> None:
     # one per predicate group
     planes = jnp.asarray(rng.random((32, 16384)) < 0.3)
     planes_c = jnp.asarray(rng.random((8, 32768)) < 0.3)
+    # unified exact/PQ kernel: the masked-exact load PLUS per-row ADC
+    # inputs and an alternating flavor vector — the mixed-flavor fragment's
+    # single dispatch (replaces one exact + one ADC call)
+    luts_u = jnp.asarray(rng.normal(size=(32, 12, 256)).astype(np.float32))
+    codes_u = jnp.asarray(rng.integers(0, 256, size=(16384, 12)).astype(np.int32))
+    flavor_u = jnp.asarray((np.arange(32) % 2).astype(bool))
     # k-means assign: 16384 points × 512 centroids × 96 d
     P = jnp.asarray(rng.normal(size=(16384, 96)).astype(np.float32))
     C = jnp.asarray(rng.normal(size=(512, 96)).astype(np.float32))
@@ -88,6 +94,9 @@ def main(json_path: str = "BENCH_kernels.json") -> None:
         ),
         "kernel.masked_pq_topk_multi": lambda: ops.masked_pq_topk_multi(
             luts, codes, planes_c, 40, backend="ref"
+        ),
+        "kernel.unified_masked_topk": lambda: ops.unified_masked_topk(
+            Qm, Xm, luts_u, codes_u, planes, flavor_u, 40, backend="ref"
         ),
         "kernel.kmeans_assign": lambda: ops.kmeans_assign(P, C, backend="ref"),
         "anchor.numpy_matmul": lambda: A_anchor @ B_anchor,
@@ -127,6 +136,16 @@ def main(json_path: str = "BENCH_kernels.json") -> None:
         ops.masked_pq_topk_multi(luts[:2], codes[:256], small_pc, 10, backend="pallas", tile_q=2)[0],
         ops.masked_pq_topk_multi(luts[:2], codes[:256], small_pc, 10, backend="ref")[0],
     )
+    delta["kernel.unified_masked_topk"] = _masked_delta(
+        ops.unified_masked_topk(
+            Qm[:8], Xm[:256], luts_u[:8], codes_u[:256], small_pl, flavor_u[:8],
+            10, backend="pallas",
+        )[0],
+        ops.unified_masked_topk(
+            Qm[:8], Xm[:256], luts_u[:8], codes_u[:256], small_pl, flavor_u[:8],
+            10, backend="ref",
+        )[0],
+    )
     ip, _ = ops.kmeans_assign(P[:512], C[:128], backend="pallas", tile_n=128, tile_k=64)
     ir, _ = ops.kmeans_assign(P[:512], C[:128], backend="ref")
     agree = float(np.mean(np.asarray(ip) == np.asarray(ir)))
@@ -139,6 +158,8 @@ def main(json_path: str = "BENCH_kernels.json") -> None:
         "kernel.masked_pq_topk": ("glookups", 8 * 32768 * 48),
         "kernel.masked_exact_topk_multi": ("gflops", 2 * 32 * 16384 * 96),
         "kernel.masked_pq_topk_multi": ("glookups", 8 * 32768 * 48),
+        # one pass computes both score planes: exact flops + ADC lookups
+        "kernel.unified_masked_topk": ("gflops", 2 * 32 * 16384 * 96),
         "kernel.kmeans_assign": ("gflops", 2 * 16384 * 512 * 96),
         "anchor.numpy_matmul": ("gflops", 2 * 512 * 512 * 512),
     }

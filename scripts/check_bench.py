@@ -26,6 +26,14 @@ Absolute gates (hold regardless of any baseline):
     — the whole point of the (Q, N) mask-plane kernels), and throughput
     strictly above it (``speedup_vs_grouped > 1``; both paths are timed in
     the same window, so ambient load cancels in the ratio).
+  - ``table2.filtered_mixed_flavor`` (batch mixing exact- and PQ-flavor
+    plans with heterogeneous predicates): recall vs oracle >= 0.95, hits
+    identical to the two-dispatch split-flavor path (``parity_ok``),
+    EXACTLY one kernel dispatch per shard (``kernel_dispatches ==
+    probe_fragments`` — the unified exact/PQ kernel's contract), fewer
+    dispatches than the split path, and the fragment-level Stage A faster
+    than it (``speedup_vs_split > 1``; both modes timed on the same
+    executor in the same interleaved window).
 
 Baseline gates (vs the committed baseline, benchmarks/baselines/):
   - a THROUGHPUT-GATED row's ``throughput_qps`` dropping more than
@@ -175,6 +183,37 @@ def check(
                 f"table2.filtered_hetero: mask-plane throughput "
                 f"{hetero.get('throughput_qps', 0.0):.1f} qps is not above the "
                 f"per-predicate-group path {hetero.get('grouped_qps', 0.0):.1f} qps"
+            )
+    mixed = rows.get("table2.filtered_mixed_flavor")
+    if mixed is not None:
+        if mixed.get("recall", 0.0) < FILTERED_MIN_RECALL:
+            failures.append(
+                f"table2.filtered_mixed_flavor: recall vs oracle "
+                f"{mixed.get('recall', 0.0):.3f} < {FILTERED_MIN_RECALL}"
+            )
+        if not mixed.get("parity_ok", True):
+            failures.append(
+                "table2.filtered_mixed_flavor: unified-kernel hits diverge "
+                "from the split-flavor path"
+            )
+        if mixed.get("kernel_dispatches", -1) != mixed.get("probe_fragments", 0):
+            failures.append(
+                "table2.filtered_mixed_flavor: mixed-flavor fragments did not "
+                f"complete in exactly one kernel dispatch per shard "
+                f"({mixed.get('kernel_dispatches')} dispatches for "
+                f"{mixed.get('probe_fragments')} fragments)"
+            )
+        if mixed.get("kernel_dispatches", 0) >= mixed.get("split_dispatches", 0):
+            failures.append(
+                "table2.filtered_mixed_flavor: unified kernel issued no fewer "
+                f"dispatches ({mixed.get('kernel_dispatches')}) than the "
+                f"split-flavor path ({mixed.get('split_dispatches')})"
+            )
+        if mixed.get("speedup_vs_split", 0.0) <= 1.0:
+            failures.append(
+                f"table2.filtered_mixed_flavor: unified fragment Stage A "
+                f"(speedup_vs_split {mixed.get('speedup_vs_split', 0.0):.2f}x) "
+                "is not faster than the two-dispatch split-flavor path"
             )
 
     for name in sorted(base_rows):

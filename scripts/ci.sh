@@ -7,7 +7,10 @@
 #             local run and CI agree byte-for-byte); otherwise degrades to
 #             a python -m compileall syntax pass (the container gates
 #             optional tooling — CI images install ruff, minimal dev boxes
-#             may not).
+#             may not).  Also fails if any Python cache artifact
+#             (__pycache__/, .pytest_cache/, *.pyc) is ever TRACKED by
+#             git — .gitignore keeps them out, this keeps them out
+#             forever.
 #   --tier1   kernel-parity gate first (pytest -m "kernels and not slow":
 #             every op in kernels/ops.py, Pallas-interpret vs ref.py,
 #             including the masked ops' and the multi-mask (Q, N)-plane
@@ -28,7 +31,11 @@
 #             pruning not reducing fragments, the heterogeneous-filter
 #             row (table2.filtered_hetero) not beating the
 #             per-predicate-group path in its interleaved timing window
-#             or not reducing kernel dispatches, throughput
+#             or not reducing kernel dispatches, the mixed-flavor row
+#             (table2.filtered_mixed_flavor) not completing in EXACTLY
+#             one kernel dispatch per shard / not beating the
+#             two-dispatch split-flavor path in its paired
+#             executor-level window / diverging from it, throughput
 #             regression vs baseline on the kernel.* rows (35% noise
 #             budget; machine factor pinned by the pure-numpy anchor.*
 #             row, so even a uniform kernel regression is caught — table2
@@ -70,6 +77,15 @@ done
 
 if $run_lint; then
   echo "== lint =="
+  if command -v git >/dev/null 2>&1 && [ -d .git ]; then
+    tracked_caches=$(git ls-files | grep -E '(^|/)(__pycache__|\.pytest_cache)/|\.pyc$' || true)
+    if [ -n "$tracked_caches" ]; then
+      echo "LINT-ERROR: Python cache artifacts are tracked by git:" >&2
+      echo "$tracked_caches" >&2
+      echo "  (git rm -r --cached them; .gitignore already excludes them)" >&2
+      exit 1
+    fi
+  fi
   if command -v ruff >/dev/null 2>&1; then
     ruff check src tests benchmarks scripts
   else

@@ -436,6 +436,16 @@ class AttrZoneMap:
 
 
 def encode_zonemap_blob(zm: AttrZoneMap) -> bytes:
+    # per-file equi-width int histograms are stored ONCE per (file, column)
+    # — each row group's ZoneStats references the shared file-level
+    # histogram, so serializing it inside every zone entry would only
+    # duplicate bytes
+    histograms: Dict[str, Dict[str, dict]] = {}
+    for fp, per_file in zm.zones.items():
+        for rg in per_file:
+            for col, z in rg.items():
+                if z.hist is not None and col not in histograms.get(fp, {}):
+                    histograms.setdefault(fp, {})[col] = z.hist.to_json()
     meta = {
         "version": 1,
         "columns": dict(zm.columns),
@@ -443,6 +453,7 @@ def encode_zonemap_blob(zm: AttrZoneMap) -> bytes:
             fp: [{c: z.to_json() for c, z in rg.items()} for rg in per_file]
             for fp, per_file in zm.zones.items()
         },
+        "histograms": histograms or None,
         "shard-membership": (
             {str(sid): [[fp, rg] for fp, rg in pairs] for sid, pairs in zm.shard_membership.items()}
             if zm.shard_membership is not None
@@ -453,16 +464,30 @@ def encode_zonemap_blob(zm: AttrZoneMap) -> bytes:
 
 
 def decode_zonemap_blob(data: bytes) -> AttrZoneMap:
-    from repro.runtime.predicates import ZoneStats
+    from dataclasses import replace as _replace
+
+    from repro.runtime.predicates import ColumnHistogram, ZoneStats
 
     meta = json.loads(_d(data).decode("utf-8"))
     membership = meta.get("shard-membership")
+    histograms = {
+        fp: {c: ColumnHistogram.from_json(h) for c, h in cols.items()}
+        for fp, cols in (meta.get("histograms") or {}).items()
+    }
+    zones: Dict[str, List[Dict[str, ZoneStats]]] = {}
+    for fp, per_file in meta["zones"].items():
+        file_hists = histograms.get(fp, {})
+        decoded = []
+        for rg in per_file:
+            entry = {c: ZoneStats.from_json(z) for c, z in rg.items()}
+            for c, h in file_hists.items():
+                if c in entry:
+                    entry[c] = _replace(entry[c], hist=h)
+            decoded.append(entry)
+        zones[fp] = decoded
     return AttrZoneMap(
         columns=dict(meta["columns"]),
-        zones={
-            fp: [{c: ZoneStats.from_json(z) for c, z in rg.items()} for rg in per_file]
-            for fp, per_file in meta["zones"].items()
-        },
+        zones=zones,
         shard_membership=(
             {int(sid): [(fp, int(rg)) for fp, rg in pairs] for sid, pairs in membership.items()}
             if membership is not None
@@ -476,8 +501,10 @@ def build_zonemap(store, file_paths: List[str]) -> Optional[AttrZoneMap]:
 
     Returns None when the table carries no attribute columns (pure-vector
     tables get no zone-map blob at all)."""
+    from dataclasses import replace as _replace
+
     from repro.lakehouse.vparquet import VParquetReader
-    from repro.runtime.predicates import ZoneStats
+    from repro.runtime.predicates import ColumnHistogram, ZoneStats
 
     columns: Dict[str, str] = {}
     zones: Dict[str, List[Dict[str, ZoneStats]]] = {}
@@ -485,6 +512,7 @@ def build_zonemap(store, file_paths: List[str]) -> Optional[AttrZoneMap]:
         reader = VParquetReader.from_store(store, fp)
         attr_specs = reader.attribute_specs()
         per_file: List[Dict[str, ZoneStats]] = []
+        int_values: Dict[str, List[np.ndarray]] = {}
         for rg_id in range(reader.num_row_groups):
             rg_zones: Dict[str, ZoneStats] = {}
             for name, spec in attr_specs.items():
@@ -500,12 +528,24 @@ def build_zonemap(store, file_paths: List[str]) -> Optional[AttrZoneMap]:
                     )
                 else:
                     columns[name] = "int"
+                    int_values.setdefault(name, []).append(arr)
                     rg_zones[name] = ZoneStats(
                         count=int(arr.shape[0]),
                         min=(arr.min().item() if arr.shape[0] else 0),
                         max=(arr.max().item() if arr.shape[0] else 0),
                     )
             per_file.append(rg_zones)
+        # per-file equi-width histograms for int columns: shared by every
+        # row group's ZoneStats — range-predicate selectivity estimation
+        # (predicates.Range.estimate_fraction) reads them, and the planner
+        # sizes PostfilterBeam pools from the result
+        for name, parts in int_values.items():
+            hist = ColumnHistogram.build(np.concatenate(parts))
+            if hist is None:
+                continue
+            for rg_zones in per_file:
+                if name in rg_zones:
+                    rg_zones[name] = _replace(rg_zones[name], hist=hist)
         zones[fp] = per_file
     if not columns:
         return None

@@ -30,6 +30,19 @@ reduction.  The kernel bodies are identical (``jnp.where(m > 0.5, ...)``
 broadcasts a ``(1, TILE_N)`` row and applies a ``(TILE_Q, TILE_N)`` plane
 elementwise); only the mask BlockSpec differs.
 
+``unified_masked_topk_pallas`` fuses BOTH scoring flavors into one
+dispatch: a fragment whose queries split between exact-flavor and
+PQ-ADC-flavor plans (mixed selectivities on a PQ shard) used to cost two
+kernel calls per shard — one per flavor.  The unified kernel takes the
+exact inputs (queries × points) AND the ADC inputs (LUTs × codes) plus a
+**selector plane** ``(Q, N)`` that encodes the per-query mask and flavor
+in one f32 value per cell: 0 = masked out, 1 = score full-precision,
+2 = score ADC.  Each grid step computes both score tiles and selects per
+row before the shared top-k reduction, so the whole mixed-flavor fragment
+is ONE dispatch.  (Compute per tile doubles, but at shard scale the
+dispatch/transfer overhead dominates the filtered path — the
+``table2.filtered_mixed_flavor`` bench row gates the win.)
+
 Accumulation pattern: grid ``(Q_tiles, N_tiles)`` with the N axis
 innermost; the output BlockSpecs pin ``(i, 0)`` so the same ``(TILE_Q, k)``
 distance/id accumulator blocks stay resident in VMEM across the whole N
@@ -280,6 +293,106 @@ def masked_pq_topk_pallas(
         ],
         interpret=interpret,
     )(luts.astype(jnp.float32), codes.astype(jnp.int32), mask.astype(jnp.float32))
+
+
+def _unified_kernel(
+    q_ref, x_ref, lut_ref, codes_ref, s_ref, od_ref, oi_ref, *, metric, K, k, tile_n
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        od_ref[...] = jnp.full(od_ref.shape, MASKED, jnp.float32)
+        oi_ref[...] = jnp.full(oi_ref.shape, -1, jnp.int32)
+
+    q = q_ref[...]  # (TILE_Q, D)
+    x = x_ref[...]  # (TILE_N, D)
+    cross = jax.lax.dot_general(
+        q, x, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    if metric == "l2":
+        q2 = jnp.sum(q * q, axis=-1, keepdims=True)
+        x2 = jnp.sum(x * x, axis=-1)[None, :]
+        d_exact = q2 - 2.0 * cross + x2
+    else:  # ip
+        d_exact = -cross
+    lut = lut_ref[...]  # (TILE_Q, m, K)
+    codes = codes_ref[...]  # (TILE_N, m)
+    tile_q, m_sub, _ = lut.shape
+    tn = codes.shape[0]
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (tn, m_sub, K), 2)
+    onehot = (codes[:, :, None] == iota_k).astype(jnp.float32)
+    d_adc = jax.lax.dot_general(
+        lut.reshape(tile_q, m_sub * K),
+        onehot.reshape(tn, m_sub * K),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    s = s_ref[...]  # (TILE_Q, TILE_N) selector: 0 masked / 1 exact / 2 adc
+    d = jnp.where(s > 1.5, d_adc, d_exact)
+    d = jnp.where(s > 0.5, d, MASKED)
+    _merge_tile(d, j, tile_n, od_ref, oi_ref, k)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "metric", "tile_q", "tile_n", "interpret")
+)
+def unified_masked_topk_pallas(
+    queries: jnp.ndarray,
+    points: jnp.ndarray,
+    luts: jnp.ndarray,
+    codes: jnp.ndarray,
+    selector: jnp.ndarray,
+    k: int,
+    *,
+    metric: str = "l2",
+    tile_q: int = 8,
+    tile_n: int = 128,
+    interpret: bool = True,
+):
+    """Single-dispatch mixed-flavor masked top-k.  queries (Q, D) f32,
+    points (N, D) f32, luts (Q, m, K) f32, codes (N, m) int32, selector
+    (Q, N) f32 with 0 = masked out, 1 = exact flavor, 2 = ADC flavor.
+    Same alignment and (MASKED, -1) sentinel contract as the other flavors;
+    the selector plane is tiled (i, j) like the multi-mask plane."""
+    q, d = queries.shape
+    n, d2 = points.shape
+    assert d == d2, (d, d2)
+    q2, m, kcode = luts.shape
+    n2, m2 = codes.shape
+    assert q2 == q and n2 == n and m == m2, (luts.shape, codes.shape)
+    assert q % tile_q == 0 and n % tile_n == 0, (q, n, tile_q, tile_n)
+    assert selector.shape == (q, n), (selector.shape, q, n)
+    grid = (q // tile_q, n // tile_n)
+    return pl.pallas_call(
+        functools.partial(
+            _unified_kernel, metric=metric, K=kcode, k=k, tile_n=tile_n
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_q, m, kcode), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((tile_n, m), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_q, tile_n), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_q, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_q, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), jnp.float32),
+            jax.ShapeDtypeStruct((q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        queries.astype(jnp.float32),
+        points.astype(jnp.float32),
+        luts.astype(jnp.float32),
+        codes.astype(jnp.int32),
+        selector.astype(jnp.float32),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("k", "tile_q", "tile_n", "interpret"))

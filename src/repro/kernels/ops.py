@@ -25,6 +25,18 @@ Masked-op contract (``masked_exact_topk`` / ``masked_pq_topk`` and their
   query ``q``'s own bitmask, so a coalesced batch carrying heterogeneous
   predicates is still ONE kernel call.  ``Q == 1`` degenerates to the
   single-mask kernel (same tile schedule, no plane materialization).
+- the ``*_dedup`` variants take the plane FACTORED as ``(unique_masks
+  (m, N), row_index (Q,))`` — when a mostly-homogeneous batch has only m
+  distinct predicates, only the m unique rows cross host→device; the
+  dense ``(Q, N)`` plane is broadcast on-device (a jnp gather inside the
+  same jit) before the kernel sees it.  Results are bit-identical to the
+  dense ``*_multi`` call on the expanded plane.
+- ``unified_masked_topk`` scores a MIXED-flavor batch in one dispatch: it
+  takes both the exact inputs (points) and the ADC inputs (luts, codes)
+  plus a per-query ``flavor`` vector (truthy = ADC); the kernel folds mask
+  and flavor into one selector plane (0 = masked, 1 = exact, 2 = ADC) and
+  each query's rows are scored by its own flavor before the shared top-k
+  reduction.  Same sentinel contract.
 - Outputs are ``(dists (Q, k) f32, ids (Q, k) int32)``, each row ascending.
   When fewer than ``k`` rows pass, trailing slots hold ``(+inf, -1)`` —
   callers must treat non-finite distance or negative id as "no candidate".
@@ -51,6 +63,7 @@ from repro.kernels.masked_topk import (
     masked_exact_topk_pallas,
     masked_pq_topk_multi_pallas,
     masked_pq_topk_pallas,
+    unified_masked_topk_pallas,
 )
 from repro.kernels.pq_scan import pq_scan_pallas
 from repro.kernels.rerank import rerank_distances_pallas
@@ -277,6 +290,137 @@ def masked_pq_topk_multi(
         luts_p, codes_p, m, k, tile_q=tile_q, tile_n=tile_n, interpret=interpret
     )
     return _finalize_masked(out_d, out_i, q0)
+
+
+def unified_masked_topk(
+    queries: jnp.ndarray,
+    points: jnp.ndarray,
+    luts: jnp.ndarray,
+    codes: jnp.ndarray,
+    masks: jnp.ndarray,
+    flavor: jnp.ndarray,
+    k: int,
+    *,
+    metric: str = "l2",
+    backend: str = "auto",
+    tile_q: int = 8,
+    tile_n: int = 128,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-dispatch mixed-flavor masked top-k: (Q, D) × (N, D) exact AND
+    (Q, m, K) × (N, m) PQ-ADC under a (Q, N) mask plane, with a per-query
+    ``flavor`` vector (truthy = that query's rows score via ADC).  One
+    kernel call answers a fragment whose queries split between the exact
+    and PQ plans — the two-dispatch-per-shard path collapses to one."""
+    masks = jnp.asarray(masks)
+    q = queries.shape[0]
+    assert masks.shape == (q, points.shape[0]), (masks.shape, queries.shape, points.shape)
+    assert luts.shape[0] == q and codes.shape[0] == points.shape[0], (
+        luts.shape, codes.shape,
+    )
+    backend = _resolve(backend)
+    k = int(k)
+    if backend == "ref":
+        return ref.unified_masked_topk(
+            queries, points, luts, codes, masks, flavor, k, metric=metric
+        )
+    interpret = not _on_tpu()
+    q_pad, q0 = _pad_to(queries.astype(jnp.float32), 0, tile_q, 0.0)
+    x_pad, _n0 = _pad_to(points.astype(jnp.float32), 0, tile_n, 0.0)
+    q_pad, _ = _pad_to(q_pad, 1, 128, 0.0)
+    x_pad, _ = _pad_to(x_pad, 1, 128, 0.0)
+    luts_p, _ = _pad_to(luts.astype(jnp.float32), 0, tile_q, 0.0)
+    codes_p, _ = _pad_to(codes.astype(jnp.int32), 0, tile_n, 0)
+    # selector plane: 0 = masked out, 1 = exact flavor, 2 = ADC flavor —
+    # padded query rows / point cols get 0, so they never win
+    sel = masks.astype(jnp.float32) * (
+        1.0 + jnp.asarray(flavor).astype(jnp.float32).reshape(-1, 1)
+    )
+    sel = _mask_plane(sel, tile_q, tile_n)
+    out_d, out_i = unified_masked_topk_pallas(
+        q_pad, x_pad, luts_p, codes_p, sel, k,
+        metric=metric, tile_q=tile_q, tile_n=tile_n, interpret=interpret,
+    )
+    return _finalize_masked(out_d, out_i, q0)
+
+
+# -- dedup-then-broadcast mask planes ----------------------------------------
+#
+# A coalesced fragment's (Q, N) mask plane is often highly redundant: most
+# production batches carry only a few distinct predicates, so Q rows hold m
+# << Q unique bitmasks.  The *_dedup entry points accept the factored form
+# (unique_masks (m, N), row_index (Q,)) and broadcast it to the dense plane
+# ON DEVICE (jnp.take inside the same jit'd region), so host→device traffic
+# shrinks from Q·N to m·N + Q while the kernel and its results stay
+# bit-identical to the dense *_multi call.
+
+
+def expand_mask_plane(unique_masks: jnp.ndarray, row_index: jnp.ndarray) -> jnp.ndarray:
+    """(m, N) unique rows + (Q,) row index -> dense (Q, N) plane (device)."""
+    return jnp.take(jnp.asarray(unique_masks), jnp.asarray(row_index), axis=0)
+
+
+def masked_exact_topk_dedup(
+    queries: jnp.ndarray,
+    points: jnp.ndarray,
+    unique_masks: jnp.ndarray,
+    row_index: jnp.ndarray,
+    k: int,
+    *,
+    metric: str = "l2",
+    backend: str = "auto",
+    tile_q: int = 8,
+    tile_n: int = 128,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dedup'd-plane exact top-k: semantics of ``masked_exact_topk_multi``
+    on ``unique_masks[row_index]``, shipping only the unique rows."""
+    plane = expand_mask_plane(unique_masks, row_index)
+    return masked_exact_topk_multi(
+        queries, points, plane, k,
+        metric=metric, backend=backend, tile_q=tile_q, tile_n=tile_n,
+    )
+
+
+def masked_pq_topk_dedup(
+    luts: jnp.ndarray,
+    codes: jnp.ndarray,
+    unique_masks: jnp.ndarray,
+    row_index: jnp.ndarray,
+    k: int,
+    *,
+    backend: str = "auto",
+    tile_q: int = 8,
+    tile_n: int = 128,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dedup'd-plane PQ-ADC top-k: semantics of ``masked_pq_topk_multi`` on
+    ``unique_masks[row_index]``, shipping only the unique rows."""
+    plane = expand_mask_plane(unique_masks, row_index)
+    return masked_pq_topk_multi(
+        luts, codes, plane, k, backend=backend, tile_q=tile_q, tile_n=tile_n
+    )
+
+
+def unified_masked_topk_dedup(
+    queries: jnp.ndarray,
+    points: jnp.ndarray,
+    luts: jnp.ndarray,
+    codes: jnp.ndarray,
+    unique_masks: jnp.ndarray,
+    row_index: jnp.ndarray,
+    flavor: jnp.ndarray,
+    k: int,
+    *,
+    metric: str = "l2",
+    backend: str = "auto",
+    tile_q: int = 8,
+    tile_n: int = 128,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dedup'd-plane mixed-flavor top-k: ``unified_masked_topk`` on
+    ``unique_masks[row_index]``, shipping only the unique rows."""
+    plane = expand_mask_plane(unique_masks, row_index)
+    return unified_masked_topk(
+        queries, points, luts, codes, plane, flavor, k,
+        metric=metric, backend=backend, tile_q=tile_q, tile_n=tile_n,
+    )
 
 
 # -- PQ ADC scan ---------------------------------------------------------------

@@ -127,6 +127,34 @@ def masked_pq_topk_multi(
     return _masked_topk(pq_adc_scores(luts, codes), masks, k)
 
 
+def unified_masked_topk(
+    queries: jnp.ndarray,
+    points: jnp.ndarray,
+    luts: jnp.ndarray,
+    codes: jnp.ndarray,
+    masks: jnp.ndarray,
+    flavor: jnp.ndarray,
+    k: int,
+    metric: str = "l2",
+):
+    """Single-dispatch mixed-flavor masked top-k: queries (Q, D), points
+    (N, D), luts (Q, m, K), codes (N, m), masks (N,) or (Q, N), flavor (Q,)
+    truthy (True = score row q with PQ-ADC, False = full-precision).  Each
+    query's scores come from ITS flavor; the masked top-k epilogue is
+    shared, so a fragment mixing both flavors is one call.
+
+    Like the Pallas kernel, both score planes are computed and selected
+    per row: at these shapes the two dense computes beat any
+    subset-gather/scatter assembly (eager-mode gathers cost more than the
+    matmul they save — measured), and the shared top-k epilogue runs
+    once instead of once per flavor."""
+    fn = l2_distances if metric == "l2" else ip_distances
+    d_exact = fn(queries, points)
+    d_adc = pq_adc_scores(luts, codes)
+    sel = jnp.asarray(flavor).astype(bool).reshape(-1, 1)
+    return _masked_topk(jnp.where(sel, d_adc, d_exact), masks, k)
+
+
 def kmeans_assign(points: jnp.ndarray, centroids: jnp.ndarray):
     """Nearest-centroid assignment.
 

@@ -69,21 +69,16 @@ from repro.iceberg.puffin import PuffinReader, PuffinWriter, preferred_codec
 from repro.iceberg.snapshot import Snapshot, TableMetadata
 from repro.lakehouse.table import LakehouseTable
 from repro.runtime import fragments as F
+from repro.runtime import planner
+from repro.runtime.planner import PlanOp, ProbePlan
 from repro.runtime.predicates import Predicate, parse_predicate, row_group_mask
 from repro.runtime.scheduler import ExecutorPool, Scheduler
 
 TOMBSTONE_REBUILD_THRESHOLD = 0.20  # paper §7.3
 
-# Selectivity-adaptive filtered-probe planning: estimated passing fraction
-# at or below PREFILTER_MAX_FRAC gets the pre-filter exact scan, up to
-# MASK_MAX_FRAC the mask-aware kernel scan (kernels/masked_topk.py: the
-# predicate bitmask rides into the kernel and masked rows lose inside the
-# tile), above it the over-fetched post-filter beam.  The mask plan used to
-# widen a beam pool by 1/selectivity — worth it only below ~0.5; as a
-# single masked kernel call it stays cheaper than post-filter over-fetch up
-# to much higher fractions, so the band widened.
-PREFILTER_MAX_FRAC = 0.10
-MASK_MAX_FRAC = 0.75
+# Selectivity-adaptive filtered-probe planning lives in runtime/planner.py
+# (the probe-plan IR): the coordinator asks the planner for per-(query,
+# shard) plan ops and ships them with the tasks; executors interpret them.
 
 
 @dataclass
@@ -159,9 +154,15 @@ class ProbeReport:
     row_groups_pruned: int = 0
     est_selectivity: float = 1.0
     # masked top-k kernel calls summed over the probed shards: with the
-    # mask-plane executor path a coalesced fragment costs one dispatch per
-    # scoring flavor however many distinct predicates the batch carries
+    # mask-plane executor path a coalesced fragment costs ONE dispatch per
+    # shard — the unified kernel fuses exact and PQ-ADC flavors — however
+    # many distinct predicates the batch carries
     kernel_dispatches: int = 0
+    # the probe-plan IR artifact (runtime/planner.py ProbePlan): the
+    # per-(query, shard) op grid the coordinator planned, loggable and
+    # round-trippable via to_json/from_json.  None on unplanned paths
+    # (scan/centroid, unfiltered single probes).
+    plan: Optional[ProbePlan] = None
 
 
 @dataclass
@@ -639,50 +640,13 @@ class Coordinator:
         return zm
 
     @staticmethod
-    def _plan_filtered(
-        pred: Predicate, zonemap: Optional[AttrZoneMap], routing: RoutingTable
-    ) -> Tuple[Dict[int, str], List[int], float]:
-        """Selectivity-adaptive plan: per shard, zone-prune it outright or
-        pick prefilter / mask / postfilter from the estimated passing
-        fraction of its member row groups.  Without a zone map (index built
-        before the table had attributes) every shard gets the conservative
-        over-fetched post-filter plan."""
-        if zonemap is None:
-            return {s.shard_id: "postfilter" for s in routing.shards}, [], 1.0
-
-        def _frac(zones) -> float:
-            rows, est = 0, 0.0
-            for z in zones:
-                c = next(iter(z.values())).count if z else 0
-                rows += c
-                est += pred.estimate_fraction(z) * c
-            return est / max(rows, 1)
-
-        all_zones = [z for per_file in zonemap.zones.values() for z in per_file]
-        global_frac = _frac(all_zones)
-        modes: Dict[int, str] = {}
-        pruned: List[int] = []
-        for s in routing.shards:
-            shard_zones = zonemap.shard_zones(s.shard_id)
-            if shard_zones is not None and not any(
-                pred.zone_may_match(z) for z in shard_zones
-            ):
-                pruned.append(s.shard_id)
-                continue
-            frac = _frac(shard_zones) if shard_zones else global_frac
-            if frac <= PREFILTER_MAX_FRAC:
-                modes[s.shard_id] = "prefilter"
-            elif frac <= MASK_MAX_FRAC:
-                modes[s.shard_id] = "mask"
-            else:
-                modes[s.shard_id] = "postfilter"
-        return modes, pruned, global_frac
-
-    @staticmethod
-    def _plan_summary(modes: Dict[int, str], pruned: List[int]) -> str:
+    def _plan_summary(ops: Dict[int, PlanOp], pruned: List[int]) -> str:
+        """Token:count summary of one predicate's per-shard ops, in the
+        historical prefilter/mask/postfilter vocabulary."""
         counts: Dict[str, int] = {}
-        for m in modes.values():
-            counts[m] = counts.get(m, 0) + 1
+        for op in ops.values():
+            tok = planner.op_token(op)
+            counts[tok] = counts.get(tok, 0) + 1
         parts = [f"{m}:{c}" for m, c in sorted(counts.items())]
         if pruned:
             parts.append(f"pruned:{len(pruned)}")
@@ -995,11 +959,24 @@ class Coordinator:
         if use_pq is None:
             use_pq = int(routing.params.get("pq_m", "0")) > 0
         L_eff = L or int(routing.params.get("L", "100"))
-        modes: Dict[int, str] = {}
+        ops: Dict[int, PlanOp] = {}
         pruned: List[int] = []
         est_frac = 1.0
+        plan: Optional[ProbePlan] = None
         if pred is not None:
-            modes, pruned, est_frac = self._plan_filtered(pred, zonemap, routing)
+            ops, pruned, est_frac = planner.plan_filtered(
+                pred, zonemap, routing, k=k, oversample=oversample, use_pq=use_pq
+            )
+            plan_row = dict(ops)
+            plan_row.update({sid: planner.Skip() for sid in pruned})
+            plan = ProbePlan(
+                k=k,
+                oversample=oversample,
+                use_pq=use_pq,
+                ops=[plan_row],
+                est_selectivity=est_frac,
+                pruned_shards=tuple(pruned),
+            )
         # ---- Stage A: parallel shard beam search -------------------------
         t0 = time.time()
         blob_by_index = {i: b for i, b in enumerate(PuffinReader(
@@ -1007,7 +984,7 @@ class Coordinator:
         ).blobs)}
         tasks = []
         for s in routing.shards:
-            if pred is not None and s.shard_id not in modes:
+            if pred is not None and s.shard_id not in ops:
                 continue  # zone-pruned
             b = blob_by_index[s.blob_index]
             tasks.append(
@@ -1025,7 +1002,7 @@ class Coordinator:
                     use_pq=use_pq,
                     oversample=oversample,
                     predicate=pred,
-                    filter_mode=modes.get(s.shard_id, "mask"),
+                    plan_op=ops.get(s.shard_id),
                 )
             )
         probe_results: List[F.ProbeResult] = self.scheduler.run_wave(tasks)
@@ -1062,10 +1039,11 @@ class Coordinator:
         report.bytes_read = self.store.metrics.bytes_read
         if pred is not None:
             report.filtered = True
-            report.filter_plan = self._plan_summary(modes, pruned)
+            report.filter_plan = self._plan_summary(ops, pruned)
             report.shards_pruned = len(pruned)
             report.fragments_pruned = len(pruned)  # one fragment per shard here
             report.est_selectivity = est_frac
+            report.plan = plan
         return report
 
     def _route_queries(
@@ -1139,26 +1117,56 @@ class Coordinator:
         route = self._route_queries(routing, queries, n_route)
         B = queries.shape[0]
         # one plan per distinct predicate; shared across its queries
-        plans: Dict[Predicate, Tuple[Dict[int, str], List[int], float]] = {}
+        plans: Dict[Predicate, Tuple[Dict[int, PlanOp], List[int], float]] = {}
         if preds:
             for p in preds:
                 if p is not None and p not in plans:
-                    plans[p] = self._plan_filtered(p, zonemap, routing)
-        fragments_pruned = 0
-        tasks: List[F.BatchProbeTaskInfo] = []
+                    plans[p] = planner.plan_filtered(
+                        p, zonemap, routing,
+                        k=k, oversample=oversample, use_pq=use_pq,
+                    )
+        # pre-pass: which shards end up with MIXED fragments (filtered and
+        # unfiltered queries coalesced together)?  An unfiltered query on a
+        # mixed shard needs a planner op of its own — a shared beam, or a
+        # size-capped all-ones exact row on small shards — instead of the
+        # old uncapped O(N·D) all-ones scan.
+        shard_filtered: Dict[int, bool] = {}
+        shard_unfiltered: Dict[int, bool] = {}
         for s in routing.shards:
-            b = blob_by_index[s.blob_index]
             for qi in range(B):
                 if s.shard_id not in route[qi]:
                     continue
                 pred = preds[qi] if preds else None
-                mode = "mask"
+                if pred is None:
+                    shard_unfiltered[s.shard_id] = True
+                elif s.shard_id in plans[pred][0]:
+                    shard_filtered[s.shard_id] = True
+        fragments_pruned = 0
+        ops_grid: List[Dict[int, PlanOp]] = [dict() for _ in range(B)]
+        tasks: List[F.BatchProbeTaskInfo] = []
+        for s in routing.shards:
+            b = blob_by_index[s.blob_index]
+            mixed = shard_filtered.get(s.shard_id, False) and shard_unfiltered.get(
+                s.shard_id, False
+            )
+            for qi in range(B):
+                if s.shard_id not in route[qi]:
+                    continue
+                pred = preds[qi] if preds else None
+                op: Optional[PlanOp] = None
                 if pred is not None:
-                    modes, pruned, _ = plans[pred]
-                    if s.shard_id not in modes:
+                    shard_ops, _pruned, _frac = plans[pred]
+                    if s.shard_id not in shard_ops:
                         fragments_pruned += 1
+                        ops_grid[qi][s.shard_id] = planner.Skip()
                         continue  # zone-pruned for this query's predicate
-                    mode = modes[s.shard_id]
+                    op = shard_ops[s.shard_id]
+                elif plans:
+                    op = planner.plan_unfiltered(
+                        s.vector_count, mixed=mixed, k=k, oversample=oversample
+                    )
+                if op is not None:
+                    ops_grid[qi][s.shard_id] = op
                 tasks.append(
                     F.BatchProbeTaskInfo(
                         task_id=f"probe-{s.shard_id}-q{qi}",
@@ -1175,7 +1183,7 @@ class Coordinator:
                         use_pq=use_pq,
                         oversample=oversample,
                         filters=[pred] if pred is not None else None,
-                        filter_modes=[mode] if pred is not None else None,
+                        plan_ops=[op] if op is not None else None,
                     )
                 )
         probe_results: List[F.BatchProbeResult] = self.scheduler.run_coalesced_wave(
@@ -1224,10 +1232,18 @@ class Coordinator:
             report.shards_pruned = len(all_pruned)
             report.fragments_pruned = fragments_pruned
             report.filter_plan = ";".join(
-                self._plan_summary(modes, pruned) for modes, pruned, _ in plans.values()
+                self._plan_summary(ops, pruned) for ops, pruned, _ in plans.values()
             )
             report.est_selectivity = float(
                 np.mean([frac for _, _, frac in plans.values()])
+            )
+            report.plan = ProbePlan(
+                k=k,
+                oversample=oversample,
+                use_pq=use_pq,
+                ops=ops_grid,
+                est_selectivity=report.est_selectivity,
+                pruned_shards=tuple(sorted(all_pruned)),
             )
         return report
 

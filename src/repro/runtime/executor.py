@@ -24,6 +24,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.blobs import ShardLocationMap, decode_shard_blob, encode_shard_blob
+from repro.runtime import planner
 from repro.runtime.predicates import row_group_mask
 from repro.core.vamana import VamanaGraph, VamanaParams, build_vamana
 from repro.core.pq import PQCodebook, encode as pq_encode
@@ -122,11 +123,16 @@ class Executor:
         self._mask_cache: "OrderedDict[tuple, np.ndarray]" = OrderedDict()
         self._mask_cache_capacity = 64
         self._lock = threading.Lock()
-        # debug/bench escape hatch: route heterogeneous-filter fragments
+        # debug/bench escape hatches: route heterogeneous-filter fragments
         # through the legacy one-kernel-call-per-predicate-group loop
         # instead of the single mask-plane call (parity tests and the
-        # table2.filtered_hetero bench compare the two paths)
+        # table2.filtered_hetero bench compare the two paths), and/or keep
+        # mixed exact+PQ fragments on separate per-flavor dispatches
+        # instead of the fused unified kernel (the
+        # table2.filtered_mixed_flavor bench compares one vs two dispatches
+        # per shard).  Both paths interpret the SAME planner-resolved ops.
         self.force_group_loop = False
+        self.force_split_flavors = False
         # failure injection
         self.dead = False
         self._fail_budget = 0
@@ -265,27 +271,43 @@ class Executor:
     def _task_dispatches(self) -> int:
         return getattr(self._dispatch_tls, "count", 0)
 
-    @staticmethod
-    def _plan_flavor(mode: str, match_count: int, k_eff: int, use_pq: bool, has_pq: bool) -> str:
-        """Per-query scoring-flavor classification, shared by the legacy
-        per-group path (_filtered_search) and the mask-plane path
-        (_probe_mask_plane) so the two can NEVER drift apart — the
-        bit-for-bit parity the tests and the table2.filtered_hetero gate
-        assert depends on both applying exactly these thresholds.
-        Returns 'beam' (over-fetched postfilter), 'pq' (masked ADC +
-        exact rerank), or 'exact' (masked exact scan; tiny passing sets
-        are cheaper to scan exactly than to search, whatever the mode)."""
-        small = match_count <= max(4 * k_eff, 64)
-        if mode == "postfilter" and not small:
-            return "beam"
-        if mode == "mask" and use_pq and has_pq and not small:
-            return "pq"
-        return "exact"
+    def _resolve_op(self, task, op, live_mask: np.ndarray, has_pq: bool):
+        """Refine a planner op with the measured match count.  ALL
+        selectivity thresholds and flavor classification live in
+        runtime/planner.py — the executor only interprets the resolved op,
+        and both the mask-plane path and the ``force_group_loop`` baseline
+        resolve through this one call, so the two can never drift apart
+        (the bit-for-bit parity the tests and the bench gates assert)."""
+        if op is None:
+            op = planner.default_filtered_op(task.k, task.oversample, task.use_pq)
+        return planner.resolve(
+            op,
+            match_count=int(live_mask.sum()),
+            k=task.k,
+            oversample=task.oversample,
+            has_pq=task.use_pq and has_pq,
+        )
 
     @staticmethod
-    def _pq_pool(match_count: int, k_eff: int) -> int:
-        """ADC pool size for the mask plan — shared for the same reason."""
-        return int(min(match_count, max(4 * k_eff, 32)))
+    def _dedup_rows(
+        masks: List[np.ndarray], keys: List[object]
+    ) -> Tuple[List[np.ndarray], np.ndarray]:
+        """Dedup-then-broadcast mask-plane builder: per-query mask rows
+        keyed by their predicate collapse to the unique rows plus a (Q,)
+        row index.  The ops-layer ``*_dedup`` kernels broadcast the plane
+        on-device, so host->device traffic for a mostly-homogeneous batch
+        is m unique rows, not Q."""
+        pos: Dict[object, int] = {}
+        unique: List[np.ndarray] = []
+        idx = np.empty(len(masks), np.int64)
+        for j, (m, key) in enumerate(zip(masks, keys)):
+            p = pos.get(key)
+            if p is None:
+                p = len(unique)
+                pos[key] = p
+                unique.append(m)
+            idx[j] = p
+        return unique, idx
 
     def _predicate_mask(self, locmap: ShardLocationMap, n: int, pred, shard_key: str) -> np.ndarray:
         """Executor-side row bitmask: does vector id's source row satisfy
@@ -342,18 +364,17 @@ class Executor:
         return np.asarray(d), np.asarray(ids, np.int64)
 
     def _masked_pq_stage(
-        self, graph, queries: np.ndarray, live_mask: np.ndarray, k_eff: int
+        self, graph, queries: np.ndarray, live_mask: np.ndarray, pool: int, k_out: int
     ) -> Tuple[np.ndarray, np.ndarray]:
-        """mask-plan Stage A on PQ shards: ONE masked ADC kernel call scores
-        every passing code row (mask fused into the pq_scan accumulation),
-        then the pooled survivors get the same full-precision rerank the
-        unfiltered PQ path applies to its beam pool.  Every passing row is
-        scored, so the pool can never under-deliver below
-        min(pool, match_count)."""
+        """PQScan interpretation on PQ shards: ONE masked ADC kernel call
+        scores every passing code row (mask fused into the pq_scan
+        accumulation) at the planner-resolved ``pool``, then the pooled
+        survivors get the same full-precision rerank the unfiltered PQ path
+        applies to its beam pool.  Every passing row is scored, so the pool
+        can never under-deliver below min(pool, match_count)."""
         from repro.core.pq import build_luts
 
         q = np.ascontiguousarray(queries, np.float32)
-        pool = self._pq_pool(int(live_mask.sum()), k_eff)
         luts = build_luts(graph.pq, q)  # (Q, m, K)
         codes = self._device_codes(graph)
         self._count_dispatch()
@@ -361,10 +382,10 @@ class Executor:
             jnp.asarray(luts),
             codes,
             jnp.asarray(live_mask),
-            pool,
+            int(pool),
             backend="auto",
         )
-        return self._rerank_pq_pool(graph, q, np.asarray(pids, np.int64), k_eff)
+        return self._rerank_pq_pool(graph, q, np.asarray(pids, np.int64), k_out)
 
     def _device_codes(self, graph):
         """Codes are immutable between refreshes; cache the int32 device
@@ -394,112 +415,190 @@ class Executor:
         order = np.argsort(d, axis=1)[:, :k_out]
         return np.take_along_axis(d, order, axis=1), np.take_along_axis(pids, order, axis=1)
 
-    def _exact_masked_multi(
-        self, graph, queries: np.ndarray, mask_plane: np.ndarray, k_out: int
+    def _exact_masked_plane(
+        self, graph, queries: np.ndarray, unique_masks, row_index, k_out: int
     ) -> Tuple[np.ndarray, np.ndarray]:
-        """Heterogeneous-predicate Stage A: ONE ``masked_exact_topk_multi``
-        call answers every query of a coalesced fragment under its own
-        (Q, N) bitmask row — the per-predicate-group kernel loop collapses
-        to a single dispatch per shard."""
+        """Heterogeneous-predicate ExactScan: ONE kernel call answers every
+        query of a coalesced fragment under its own bitmask row, shipped as
+        the dedup'd (m, N) unique rows + (Q,) index — the per-predicate-
+        group kernel loop collapses to a single dispatch per shard."""
         self._count_dispatch()
-        d, ids = ops.masked_exact_topk_multi(
+        d, ids = ops.masked_exact_topk_dedup(
             jnp.asarray(np.ascontiguousarray(queries, np.float32)),
             jnp.asarray(graph.vectors[: graph.n]),
-            jnp.asarray(mask_plane),
+            jnp.asarray(np.stack(unique_masks)),
+            jnp.asarray(row_index),
             int(k_out),
             metric=graph.params.metric,
             backend="auto",
         )
         return np.asarray(d), np.asarray(ids, np.int64)
 
-    def _masked_pq_stage_multi(
+    def _masked_pq_plane(
         self,
         graph,
         queries: np.ndarray,
-        mask_plane: np.ndarray,
+        unique_masks,
+        row_index,
         pool: int,
         k_out: int,
     ) -> Tuple[np.ndarray, np.ndarray]:
-        """Heterogeneous-predicate mask plan on PQ shards: ONE multi-mask
-        ADC kernel call scores every query's passing codes at the shared
+        """Heterogeneous-predicate PQScan: ONE multi-mask ADC kernel call
+        (dedup'd plane) scores every query's passing codes at the shared
         ``pool`` size, then the shared exact rerank.  One pool suffices for
-        bit-for-bit parity with the per-group path: the 'pq' flavor
-        requires match_count > max(4·k_eff, 64), which pins
-        k_eff = k·oversample and collapses each group's
-        min(match_count, max(4·k_eff, 32)) to the same constant — see
-        _plan_flavor / _pq_pool."""
+        bit-for-bit parity with the per-group path: planner.resolve pins
+        the PQScan pool to the same constant for every PQ-flavor query of a
+        fragment (see its docstring)."""
         from repro.core.pq import build_luts
 
         q = np.ascontiguousarray(queries, np.float32)
         luts = build_luts(graph.pq, q)  # (Q, m, K)
         codes = self._device_codes(graph)
         self._count_dispatch()
-        _pq_d, pids = ops.masked_pq_topk_multi(
+        _pq_d, pids = ops.masked_pq_topk_dedup(
             jnp.asarray(luts),
             codes,
-            jnp.asarray(mask_plane),
+            jnp.asarray(np.stack(unique_masks)),
+            jnp.asarray(row_index),
             int(pool),
             backend="auto",
         )
         return self._rerank_pq_pool(graph, q, np.asarray(pids, np.int64), k_out)
 
-    def _filtered_search(
-        self, task, graph, locmap, queries: np.ndarray, pred, mode: str
+    def _unified_masked_stage(
+        self,
+        graph,
+        queries: np.ndarray,
+        unique_masks,
+        row_index,
+        flavor: np.ndarray,
+        pq_pool: int,
+        k_out: int,
     ) -> Tuple[np.ndarray, np.ndarray]:
-        """Stage-A search under an attribute predicate.
+        """Mixed-flavor fragment: ONE ``unified_masked_topk`` call scores
+        exact-flavor rows full-precision and PQ-flavor rows via ADC in the
+        same dispatch (per-query flavor selector fused into the mask
+        plane).  The call returns max(k_out, pq_pool) columns: exact rows
+        keep their first k_out (identical to a dedicated exact dispatch —
+        the top-k extraction is prefix-stable), PQ rows feed their
+        ``pq_pool`` ADC survivors through the shared full-precision
+        rerank (identical to a dedicated ADC dispatch).  Collapses the
+        two-dispatch-per-shard mixed fragment to one."""
+        from repro.core.pq import build_luts
 
-        ``mode`` is the coordinator's per-shard plan.  ``prefilter`` and
-        ``mask`` both ride the mask-aware kernels (kernels/masked_topk.py):
-        the predicate/tombstone bitmask goes into the kernel as a tile
-        input, masked-out rows score +inf before the in-kernel top-k, and
-        the whole query group is answered by one batched call — no pool
-        widening, no post-hoc NumPy filtering.  On PQ shards the mask plan
-        scores codes with the masked ADC kernel and exact-reranks the pool;
-        otherwise (and for prefilter) the masked exact scan is used, which
-        is exact by construction.  ``postfilter`` (most rows pass)
-        over-fetches the ordinary beam and filters after, falling back to
-        the kernel-backed exact masked scan whenever the beam cannot
-        surface enough passing candidates — a filtered probe never silently
-        returns fewer candidates than the shard actually holds."""
+        q = np.ascontiguousarray(queries, np.float32)
+        luts = build_luts(graph.pq, q)  # (Q, m, K)
+        codes = self._device_codes(graph)
+        kk = int(max(k_out, pq_pool))
+        self._count_dispatch()
+        d, ids = ops.unified_masked_topk_dedup(
+            jnp.asarray(q),
+            jnp.asarray(graph.vectors[: graph.n]),
+            jnp.asarray(luts),
+            codes,
+            jnp.asarray(np.stack(unique_masks)),
+            jnp.asarray(row_index),
+            jnp.asarray(flavor),
+            kk,
+            metric=graph.params.metric,
+            backend="auto",
+        )
+        d = np.asarray(d)
+        ids = np.asarray(ids, np.int64)
+        out_d = np.empty((q.shape[0], k_out), np.float32)
+        out_i = np.empty((q.shape[0], k_out), np.int64)
+        ex = ~flavor
+        out_d[ex] = d[ex, :k_out]
+        out_i[ex] = ids[ex, :k_out]
+        if flavor.any():
+            rd, ri = self._rerank_pq_pool(
+                graph, q[flavor], ids[flavor][:, : int(pq_pool)], k_out
+            )
+            out_d[flavor] = rd
+            out_i[flavor] = ri
+        return out_d, out_i
+
+    def _filtered_search(
+        self, task, graph, locmap, queries: np.ndarray, pred, op
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Stage-A search under an attribute predicate: interpret the
+        planner's per-shard plan ``op`` for a group of queries sharing one
+        predicate.
+
+        The op is resolved against the measured match count
+        (planner.resolve — the only place flavor thresholds live), then
+        executed: ExactScan and PQScan ride the mask-aware kernels
+        (kernels/masked_topk.py — the predicate/tombstone bitmask goes into
+        the kernel as a tile input, masked-out rows score +inf before the
+        in-kernel top-k); PostfilterBeam over-fetches the ordinary beam to
+        the planner-sized pool and filters after, falling back to the
+        kernel-backed exact masked scan whenever the beam cannot surface
+        enough passing candidates — a filtered probe never silently returns
+        fewer candidates than the shard actually holds."""
         shard_key = f"{task.cache_key or task.puffin_path}@{task.blob_offset}"
         mask = self._predicate_mask(locmap, graph.n, pred, shard_key)
         live_mask = mask & ~graph.tombstones[: graph.n]
-        match_count = int(live_mask.sum())
+        final = self._resolve_op(task, op, live_mask, graph.pq is not None)
         Qn = queries.shape[0]
-        if match_count == 0:
+        if isinstance(final, planner.Skip):
             return (
                 np.full((Qn, 1), np.inf, np.float32),
                 np.full((Qn, 1), -1, np.int64),
             )
-        k_eff = min(task.k * task.oversample, match_count)
-        flavor = self._plan_flavor(
-            mode, match_count, k_eff, task.use_pq, graph.pq is not None
-        )
-        if flavor == "pq":
-            return self._masked_pq_stage(graph, queries, live_mask, k_eff)
-        if flavor == "exact":
-            return self._exact_masked(graph, queries, live_mask, k_eff)
-        # postfilter: most rows pass, so the ordinary beam surfaces enough
-        n_live = graph.num_live
-        pool = min(2 * task.k * task.oversample, n_live)
-        L = max(task.L, pool)
+        if isinstance(final, planner.PQScan):
+            return self._masked_pq_stage(
+                graph, queries, live_mask, final.pool, final.k
+            )
+        if isinstance(final, planner.ExactScan):
+            return self._exact_masked(graph, queries, live_mask, final.k)
+        return self._postfilter_beam(task, graph, queries, live_mask, final)
+
+    def _postfilter_beam_core(
+        self, task, graph, queries: np.ndarray, mask_plane: np.ndarray, pool: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """The ONE copy of the PostfilterBeam machinery, shared by the
+        per-group interpreter (shared mask, broadcast) and the pooled
+        mask-plane path (per-row masks): over-fetch the ordinary beam to
+        the planner-sized pool, drop each row's candidates failing ITS
+        mask, and return the full post-filtered pool sorted ascending per
+        row (failures pushed to the (+inf, -1) tail).  Callers slice their
+        per-row output widths and apply their fallback policy."""
+        p = min(int(pool), graph.num_live)
+        L = max(task.L, p)
         if task.use_pq and graph.pq is not None:
-            dists, ids = graph.search_pq(queries, pool, L=L)
+            dists, ids = graph.search_pq(queries, p, L=L)
         else:
-            dists, ids = graph.search(queries, pool, L=L)
+            dists, ids = graph.search(queries, p, L=L)
         safe = np.clip(ids, 0, graph.n - 1)
-        passing = live_mask[safe] & (ids >= 0) & np.isfinite(dists)
+        passing = (
+            np.take_along_axis(mask_plane, safe, axis=1)
+            & (ids >= 0)
+            & np.isfinite(dists)
+        )
         dists = np.where(passing, dists, np.inf)
         ids = np.where(passing, ids, -1)
-        order = np.argsort(dists, axis=1)[:, :k_eff]
-        dists = np.take_along_axis(dists, order, axis=1)
-        ids = np.take_along_axis(ids, order, axis=1)
+        order = np.argsort(dists, axis=1)
+        return (
+            np.take_along_axis(dists, order, axis=1),
+            np.take_along_axis(ids, order, axis=1),
+        )
+
+    def _postfilter_beam(
+        self, task, graph, queries: np.ndarray, live_mask: np.ndarray, op
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """PostfilterBeam interpretation for a group sharing one mask:
+        most rows pass, so the over-fetched beam surfaces enough; queries
+        it under-delivered fall back to the exact masked scan."""
+        plane = np.broadcast_to(live_mask, (queries.shape[0], live_mask.shape[0]))
+        dists, ids = self._postfilter_beam_core(task, graph, queries, plane, op.pool)
+        dists = dists[:, : op.k]
+        ids = ids[:, : op.k]
         short = np.isinf(dists).any(axis=1)
         if short.any():
             # beam under-delivered for some queries — kernel-backed exact
-            # masked scan returns exactly k_eff columns, so rows align
+            # masked scan returns exactly op.k columns, so rows align
             rows = np.flatnonzero(short)
-            ed, ei = self._exact_masked(graph, queries[rows], live_mask, k_eff)
+            ed, ei = self._exact_masked(graph, queries[rows], live_mask, op.k)
             dists[rows] = ed
             ids[rows] = ei
         return dists, ids
@@ -594,12 +693,20 @@ class Executor:
         )
 
     def _shard_search(
-        self, task, graph, queries: Optional[np.ndarray] = None
+        self,
+        task,
+        graph,
+        queries: Optional[np.ndarray] = None,
+        width: Optional[int] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Shared Stage-A search: batched beam search (PQ ADC when the shard
-        carries codes) over however many queries the fragment brought."""
+        carries codes) over however many queries the fragment brought.
+        ``width`` is a planner Beam op's requested candidate count; absent,
+        the task's own k * oversample applies (same value on every
+        coordinator-built plan — the parameter keeps replayed plans
+        honest)."""
         q = task.queries if queries is None else queries
-        k_eff = min(task.k * task.oversample, graph.num_live)
+        k_eff = min(width or task.k * task.oversample, graph.num_live)
         L = max(task.L, k_eff)
         if task.use_pq and graph.pq is not None:
             return graph.search_pq(q, k_eff, L=L)
@@ -633,7 +740,7 @@ class Executor:
         self._dispatch_tls.count = 0
         if task.predicate is not None:
             dists, ids = self._filtered_search(
-                task, graph, locmap, task.queries, task.predicate, task.filter_mode
+                task, graph, locmap, task.queries, task.predicate, task.plan_op
             )
         else:
             dists, ids = self._shard_search(task, graph)
@@ -649,14 +756,18 @@ class Executor:
         return result
 
     def _probe_shard_batch(self, task: F.BatchProbeTaskInfo) -> F.BatchProbeResult:
-        """Coalesced Stage A: one shard load, then ONE multi-mask kernel
-        call for every kernel-planned query of the fragment — regardless of
-        how many distinct predicates the batch carries.  Each query gets its
-        own row of a (Q, N) mask plane assembled from the per-predicate
-        ``_mask_cache`` bitmasks (unfiltered queries an all-ones row,
-        tombstones AND-ed in); the legacy per-predicate-group loop survives
-        only for postfilter-planned beam queries (and behind
-        ``force_group_loop`` for parity/bench comparison)."""
+        """Coalesced Stage A: one shard load, then interpret each query's
+        planner op and answer every kernel-planned query of the fragment
+        with ONE masked-kernel call per shard — regardless of how many
+        distinct predicates the batch carries, and regardless of whether
+        their resolved flavors mix exact and PQ-ADC scoring (the unified
+        kernel fuses both into the same dispatch).  Each query gets its own
+        row of a dedup'd mask plane assembled from the per-predicate
+        ``_mask_cache`` bitmasks (tombstones AND-ed in); unfiltered queries
+        ride a shared beam pass, or a size-capped all-ones kernel row on
+        small shards, per their planner op.  The legacy per-predicate-group
+        loop survives only behind ``force_group_loop`` for parity/bench
+        comparison."""
         t0 = time.time()
         graph, locmap, hit = self._load_shard(
             task.puffin_path, task.blob_offset, task.blob_length, task.blob_codec, task.cache_key
@@ -688,20 +799,32 @@ class Executor:
         self, task, graph, locmap, result, qidx: np.ndarray, rows
     ) -> None:
         """Legacy per-predicate-group Stage A: one batched pass per distinct
-        (predicate, mode) among ``rows`` — N distinct predicates degrade to
-        N sequential kernel/beam passes.  Kept as the postfilter path and
-        the ``force_group_loop`` comparison baseline."""
+        (predicate, plan op) among ``rows`` — N distinct predicates degrade
+        to N sequential kernel/beam passes.  Kept ONLY behind
+        ``force_group_loop`` as the parity/bench comparison baseline; it
+        interprets the same planner-resolved ops as the mask-plane path, so
+        the two paths answer bit-identically."""
         groups: Dict[tuple, List[int]] = {}
         for bi in rows:
-            mode = task.filter_modes[bi] if task.filter_modes else "mask"
-            groups.setdefault((task.filters[bi], mode), []).append(bi)
-        for (pred, mode), members in groups.items():
+            op = task.plan_ops[bi] if task.plan_ops else None
+            groups.setdefault((task.filters[bi], op), []).append(bi)
+        for (pred, op), members in groups.items():
             queries = task.queries[members]
             if pred is None:
-                dists, ids = self._shard_search(task, graph, queries)
+                if isinstance(op, planner.ExactScan):
+                    # all-ones row on a small shard: the same size-capped
+                    # exact scan the mask-plane path ships
+                    live = ~graph.tombstones[: graph.n]
+                    k_out = max(1, min(op.k, graph.n))
+                    dists, ids = self._exact_masked(graph, queries, live, k_out)
+                else:
+                    w = op.width if isinstance(op, planner.Beam) else 0
+                    dists, ids = self._shard_search(
+                        task, graph, queries, width=w or None
+                    )
             else:
                 dists, ids = self._filtered_search(
-                    task, graph, locmap, queries, pred, mode
+                    task, graph, locmap, queries, pred, op
                 )
             for j, bi in enumerate(members):
                 result.candidates[int(qidx[bi])] = self._row_candidates(
@@ -711,92 +834,172 @@ class Executor:
     def _probe_mask_plane(
         self, task, graph, locmap, result, qidx: np.ndarray
     ) -> None:
-        """Mask-plane Stage A: classify every query of the fragment by the
-        same per-query rules ``_filtered_search`` applies, then answer all
-        exact-flavor queries with one ``masked_exact_topk_multi`` call and
-        all PQ-flavor queries with one ``masked_pq_topk_multi`` call —
-        heterogeneous predicates no longer multiply kernel dispatches.
-        Only queries whose plan is a genuine over-fetched postfilter beam
-        (most rows pass, big shard) drop back to the group loop."""
+        """Mask-plane Stage A: resolve every query's planner op against its
+        measured match count (planner.resolve — the executor itself holds
+        no thresholds), then answer ALL kernel-planned queries with one
+        masked-kernel call: a single flavor dispatches the dedup'd-plane
+        exact or ADC kernel; a fragment mixing both flavors dispatches the
+        unified kernel ONCE with a per-query flavor selector.  Beam-planned
+        rows (unfiltered queries on large shards) share one batched beam
+        pass, and PostfilterBeam rows share over-fetched beam passes
+        grouped by pool with a single fused masked-kernel fallback —
+        heterogeneous predicates never multiply kernel dispatches."""
         shard_key = f"{task.cache_key or task.puffin_path}@{task.blob_offset}"
         n = graph.n
         tomb_live = ~graph.tombstones[:n]
         k_out = max(1, min(task.k * task.oversample, n))
         exact_rows: List[int] = []
         exact_masks: List[np.ndarray] = []
-        exact_preds: List[object] = []
+        exact_keys: List[object] = []
         pq_rows: List[int] = []
         pq_masks: List[np.ndarray] = []
-        pq_preds: List[object] = []
-        beam_rows: List[int] = []
-        # shared ADC pool for every pq-flavor row (see _masked_pq_stage_multi)
-        pq_pool = max(4 * task.k * task.oversample, 32)
+        pq_keys: List[object] = []
+        beam_rows: Dict[int, List[int]] = {}  # planner Beam width -> rows
+        post_rows: Dict[int, List[int]] = {}
+        post_masks: Dict[int, np.ndarray] = {}
+        post_ks: Dict[int, int] = {}
+        pq_pool = 0
         for bi in range(len(qidx)):
             pred = task.filters[bi]
-            mode = task.filter_modes[bi] if task.filter_modes else "mask"
+            op = task.plan_ops[bi] if task.plan_ops else None
             if pred is None:
-                # unfiltered query in a mixed fragment: all-ones row (only
-                # tombstones masked) — it rides the same kernel call
-                exact_rows.append(bi)
-                exact_masks.append(tomb_live)
-                exact_preds.append(None)
+                if isinstance(op, planner.ExactScan):
+                    # unfiltered query in a mixed fragment on a small
+                    # shard: all-ones row (only tombstones masked) rides
+                    # the fragment's kernel call
+                    exact_rows.append(bi)
+                    exact_masks.append(tomb_live)
+                    exact_keys.append(None)
+                else:
+                    w = op.width if isinstance(op, planner.Beam) else 0
+                    beam_rows.setdefault(int(w), []).append(bi)
                 continue
             live = self._predicate_mask(locmap, n, pred, shard_key) & tomb_live
-            match = int(live.sum())
-            if match == 0:
+            final = self._resolve_op(task, op, live, graph.pq is not None)
+            if isinstance(final, planner.Skip):
                 result.candidates[int(qidx[bi])] = []
-                continue
-            k_eff = min(task.k * task.oversample, match)
-            flavor = self._plan_flavor(
-                mode, match, k_eff, task.use_pq, graph.pq is not None
-            )
-            if flavor == "beam":
-                beam_rows.append(bi)
-            elif flavor == "pq":
+            elif isinstance(final, planner.PQScan):
                 pq_rows.append(bi)
                 pq_masks.append(live)
-                pq_preds.append(pred)
-            else:
+                pq_keys.append(pred)
+                pq_pool = final.pool  # pinned: identical for every PQ row
+            elif isinstance(final, planner.ExactScan):
                 exact_rows.append(bi)
                 exact_masks.append(live)
-                exact_preds.append(pred)
-        # Homogeneous short-circuit: when every row of a flavor carries the
-        # SAME predicate (or all are unfiltered), their masks are equal, so
-        # ship the shared (N,) mask to the single-mask kernel instead of
-        # materializing Q identical plane rows ((Q, N) f32 host->device
-        # traffic for zero coalescing gain).  Same math, same single
-        # dispatch.
-        if exact_rows:
-            if len(set(exact_preds)) == 1:
-                dists, ids = self._exact_masked(
-                    graph, task.queries[exact_rows], exact_masks[0], k_out
-                )
-            else:
-                dists, ids = self._exact_masked_multi(
-                    graph, task.queries[exact_rows], np.stack(exact_masks), k_out
-                )
-            for j, bi in enumerate(exact_rows):
+                exact_keys.append(pred)
+            else:  # PostfilterBeam
+                post_rows.setdefault(int(final.pool), []).append(bi)
+                post_masks[bi] = live
+                post_ks[bi] = final.k  # planner-resolved k_eff
+
+        def _emit(rows, dists, ids):
+            for j, bi in enumerate(rows):
                 result.candidates[int(qidx[bi])] = self._row_candidates(
                     graph, locmap, dists[j], ids[j], task.shard_id
                 )
-        if pq_rows:
-            if len(set(pq_preds)) == 1:
-                # k_out == k·oversample here (pq flavor pins k_eff; see
-                # _masked_pq_stage_multi), so the per-group entry point
-                # computes the identical pool
-                dists, ids = self._masked_pq_stage(
-                    graph, task.queries[pq_rows], pq_masks[0], k_out
+
+        if exact_rows and pq_rows and not self.force_split_flavors:
+            # mixed flavors: ONE unified dispatch for the whole fragment
+            rows = exact_rows + pq_rows
+            unique, idx = self._dedup_rows(
+                exact_masks + pq_masks, exact_keys + pq_keys
+            )
+            flavor = np.zeros(len(rows), bool)
+            flavor[len(exact_rows):] = True
+            dists, ids = self._unified_masked_stage(
+                graph, task.queries[rows], unique, idx, flavor, pq_pool, k_out
+            )
+            _emit(rows, dists, ids)
+        else:
+            # Homogeneous-predicate short-circuit inside each flavor: one
+            # unique mask row ships the single-mask kernel; otherwise the
+            # dedup'd plane (m unique rows + row index, broadcast
+            # on-device) — either way ONE dispatch per flavor.
+            if exact_rows:
+                unique, idx = self._dedup_rows(exact_masks, exact_keys)
+                if len(unique) == 1:
+                    dists, ids = self._exact_masked(
+                        graph, task.queries[exact_rows], unique[0], k_out
+                    )
+                else:
+                    dists, ids = self._exact_masked_plane(
+                        graph, task.queries[exact_rows], unique, idx, k_out
+                    )
+                _emit(exact_rows, dists, ids)
+            if pq_rows:
+                unique, idx = self._dedup_rows(pq_masks, pq_keys)
+                if len(unique) == 1:
+                    dists, ids = self._masked_pq_stage(
+                        graph, task.queries[pq_rows], unique[0], pq_pool, k_out
+                    )
+                else:
+                    dists, ids = self._masked_pq_plane(
+                        graph, task.queries[pq_rows], unique, idx, pq_pool, k_out
+                    )
+                _emit(pq_rows, dists, ids)
+        for w, rows in sorted(beam_rows.items()):
+            dists, ids = self._shard_search(
+                task, graph, task.queries[rows], width=w or None
+            )
+            _emit(rows, dists, ids)
+        if post_rows:
+            self._postfilter_pooled(
+                task, graph, locmap, result, qidx, post_rows, post_masks, post_ks
+            )
+
+    def _postfilter_pooled(
+        self,
+        task,
+        graph,
+        locmap,
+        result,
+        qidx: np.ndarray,
+        rows_by_pool: Dict[int, List[int]],
+        masks_by_row: Dict[int, np.ndarray],
+        ks_by_row: Dict[int, int],
+    ) -> None:
+        """PostfilterBeam rows of a fragment: one over-fetched beam pass
+        per distinct planner pool (NOT per distinct predicate — usually a
+        single pass) through the shared ``_postfilter_beam_core``, each row
+        post-filtered under its own mask and sliced to ITS planner-resolved
+        k; every under-delivered row across all pools then joins ONE fused
+        masked-kernel fallback call instead of per-predicate fallbacks.
+        Per-query results are identical to interpreting each row alone:
+        beam rows are independent and the fallback math is per-row."""
+        n = graph.n
+        k_out = max(1, min(task.k * task.oversample, n))
+        short_rows: List[int] = []
+        for pool, rows in sorted(rows_by_pool.items()):
+            plane = np.stack([masks_by_row[bi] for bi in rows])
+            dists, ids = self._postfilter_beam_core(
+                task, graph, task.queries[rows], plane, pool
+            )
+            for j, bi in enumerate(rows):
+                kj = ks_by_row[bi]
+                dj, ij = dists[j, :kj], ids[j, :kj]
+                if np.isinf(dj).any():
+                    short_rows.append(bi)
+                else:
+                    result.candidates[int(qidx[bi])] = self._row_candidates(
+                        graph, locmap, dj, ij, task.shard_id
+                    )
+        if short_rows:
+            unique, idx = self._dedup_rows(
+                [masks_by_row[bi] for bi in short_rows],
+                [task.filters[bi] for bi in short_rows],
+            )
+            if len(unique) == 1:
+                d, i = self._exact_masked(
+                    graph, task.queries[short_rows], unique[0], k_out
                 )
             else:
-                dists, ids = self._masked_pq_stage_multi(
-                    graph, task.queries[pq_rows], np.stack(pq_masks), pq_pool, k_out
+                d, i = self._exact_masked_plane(
+                    graph, task.queries[short_rows], unique, idx, k_out
                 )
-            for j, bi in enumerate(pq_rows):
+            for j, bi in enumerate(short_rows):
                 result.candidates[int(qidx[bi])] = self._row_candidates(
-                    graph, locmap, dists[j], ids[j], task.shard_id
+                    graph, locmap, d[j], i[j], task.shard_id
                 )
-        if beam_rows:
-            self._probe_groups(task, graph, locmap, result, qidx, beam_rows)
 
     def _rerank(self, task: F.RerankTaskInfo) -> F.RerankResult:
         rows_flat: List[Tuple[str, int, int]] = []

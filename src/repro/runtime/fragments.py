@@ -100,10 +100,10 @@ class ProbeTaskInfo(TaskBase):
     use_pq: bool = True
     oversample: int = 4
     # filtered search: predicate tree applied to every query of this task,
-    # with the coordinator's per-shard execution mode
-    # (prefilter | mask | postfilter)
+    # with the planner's per-shard plan op (runtime/planner.py IR; None
+    # falls back to planner.default_filtered_op — the mid-band mask plan)
     predicate: Optional[object] = None
-    filter_mode: str = "mask"
+    plan_op: Optional[object] = None
 
 
 @dataclass
@@ -151,13 +151,17 @@ class BatchProbeTaskInfo(TaskBase):
     # query is unfiltered).  ``filters`` being None means the whole fragment
     # is unfiltered.  Per-query masks survive fragment coalescing: merged
     # fragments concatenate these lists alongside the query block.  The
-    # executor answers every kernel-planned (prefilter/mask/unfiltered-in-
-    # mixed) query of the merged fragment with ONE multi-mask kernel call
-    # per scoring flavor — a (Q, N) mask plane, one row per query — so the
-    # coalesce key deliberately ignores predicates: fragments are NEVER
-    # split per predicate group, however heterogeneous the batch.
+    # executor answers every kernel-planned query of the merged fragment
+    # with ONE masked-kernel call per shard — a (Q, N) mask plane (dedup'd
+    # to unique predicate rows), fusing exact and PQ-ADC flavors into the
+    # same dispatch when the batch mixes them — so the coalesce key
+    # deliberately ignores predicates: fragments are NEVER split per
+    # predicate group, however heterogeneous the batch.
     filters: Optional[List[Optional[object]]] = None
-    filter_modes: Optional[List[str]] = None
+    # row-aligned planner ops (runtime/planner.py PlanOp; None entry =
+    # planner default for that row: Beam for unfiltered rows,
+    # default_filtered_op for filtered ones)
+    plan_ops: Optional[List[Optional[object]]] = None
 
     def coalesce_key(self) -> tuple:
         """Fragments with equal keys search the same shard blob with the
@@ -214,16 +218,20 @@ def coalesce_batch_probes(tasks: Sequence[object]) -> List[object]:
             out.append(group[0])
             continue
         first = group[0]
-        # per-query filters ride along with their query rows; a group with
-        # any filtered member materializes aligned per-row lists
+        # per-query filters and plan ops ride along with their query rows; a
+        # group with any filtered/planned member materializes aligned lists
         filters = None
-        modes = None
+        plan_ops = None
         if any(g.filters for g in group):
-            filters, modes = [], []
+            filters = []
             for g in group:
                 nq = g.queries.shape[0]
                 filters.extend(g.filters if g.filters else [None] * nq)
-                modes.extend(g.filter_modes if g.filter_modes else ["mask"] * nq)
+        if any(g.plan_ops for g in group):
+            plan_ops = []
+            for g in group:
+                nq = g.queries.shape[0]
+                plan_ops.extend(g.plan_ops if g.plan_ops else [None] * nq)
         out.append(
             replace(
                 first,
@@ -233,7 +241,7 @@ def coalesce_batch_probes(tasks: Sequence[object]) -> List[object]:
                     [np.asarray(g.query_index, np.int64) for g in group]
                 ),
                 filters=filters,
-                filter_modes=modes,
+                plan_ops=plan_ops,
             )
         )
     return out

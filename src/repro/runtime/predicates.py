@@ -36,16 +36,77 @@ class PredicateError(ValueError):
 
 
 @dataclass(frozen=True)
+class ColumnHistogram:
+    """Equi-width histogram of one int column over one FILE (all row
+    groups).  Range predicates estimate their passing fraction from bin
+    overlap — far tighter than the (hi-lo)/span guess on skewed data — and
+    the estimate feeds the planner's PostfilterBeam pool sizing.  Stored
+    once per (file, column) in the ``repro.attr-zonemap-v1`` blob and
+    attached to each row group's :class:`ZoneStats` at decode (the per-rg
+    estimate therefore reflects the file's distribution)."""
+
+    lo: float
+    hi: float
+    counts: Tuple[int, ...]
+
+    @property
+    def total(self) -> int:
+        return sum(self.counts)
+
+    def fraction_between(self, lo: Optional[float], hi: Optional[float]) -> float:
+        """Estimated fraction of rows with lo <= value <= hi (either bound
+        optional; bound exclusivity is below bin resolution and ignored)."""
+        if self.total == 0:
+            return 0.0
+        q_lo = self.lo if lo is None else max(float(lo), self.lo)
+        # +1 closes the last bin: values == hi land in [hi, hi+width) terms
+        q_hi = (self.hi + 1.0) if hi is None else min(float(hi) + 1.0, self.hi + 1.0)
+        if q_hi <= q_lo:
+            return 0.0
+        width = (self.hi + 1.0 - self.lo) / len(self.counts)
+        covered = 0.0
+        for b, c in enumerate(self.counts):
+            b_lo = self.lo + b * width
+            b_hi = b_lo + width
+            overlap = min(q_hi, b_hi) - max(q_lo, b_lo)
+            if overlap > 0:
+                covered += c * (overlap / width)
+        return min(1.0, covered / self.total)
+
+    def to_json(self) -> dict:
+        return {"lo": self.lo, "hi": self.hi, "counts": list(self.counts)}
+
+    @staticmethod
+    def from_json(obj: dict) -> "ColumnHistogram":
+        return ColumnHistogram(
+            lo=float(obj["lo"]), hi=float(obj["hi"]), counts=tuple(obj["counts"])
+        )
+
+    @staticmethod
+    def build(values, bins: int = 16) -> Optional["ColumnHistogram"]:
+        arr = np.asarray(values)
+        if arr.size == 0:
+            return None
+        lo, hi = float(arr.min()), float(arr.max())
+        counts, _edges = np.histogram(arr, bins=bins, range=(lo, hi + 1.0))
+        return ColumnHistogram(lo=lo, hi=hi, counts=tuple(int(c) for c in counts))
+
+
+@dataclass(frozen=True)
 class ZoneStats:
     """One (row_group, column) zone-map entry.
 
-    Numeric columns carry ``min``/``max``; dictionary columns carry
-    ``values`` (value → row count).  ``count`` is the row-group size."""
+    Numeric columns carry ``min``/``max`` plus an optional file-level
+    equi-width :class:`ColumnHistogram`; dictionary columns carry
+    ``values`` (value → row count).  ``count`` is the row-group size.  The
+    histogram is serialized once per (file, column) by the zone-map blob
+    codec, not inside each zone entry."""
 
     count: int
     min: Optional[float] = None
     max: Optional[float] = None
     values: Optional[Dict[str, int]] = None
+    hist: Optional[ColumnHistogram] = None
 
     def to_json(self) -> dict:
         out: dict = {"count": self.count}
@@ -229,6 +290,30 @@ class Range(_Leaf):
             return 0.0
         if not self.zone_may_match(zones):
             return 0.0
+        if z.hist is not None:
+            # histogram-backed estimate: bin-overlap mass instead of the
+            # uniform (hi-lo)/span guess — robust to skewed columns, and
+            # the signal the planner's band selection keys on.  The
+            # histogram is FILE-level, so condition it on this row group's
+            # own [min, max]: P(pass | value in rg range).  That keeps the
+            # per-rg tightening the span estimator had (a sorted column's
+            # fully-passing row group must estimate ~1.0, not the file-
+            # wide fraction) on top of the skew-awareness.
+            z_lo, z_hi = float(z.min), float(z.max)
+            # fraction_between treats both bounds as inclusive; histograms
+            # only exist for int columns, so a strict bound shifts by
+            # exactly one — without this, 'price < 1' on a column
+            # concentrated at 1 would count value 1's whole mass and flip
+            # the planner band from prefilter to postfilter
+            lo_q = self.lo if (self.lo is None or self.lo_inclusive) else float(self.lo) + 1.0
+            hi_q = self.hi if (self.hi is None or self.hi_inclusive) else float(self.hi) - 1.0
+            lo_c = z_lo if lo_q is None else max(float(lo_q), z_lo)
+            hi_c = z_hi if hi_q is None else min(float(hi_q), z_hi)
+            if hi_c < lo_c:
+                return 0.0
+            denom = z.hist.fraction_between(z_lo, z_hi)
+            if denom > 0.0:
+                return min(1.0, z.hist.fraction_between(lo_c, hi_c) / denom)
         span = float(z.max) - float(z.min)
         if span <= 0:
             return 1.0

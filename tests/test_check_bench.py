@@ -51,6 +51,16 @@ def _clean_doc():
                 "distinct_filters": 8,
                 "parity_ok": True,
             },
+            "table2.filtered_mixed_flavor": {
+                "throughput_qps": 40.0,
+                "recall": 1.0,
+                "kernel_dispatches": 2,
+                "split_dispatches": 4,
+                "probe_fragments": 2,
+                "speedup_vs_split": 1.4,
+                "distinct_filters": 8,
+                "parity_ok": True,
+            },
         },
     }
 
@@ -260,6 +270,37 @@ def test_hetero_absolute_gates():
 def test_hetero_clean_row_passes():
     doc = _clean_doc()
     assert check_bench.check(doc, copy.deepcopy(doc)) == []
+
+
+def test_mixed_flavor_absolute_gates():
+    """The unified-kernel acceptance gates: more than one dispatch per
+    shard, no dispatch win over the split path, a sub-1 fragment speedup,
+    broken parity, and recall below the floor each fail without any
+    baseline."""
+    cur = _clean_doc()
+    m = cur["rows"]["table2.filtered_mixed_flavor"]
+    m["kernel_dispatches"] = 4  # == split: two dispatches per shard again
+    m["speedup_vs_split"] = 0.9
+    m["parity_ok"] = False
+    m["recall"] = 0.90
+    failures = check_bench.check(cur, None)
+    assert any("exactly one kernel dispatch per shard" in f for f in failures)
+    assert any("no fewer" in f and "split-flavor" in f for f in failures)
+    assert any("not faster than the two-dispatch split-flavor" in f for f in failures)
+    assert any("diverge from the split-flavor" in f for f in failures)
+    assert any(
+        "table2.filtered_mixed_flavor" in f and "recall vs oracle" in f
+        for f in failures
+    )
+
+
+def test_mixed_flavor_one_dispatch_gate_is_exact():
+    """kernel_dispatches must EQUAL probe_fragments: even fewer dispatches
+    than fragments (a shard silently skipped) fails the gate."""
+    cur = _clean_doc()
+    cur["rows"]["table2.filtered_mixed_flavor"]["kernel_dispatches"] = 1
+    failures = check_bench.check(cur, None)
+    assert any("exactly one kernel dispatch per shard" in f for f in failures)
 
 
 def test_hetero_gates_on_speedup_ratio_not_wall_clock():

@@ -331,6 +331,151 @@ def test_masked_multi_rows_match_per_query_single_calls(backend):
 
 
 # ---------------------------------------------------------------------------
+# unified exact/PQ kernel (mixed-flavor single dispatch) + dedup'd planes
+# ---------------------------------------------------------------------------
+
+
+def _unified_inputs(q, n, d, m, K, seed):
+    rng = np.random.default_rng(seed)
+    Q = _np(q, d, seed=seed)
+    X = _np(n, d, seed=seed + 1)
+    luts = rng.normal(size=(q, m, K)).astype(np.float32)
+    codes = rng.integers(0, K, size=(n, m)).astype(np.int32)
+    masks = rng.random((q, n)) < 0.4
+    flavor = (np.arange(q) % 2).astype(bool)
+    return Q, X, luts, codes, masks, flavor
+
+
+# non-tile-aligned Q/N, single-row, and k > passing edges, both metrics
+@pytest.mark.parametrize("q,n,k", [(2, 1, 1), (5, 77, 9), (9, 130, 10), (4, 300, 320)])
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_unified_masked_topk_matches_ref(q, n, k, metric):
+    Q, X, luts, codes, masks, flavor = _unified_inputs(q, n, 16, 4, 16, seed=q * 7 + n)
+    dp, ip_ = ops.unified_masked_topk(
+        jnp.asarray(Q), jnp.asarray(X), jnp.asarray(luts), jnp.asarray(codes),
+        jnp.asarray(masks), jnp.asarray(flavor), k, metric=metric, backend="pallas",
+    )
+    dr, ir = ops.unified_masked_topk(
+        jnp.asarray(Q), jnp.asarray(X), jnp.asarray(luts), jnp.asarray(codes),
+        jnp.asarray(masks), jnp.asarray(flavor), k, metric=metric, backend="ref",
+    )
+    np.testing.assert_array_equal(np.asarray(ip_), np.asarray(ir))
+    dp, dr = np.asarray(dp), np.asarray(dr)
+    np.testing.assert_allclose(
+        np.where(np.isinf(dp), 0.0, dp), np.where(np.isinf(dr), 0.0, dr),
+        rtol=2e-4, atol=2e-3,
+    )
+    assert (np.isinf(dp) == np.isinf(dr)).all()
+
+
+@pytest.mark.parametrize("backend", ["pallas", "ref"])
+def test_unified_rows_match_per_flavor_split_ops(backend):
+    """The acceptance contract of the fused dispatch: every exact-flavor
+    row equals the dedicated exact multi-op's row, every ADC-flavor row
+    equals the dedicated PQ multi-op's row — the unified kernel is the two
+    split dispatches, bit-for-bit, in one call."""
+    Q, X, luts, codes, masks, flavor = _unified_inputs(7, 210, 16, 4, 16, seed=3)
+    k = 12
+    du, iu = ops.unified_masked_topk(
+        jnp.asarray(Q), jnp.asarray(X), jnp.asarray(luts), jnp.asarray(codes),
+        jnp.asarray(masks), jnp.asarray(flavor), k, backend=backend,
+    )
+    de, ie = ops.masked_exact_topk_multi(
+        jnp.asarray(Q), jnp.asarray(X), jnp.asarray(masks), k, backend=backend
+    )
+    da, ia = ops.masked_pq_topk_multi(
+        jnp.asarray(luts), jnp.asarray(codes), jnp.asarray(masks), k, backend=backend
+    )
+    du, iu = np.asarray(du), np.asarray(iu)
+    for qi in range(7):
+        want_i = np.asarray(ia if flavor[qi] else ie)[qi]
+        want_d = np.asarray(da if flavor[qi] else de)[qi]
+        np.testing.assert_array_equal(iu[qi], want_i)
+        np.testing.assert_allclose(
+            np.where(np.isinf(du[qi]), 0.0, du[qi]),
+            np.where(np.isinf(want_d), 0.0, want_d),
+            rtol=2e-4, atol=2e-3,
+        )
+
+
+@pytest.mark.parametrize("backend", ["pallas", "ref"])
+def test_unified_all_masked_and_all_one_flavor(backend):
+    """Degenerate flavors: an all-masked plane yields pure sentinels; an
+    all-exact (or all-ADC) flavor vector reproduces the single-flavor op."""
+    Q, X, luts, codes, masks, _ = _unified_inputs(4, 90, 8, 4, 16, seed=9)
+    d, i = ops.unified_masked_topk(
+        jnp.asarray(Q), jnp.asarray(X), jnp.asarray(luts), jnp.asarray(codes),
+        jnp.zeros((4, 90), bool), jnp.zeros(4, bool), 5, backend=backend,
+    )
+    assert np.isinf(np.asarray(d)).all() and (np.asarray(i) == -1).all()
+    for flav, split in (
+        (np.zeros(4, bool), lambda: ops.masked_exact_topk_multi(
+            jnp.asarray(Q), jnp.asarray(X), jnp.asarray(masks), 5, backend=backend)),
+        (np.ones(4, bool), lambda: ops.masked_pq_topk_multi(
+            jnp.asarray(luts), jnp.asarray(codes), jnp.asarray(masks), 5,
+            backend=backend)),
+    ):
+        du, iu = ops.unified_masked_topk(
+            jnp.asarray(Q), jnp.asarray(X), jnp.asarray(luts), jnp.asarray(codes),
+            jnp.asarray(masks), jnp.asarray(flav), 5, backend=backend,
+        )
+        ds, is_ = split()
+        np.testing.assert_array_equal(np.asarray(iu), np.asarray(is_))
+
+
+@pytest.mark.parametrize("backend", ["pallas", "ref"])
+def test_dedup_plane_matches_dense_plane(backend):
+    """Dedup-then-broadcast contract: the (m unique rows, row index)
+    factored plane returns exactly what the dense (Q, N) plane returns,
+    for the exact, PQ, and unified ops alike."""
+    rng = np.random.default_rng(21)
+    Q, X = _np(9, 16, seed=31), _np(140, 16, seed=32)
+    luts = rng.normal(size=(9, 4, 16)).astype(np.float32)
+    codes = rng.integers(0, 16, size=(140, 4)).astype(np.int32)
+    unique = rng.random((3, 140)) < 0.4
+    idx = rng.integers(0, 3, size=9)
+    dense = unique[idx]
+    flavor = (np.arange(9) % 2).astype(bool)
+    pairs = [
+        (
+            ops.masked_exact_topk_dedup(
+                jnp.asarray(Q), jnp.asarray(X), jnp.asarray(unique),
+                jnp.asarray(idx), 8, backend=backend,
+            ),
+            ops.masked_exact_topk_multi(
+                jnp.asarray(Q), jnp.asarray(X), jnp.asarray(dense), 8,
+                backend=backend,
+            ),
+        ),
+        (
+            ops.masked_pq_topk_dedup(
+                jnp.asarray(luts), jnp.asarray(codes), jnp.asarray(unique),
+                jnp.asarray(idx), 8, backend=backend,
+            ),
+            ops.masked_pq_topk_multi(
+                jnp.asarray(luts), jnp.asarray(codes), jnp.asarray(dense), 8,
+                backend=backend,
+            ),
+        ),
+        (
+            ops.unified_masked_topk_dedup(
+                jnp.asarray(Q), jnp.asarray(X), jnp.asarray(luts),
+                jnp.asarray(codes), jnp.asarray(unique), jnp.asarray(idx),
+                jnp.asarray(flavor), 8, backend=backend,
+            ),
+            ops.unified_masked_topk(
+                jnp.asarray(Q), jnp.asarray(X), jnp.asarray(luts),
+                jnp.asarray(codes), jnp.asarray(dense), jnp.asarray(flavor), 8,
+                backend=backend,
+            ),
+        ),
+    ]
+    for (dd, di), (dm, im) in pairs:
+        np.testing.assert_array_equal(np.asarray(di), np.asarray(im))
+        np.testing.assert_array_equal(np.asarray(dd), np.asarray(dm))
+
+
+# ---------------------------------------------------------------------------
 # property-based sweeps
 # ---------------------------------------------------------------------------
 

@@ -14,6 +14,7 @@ import pytest
 
 from repro.lakehouse.table import LakehouseTable
 from repro.runtime import fragments as F
+from repro.runtime import planner
 from repro.runtime.cluster import make_local_cluster
 from repro.runtime.coordinator import IndexConfig
 from repro.serving.serve_loop import ProbeMicroBatcher
@@ -211,7 +212,7 @@ def test_coalesced_fragment_keeps_hetero_filters_together(plane_cluster):
             queries=Q[qi : qi + 1],
             query_index=np.array([qi], np.int64),
             filters=[HETERO_FILTERS[qi]],
-            filter_modes=["mask"],
+            plan_ops=[planner.default_filtered_op(10, 4, use_pq=False)],
         )
         for qi in range(8)
     ]
@@ -219,6 +220,7 @@ def test_coalesced_fragment_keeps_hetero_filters_together(plane_cluster):
     assert len(merged) == 1
     assert merged[0].filters == HETERO_FILTERS
     assert merged[0].queries.shape == (8, DIM)
+    assert len(merged[0].plan_ops) == 8  # row-aligned ops ride the merge
 
 
 def test_micro_batcher_hetero_submissions_share_kernel_calls(plane_cluster):
