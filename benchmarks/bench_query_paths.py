@@ -454,6 +454,84 @@ def main(tiny: bool = False, json_path: str = "BENCH_query_paths.json") -> None:
         "parity_ok": bool(parity_m),
     }
 
+    # ---- freshness: append → probe with NO refresh (fresh-tail tier) ------
+    # Sustained write load: append a tail (~1/16 of the corpus), then probe
+    # immediately against the now-stale index binding.  The scan oracle
+    # reads the snapshot's own file list, so it is fresh by construction;
+    # the tail tier must hold recall vs it >= 0.95 with unindexed_rows == 0
+    # (the silent stale-read window this tier closes), carrying exactly one
+    # plan op per unindexed row group.  ``recall_without_tail`` records the
+    # pre-fix silent-drop recall for the staleness axis; latency is the
+    # stale-probe p50 (tail scan riding the same wave as the graph shards).
+    n_tail = max(len(X) // 16, rows_per_group)
+    Xt = clustered(rng, n_tail, D, n_clusters=8)
+    t.append_vectors(
+        Xt,
+        num_files=1,
+        rows_per_group=rows_per_group,
+        file_prefix="tail",
+        attributes={
+            "category": np.asarray(["tail"] * n_tail),
+            "price": rng.integers(0, 100, size=n_tail).astype(np.int64),
+        },
+    )
+    # half the queries target old (indexed) rows, half the fresh tail
+    half = len(Q) // 2
+    Qf = np.concatenate([
+        Q[:half],
+        Xt[rng.choice(n_tail, len(Q) - half)]
+        + 0.05 * rng.normal(size=(len(Q) - half, D)).astype(np.float32),
+    ])
+    c.coordinator.probe_batch("bench", Qf, 10, strategy="diskann")  # warm
+    oracle_fs = stale_s = float("inf")
+    oracle_fr = pr_t = None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        oracle_fr = c.coordinator.probe_batch("bench", Qf, 10, strategy="scan")
+        oracle_fs = min(oracle_fs, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        pr_t = c.coordinator.probe_batch("bench", Qf, 10, strategy="diskann")
+        stale_s = min(stale_s, time.perf_counter() - t0)
+    truth_t = [
+        {(h.file_path, h.row_group, h.row_offset) for h in hits}
+        for hits in oracle_fr.hits
+    ]
+    def _recall_vs_fresh(rep):
+        return float(np.mean([
+            len({(h.file_path, h.row_group, h.row_offset) for h in hits} & tt)
+            / max(len(tt), 1)
+            for hits, tt in zip(rep.hits, truth_t)
+        ]))
+    recall_t = _recall_vs_fresh(pr_t)
+    # the pre-fix behavior, for the staleness axis: tail tier off
+    pr_drop = c.coordinator.probe_batch(
+        "bench", Qf, 10, strategy="diskann", include_tail=False
+    )
+    recall_drop = _recall_vs_fresh(pr_drop)
+    tail_rgs = -(n_tail // -rows_per_group)  # ceil: row groups in the tail
+    tail_plan_ops = (
+        len([sid for sid in pr_t.plan.ops[0] if sid < 0]) if pr_t.plan else 0
+    )
+    emit(
+        "table2.freshness",
+        stale_s / len(Qf) * 1e6,
+        f"B_{len(Qf)}_tail_rows_{pr_t.tail_rows}_rgs_{tail_rgs}"
+        f"_recall_vs_oracle_{recall_t:.3f}_without_tail_{recall_drop:.3f}"
+        f"_unindexed_{pr_t.unindexed_rows}_stale_{pr_t.stale}"
+        f"_p50_ms_{stale_s/len(Qf)*1e3:.1f}",
+    )
+    rows["table2.freshness"] = {
+        "throughput_qps": len(Qf) / stale_s,
+        "recall": recall_t,
+        "recall_without_tail": recall_drop,
+        "tail_rows": pr_t.tail_rows,
+        "tail_row_groups": tail_rgs,
+        "tail_plan_ops": tail_plan_ops,
+        "unindexed_rows": pr_t.unindexed_rows,
+        "stale": bool(pr_t.stale),
+        "oracle_qps": len(Qf) / oracle_fs,
+    }
+
     if json_path:
         doc = {
             "meta": {"bench": "bench_query_paths", "tiny": tiny, "n_vec": n_vec,

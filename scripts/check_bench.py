@@ -34,6 +34,12 @@ Absolute gates (hold regardless of any baseline):
     dispatches than the split path, and the fragment-level Stage A faster
     than it (``speedup_vs_split > 1``; both modes timed on the same
     executor in the same interleaved window).
+  - ``table2.freshness`` (probe immediately after an append, NO index
+    refresh): an unindexed tail must actually be present (``tail_rows >
+    0`` and ``stale``), recall vs the fresh scan oracle >= 0.95, ZERO
+    silently-dropped rows (``unindexed_rows == 0`` — the stale-read
+    window the fresh-tail tier closes), and exactly one plan op per
+    unindexed row group (``tail_plan_ops == tail_row_groups``).
 
 Baseline gates (vs the committed baseline, benchmarks/baselines/):
   - a THROUGHPUT-GATED row's ``throughput_qps`` dropping more than
@@ -214,6 +220,34 @@ def check(
                 f"table2.filtered_mixed_flavor: unified fragment Stage A "
                 f"(speedup_vs_split {mixed.get('speedup_vs_split', 0.0):.2f}x) "
                 "is not faster than the two-dispatch split-flavor path"
+            )
+    fresh = rows.get("table2.freshness")
+    if fresh is not None:
+        if fresh.get("tail_rows", 0) <= 0 or not fresh.get("stale", False):
+            failures.append(
+                "table2.freshness: the bench probed with no unindexed tail "
+                f"present (tail_rows={fresh.get('tail_rows', 0)}, "
+                f"stale={fresh.get('stale', False)}) — the staleness gate "
+                "exercised nothing"
+            )
+        if fresh.get("recall", 0.0) < FILTERED_MIN_RECALL:
+            failures.append(
+                f"table2.freshness: recall vs the fresh scan oracle "
+                f"{fresh.get('recall', 0.0):.3f} < {FILTERED_MIN_RECALL} with "
+                "an unindexed tail present — appended rows are not searchable"
+            )
+        if fresh.get("unindexed_rows", -1) != 0:
+            failures.append(
+                f"table2.freshness: probe silently dropped "
+                f"{fresh.get('unindexed_rows')} appended-but-unindexed rows "
+                "(the pre-tail-tier stale-read window is back)"
+            )
+        if fresh.get("tail_plan_ops", -1) != fresh.get("tail_row_groups", 0):
+            failures.append(
+                f"table2.freshness: plan carried "
+                f"{fresh.get('tail_plan_ops')} tail ops for "
+                f"{fresh.get('tail_row_groups')} unindexed row groups — the "
+                "one-ExactScan-per-tail-row-group contract broke"
             )
 
     for name in sorted(base_rows):

@@ -18,6 +18,11 @@
   columns, value→count tags for dictionary columns) plus per-shard
   row-group membership, so the coordinator can prune shards and row
   groups against WHERE predicates before dispatch.
+- ``repro.fresh-tail-v1`` (:func:`encode_fresh_tail_blob`) — freshness:
+  the appended-but-unindexed row groups committed since the last indexed
+  snapshot.  Append commits maintain it; probes serve the listed row
+  groups through exact-scan plan ops so writes are searchable without a
+  rebuild; a refresh/compaction resets it.
 
 Deviation from the paper, recorded per DESIGN.md: the shard blob carries the
 PQ **codes** section explicitly.  The paper lists only the codebook, but the
@@ -59,6 +64,7 @@ CENTROID_BLOB_TYPE = "flockdb-ann-centroid-v1"
 SHARD_BLOB_TYPE = "flockdb-ann-index-v1"
 ROUTING_BLOB_TYPE = "flockdb-ann-routing-v1"
 ATTR_ZONEMAP_BLOB_TYPE = "repro.attr-zonemap-v1"
+FRESH_TAIL_BLOB_TYPE = "repro.fresh-tail-v1"
 
 _METRIC_CODE = {"l2": 0, "ip": 1}
 _METRIC_NAME = {v: k for k, v in _METRIC_CODE.items()}
@@ -550,6 +556,86 @@ def build_zonemap(store, file_paths: List[str]) -> Optional[AttrZoneMap]:
     if not columns:
         return None
     return AttrZoneMap(columns=columns, zones=zones)
+
+
+# ---------------------------------------------------------------------------
+# fresh-tail blob (repro.fresh-tail-v1)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TailEntry:
+    """One appended-but-unindexed data file: its row groups and their sizes."""
+
+    file_path: str
+    row_groups: List[int]
+    row_counts: List[int]
+
+    @property
+    def num_rows(self) -> int:
+        return int(sum(self.row_counts))
+
+
+@dataclass
+class FreshTail:
+    """The fresh-tail tier manifest: row groups appended since the last
+    indexed snapshot.  ``base_snapshot_id`` is the snapshot the bound index
+    actually covers; every entry lists one data file committed after it.
+    Probes serve these row groups through exact-scan plan ops alongside the
+    graph shards, so appends are searchable without a rebuild; a compaction
+    (refresh_index) folds them into the shards and resets the tail."""
+
+    base_snapshot_id: int
+    entries: List[TailEntry]
+
+    @property
+    def total_rows(self) -> int:
+        return int(sum(e.num_rows for e in self.entries))
+
+    @property
+    def total_row_groups(self) -> int:
+        return int(sum(len(e.row_groups) for e in self.entries))
+
+    def row_group_list(self) -> List[Tuple[str, int, int]]:
+        """Flat (file_path, row_group, row_count) triples in tail order —
+        the enumeration that defines each row group's synthetic plan-grid
+        id (-1, -2, ... in this order)."""
+        out: List[Tuple[str, int, int]] = []
+        for e in self.entries:
+            for rg, cnt in zip(e.row_groups, e.row_counts):
+                out.append((e.file_path, int(rg), int(cnt)))
+        return out
+
+
+def encode_fresh_tail_blob(tail: FreshTail) -> bytes:
+    meta = {
+        "version": 1,
+        "base-snapshot-id": tail.base_snapshot_id,
+        "entries": [
+            {
+                "file": e.file_path,
+                "row-groups": [int(g) for g in e.row_groups],
+                "row-counts": [int(c) for c in e.row_counts],
+            }
+            for e in tail.entries
+        ],
+    }
+    return _c(json.dumps(meta, separators=(",", ":")).encode("utf-8"))
+
+
+def decode_fresh_tail_blob(data: bytes) -> FreshTail:
+    meta = json.loads(_d(data).decode("utf-8"))
+    return FreshTail(
+        base_snapshot_id=int(meta["base-snapshot-id"]),
+        entries=[
+            TailEntry(
+                file_path=e["file"],
+                row_groups=[int(g) for g in e["row-groups"]],
+                row_counts=[int(c) for c in e["row-counts"]],
+            )
+            for e in meta["entries"]
+        ],
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -161,6 +161,53 @@ class RestCatalog:
         mdir = f"{meta.location}/metadata"
         return f"{mdir}/manifest-{token}.json", f"{mdir}/manifest-list-{token}.json"
 
+    def _load_tail(self, snap: Snapshot):
+        """Decode the fresh-tail manifest a snapshot carries (None if it
+        carries none)."""
+        from repro.core.blobs import FRESH_TAIL_BLOB_TYPE, decode_fresh_tail_blob
+        from repro.iceberg.puffin import PuffinReader
+
+        path = snap.summary.get("ann.fresh-tail-file")
+        if path is None:
+            return None
+        reader = PuffinReader(self.store.stat(path).size, self.store.range_reader(path))
+        return decode_fresh_tail_blob(reader.read_first(FRESH_TAIL_BLOB_TYPE))
+
+    def _write_tail(self, meta: TableMetadata, snap: Snapshot, tail) -> None:
+        """Persist a fresh-tail manifest as a small Puffin file and bind it
+        to ``snap.summary["ann.fresh-tail-file"]``.  Written inside the
+        commit closure; a conflicted retry writes a fresh token'd file and
+        the loser becomes a GC-able orphan."""
+        from repro.core.blobs import FRESH_TAIL_BLOB_TYPE, encode_fresh_tail_blob
+        from repro.iceberg.puffin import PuffinWriter
+
+        writer = PuffinWriter(file_properties={"created-by": "repro-flockdb"})
+        writer.add_blob(
+            encode_fresh_tail_blob(tail),
+            type=FRESH_TAIL_BLOB_TYPE,
+            snapshot_id=snap.snapshot_id,
+            properties={
+                "base-snapshot-id": str(tail.base_snapshot_id),
+                "row-count": str(tail.total_rows),
+            },
+        )
+        token = uuid.uuid4().hex[:12]
+        path = f"{meta.location}/metadata/ann-tail-{token}.puffin"
+        self.store.put(path, writer.finish())
+        snap.summary["ann.fresh-tail-file"] = path
+
+    def _tail_entry(self, file_path: str):
+        """Row-group membership of one freshly written data file."""
+        from repro.core.blobs import TailEntry
+        from repro.lakehouse.vparquet import VParquetReader
+
+        r = VParquetReader.from_store(self.store, file_path)
+        return TailEntry(
+            file_path=file_path,
+            row_groups=list(range(r.num_row_groups)),
+            row_counts=[int(rg["num_rows"]) for rg in r.row_groups],
+        )
+
     def append_files(
         self, name: str, files: List[DataFile], extra_summary: Optional[Dict[str, str]] = None
     ) -> TableMetadata:
@@ -189,6 +236,25 @@ class RestCatalog:
                 )
                 if stale:
                     snap.summary["ann.stale-statistics-file"] = stale
+                    # Fresh-tail maintenance: the carried index does not
+                    # cover the files this commit appends.  Extend the
+                    # parent's tail manifest (or start one at the parent —
+                    # the last snapshot the index was bound against) with
+                    # the new files' row groups, so probes can serve the
+                    # appended rows without a rebuild.
+                    from repro.core.blobs import FreshTail
+
+                    prior = self._load_tail(parent)
+                    base_id = (
+                        prior.base_snapshot_id
+                        if prior is not None
+                        else parent.snapshot_id
+                    )
+                    entries = list(prior.entries) if prior is not None else []
+                    entries.extend(self._tail_entry(f.path) for f in files)
+                    self._write_tail(
+                        meta, snap, FreshTail(base_snapshot_id=base_id, entries=entries)
+                    )
             meta.snapshots.append(snap)
             meta.current_snapshot_id = snap.snapshot_id
             return meta
@@ -228,6 +294,21 @@ class RestCatalog:
             )
             if stale:
                 snap.summary["ann.stale-statistics-file"] = stale
+                # tail entries whose file was just deleted drop out; the
+                # rest stay searchable against the new snapshot
+                prior = self._load_tail(parent)
+                if prior is not None:
+                    from repro.core.blobs import FreshTail
+
+                    kept = [e for e in prior.entries if e.file_path not in doomed]
+                    if kept:
+                        self._write_tail(
+                            meta,
+                            snap,
+                            FreshTail(
+                                base_snapshot_id=prior.base_snapshot_id, entries=kept
+                            ),
+                        )
             meta.snapshots.append(snap)
             meta.current_snapshot_id = snap.snapshot_id
             return meta

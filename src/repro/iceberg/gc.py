@@ -7,7 +7,8 @@ An object under the table location is *referenced* if it is:
 - a data file live in any retained snapshot's manifests (any status — DELETED
   entries still reference the file for time travel),
 - a Puffin file named by any retained snapshot's summary
-  (``statistics-file`` or ``ann.stale-statistics-file``).
+  (``statistics-file``, ``ann.stale-statistics-file``, or the fresh-tail
+  manifest ``ann.fresh-tail-file``).
 
 Everything else is an orphan.  ``collect_orphans`` returns them;
 ``expire_and_collect`` additionally drops old snapshots first, which is how
@@ -45,7 +46,11 @@ def _referenced_keys(store: ObjectStore, meta: TableMetadata) -> Set[str]:
             refs.add(mpath)
             for entry in Manifest.read(store, mpath).entries:
                 refs.add(entry.data_file.path)
-        for key in (STATISTICS_FILE_PROP, "ann.stale-statistics-file"):
+        for key in (
+            STATISTICS_FILE_PROP,
+            "ann.stale-statistics-file",
+            "ann.fresh-tail-file",
+        ):
             if key in snap.summary:
                 refs.add(snap.summary[key])
     return refs

@@ -49,12 +49,15 @@ import numpy as np
 from repro.core.blobs import (
     ATTR_ZONEMAP_BLOB_TYPE,
     CENTROID_BLOB_TYPE,
+    FRESH_TAIL_BLOB_TYPE,
     ROUTING_BLOB_TYPE,
     SHARD_BLOB_TYPE,
     AttrZoneMap,
+    FreshTail,
     RoutingTable,
     ShardInfo,
     build_zonemap,
+    decode_fresh_tail_blob,
     decode_routing_blob,
     decode_zonemap_blob,
     encode_routing_blob,
@@ -75,6 +78,12 @@ from repro.runtime.predicates import Predicate, parse_predicate, row_group_mask
 from repro.runtime.scheduler import ExecutorPool, Scheduler
 
 TOMBSTONE_REBUILD_THRESHOLD = 0.20  # paper §7.3
+
+# Fresh-tail compaction: once the appended-but-unindexed tail crosses this
+# many rows, fold it into the Vamana shards (a refresh commit) — below it
+# the exact tail scan is cheaper than a graph rebuild (paper §7.3's
+# incremental-refresh economics applied to the delta tier).
+TAIL_COMPACT_THRESHOLD_ROWS = 4096
 
 # Selectivity-adaptive filtered-probe planning lives in runtime/planner.py
 # (the probe-plan IR): the coordinator asks the planner for per-(query,
@@ -161,8 +170,20 @@ class ProbeReport:
     # the probe-plan IR artifact (runtime/planner.py ProbePlan): the
     # per-(query, shard) op grid the coordinator planned, loggable and
     # round-trippable via to_json/from_json.  None on unplanned paths
-    # (scan/centroid, unfiltered single probes).
+    # (scan/centroid, unfiltered single probes) — but ALWAYS present when a
+    # fresh tail was served: the tail adds exactly one ExactScan op per
+    # unindexed row group, keyed by its synthetic negative id.
     plan: Optional[ProbePlan] = None
+    # fresh-tail tier: rows appended since the index's base snapshot that
+    # this probe served through tail ExactScan ops ...
+    tail_rows: int = 0
+    # ... and rows the probe could NOT see.  The tail tier makes this an
+    # invariant 0; it is nonzero only with ``include_tail=False`` (the
+    # pre-fix silent-drop behavior, kept reachable for regression tests).
+    unindexed_rows: int = 0
+    # the probed snapshot serves a stale index binding (an append/delete
+    # landed after the index was built and no refresh has committed since)
+    stale: bool = False
 
 
 @dataclass
@@ -197,6 +218,8 @@ class Coordinator:
         # decoded attribute zone maps, keyed by (immutable) puffin path —
         # filtered probes on the serving path must not re-decode the blob
         self._zonemap_cache: Dict[str, Optional[AttrZoneMap]] = {}
+        # decoded fresh-tail manifests, keyed by (immutable) tail puffin path
+        self._tail_cache: Dict[str, FreshTail] = {}
 
     # ------------------------------------------------------------------ build
     def create_index(self, table_name: str, cfg: IndexConfig) -> BuildReport:
@@ -545,6 +568,28 @@ class Coordinator:
         reader = PuffinReader(self.store.stat(path).size, self.store.range_reader(path))
         return meta, snap, path, reader
 
+    def _resolve_tail(self, snap: Snapshot) -> Optional[FreshTail]:
+        """Fresh-tail manifest for ``snap``: non-None only when the snapshot
+        serves a stale index binding (``statistics_file`` unset — a fresh
+        index covers everything) and an append since the index's base
+        snapshot recorded unindexed row groups.  Tail Puffin files are
+        immutable, so the decode is cached per path."""
+        if snap.statistics_file is not None:
+            return None
+        path = snap.summary.get("ann.fresh-tail-file")
+        if path is None:
+            return None
+        tail = self._tail_cache.get(path)
+        if tail is None:
+            reader = PuffinReader(
+                self.store.stat(path).size, self.store.range_reader(path)
+            )
+            tail = decode_fresh_tail_blob(reader.read_first(FRESH_TAIL_BLOB_TYPE))
+            if len(self._tail_cache) >= 8:
+                self._tail_cache.pop(next(iter(self._tail_cache)))
+            self._tail_cache[path] = tail
+        return tail if tail.entries else None
+
     def probe(
         self,
         table_name: str,
@@ -558,6 +603,7 @@ class Coordinator:
         use_pq: Optional[bool] = None,
         L: Optional[int] = None,
         filter: Optional[object] = None,
+        include_tail: bool = True,
     ) -> ProbeReport:
         """Vector top-k query.  ``strategy``: auto | diskann | centroid | scan.
 
@@ -565,35 +611,68 @@ class Coordinator:
         :class:`repro.runtime.predicates.Predicate` or a SQL WHERE fragment
         string) through the probe: results are the top-k among rows
         satisfying it.  ``strategy="scan"`` with a filter is the brute-force
-        post-filter oracle."""
+        post-filter oracle.
+
+        ``include_tail=False`` disables the fresh-tail tier: rows appended
+        since the index's base snapshot are silently dropped (the pre-fix
+        behavior) and surface as ``ProbeReport.unindexed_rows`` instead."""
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         pred = self._coerce_filter(filter)
         self.store.metrics.reset()
         table = LakehouseTable(self.catalog, table_name)
         if strategy == "scan":
+            # reads the snapshot's own file list — fresh by construction
             return self._probe_scan(table, queries, k, snapshot_id, pred=pred)
         meta, snap, puffin_path, reader = self._resolve_index(
             table_name, snapshot_id, as_of_ms
         )
+        full_tail = self._resolve_tail(snap)
+        tail = full_tail if include_tail else None
         routing = decode_routing_blob(reader.read_first(ROUTING_BLOB_TYPE))
         shard_blobs = reader.blobs_of_type(SHARD_BLOB_TYPE)
         strategy = self._choose_strategy(strategy, routing, shard_blobs)
         if strategy == "centroid":
-            return self._probe_centroid(
-                table, reader, queries, k, n_probe, pred=pred, puffin_path=puffin_path
+            report = self._probe_centroid(
+                table, reader, queries, k, n_probe, pred=pred,
+                puffin_path=puffin_path, tail=tail,
             )
-        return self._probe_diskann(
-            table,
-            routing,
-            shard_blobs,
-            puffin_path,
-            queries,
-            k,
-            use_pq=use_pq,
-            L=L,
-            pred=pred,
-            zonemap=self._read_zonemap(reader, puffin_path) if pred is not None else None,
-        )
+        else:
+            report = self._probe_diskann(
+                table,
+                routing,
+                shard_blobs,
+                puffin_path,
+                queries,
+                k,
+                use_pq=use_pq,
+                L=L,
+                pred=pred,
+                zonemap=(
+                    self._read_zonemap(reader, puffin_path) if pred is not None else None
+                ),
+                tail=tail,
+            )
+        self._apply_tail_report(report, snap, full_tail, served=tail is not None)
+        return report
+
+    @staticmethod
+    def _apply_tail_report(
+        report: ProbeReport,
+        snap: Snapshot,
+        full_tail: Optional[FreshTail],
+        served: bool,
+    ) -> None:
+        """Freshness accounting, uniform across index-backed probe paths:
+        every appended-but-unindexed row is either served through the tail
+        tier (``tail_rows``) or dropped (``unindexed_rows`` — nonzero only
+        with ``include_tail=False``)."""
+        report.stale = snap.statistics_file is None
+        if full_tail is None:
+            return
+        if served:
+            report.tail_rows = full_tail.total_rows
+        else:
+            report.unindexed_rows = full_tail.total_rows
 
     @staticmethod
     def _choose_strategy(strategy: str, routing: RoutingTable, shard_blobs) -> str:
@@ -651,6 +730,28 @@ class Coordinator:
         if pruned:
             parts.append(f"pruned:{len(pruned)}")
         return ",".join(parts)
+
+    @staticmethod
+    def _tail_only_plan(
+        tail: Optional[FreshTail], k: int, batch: int
+    ) -> Optional[ProbePlan]:
+        """Descriptive plan for the coordinator-local (centroid) path: the
+        centroid rerank is exact over every routed row, so the only IR worth
+        recording is the tail tier — one ExactScan per unindexed row group,
+        same synthetic ids as the distributed path."""
+        if tail is None:
+            return None
+        tail_ops = planner.plan_tail(
+            [cnt for _, _, cnt in tail.row_group_list()], k=k, oversample=1
+        )
+        return ProbePlan(
+            k=k,
+            oversample=1,
+            use_pq=False,
+            ops=[dict(tail_ops) for _ in range(batch)],
+            est_selectivity=1.0,
+            pruned_shards=(),
+        )
 
     def _refresh_zonemap(
         self, reader: PuffinReader, puffin_path: str, covered: List[str]
@@ -718,6 +819,7 @@ class Coordinator:
         L: Optional[int] = None,
         n_route: Optional[int] = None,
         filter: Optional[object] = None,
+        include_tail: bool = True,
     ) -> ProbeReport:
         """Batched vector top-k over ``queries (B, dim)``.
 
@@ -752,6 +854,8 @@ class Coordinator:
         meta, snap, puffin_path, reader = self._resolve_index(
             table_name, snapshot_id, as_of_ms
         )
+        full_tail = self._resolve_tail(snap)
+        tail = full_tail if include_tail else None
         routing = decode_routing_blob(reader.read_first(ROUTING_BLOB_TYPE))
         shard_blobs = reader.blobs_of_type(SHARD_BLOB_TYPE)
         strategy = self._choose_strategy(strategy, routing, shard_blobs)
@@ -760,13 +864,15 @@ class Coordinator:
                 report = self._probe_centroid_batch(
                     table, reader, queries, k, n_probe,
                     pred=preds[0] if preds else None, puffin_path=puffin_path,
+                    tail=tail,
                 )
             else:
                 # per-group batches keep per-query file ownership, so mixed
                 # filters still return exactly the sequential probes' hits
                 report = self._grouped_filtered(
                     lambda q, p: self._probe_centroid_batch(
-                        table, reader, q, k, n_probe, pred=p, puffin_path=puffin_path
+                        table, reader, q, k, n_probe, pred=p,
+                        puffin_path=puffin_path, tail=tail,
                     ),
                     queries,
                     preds,
@@ -784,7 +890,9 @@ class Coordinator:
                 n_route=n_route,
                 preds=preds,
                 zonemap=self._read_zonemap(reader, puffin_path) if preds else None,
+                tail=tail,
             )
+        self._apply_tail_report(report, snap, full_tail, served=tail is not None)
         report.batch_size = B
         return report
 
@@ -874,11 +982,14 @@ class Coordinator:
         n_probe: int,
         pred: Optional[Predicate] = None,
         puffin_path: Optional[str] = None,
+        tail: Optional[FreshTail] = None,
     ) -> ProbeReport:
         """Coordinator-tier probe (paper Table 2 column 2): prune the file
         list with the centroid index, then exact-rerank only those files.
         With a predicate the masks keep only passing rows, and the zone map
-        (when the index carries one) skips row groups that cannot match."""
+        (when the index carries one) skips row groups that cannot match.
+        Fresh-tail files (appended since the index's base snapshot — the
+        centroid index has never seen them) join every query's file list."""
         t0 = time.time()
         ci = CentroidIndex.from_blob(reader.read_first(CENTROID_BLOB_TYPE))
         pruned: List[str] = []
@@ -887,6 +998,8 @@ class Coordinator:
             fl = ci.probe_topk(q, n_probe)
             per_query_files.append(fl)
             pruned.extend(fl)
+        if tail is not None:
+            pruned.extend(e.file_path for e in tail.entries)
         pruned = sorted(set(pruned))
         stage_a = time.time() - t0
         zonemap = self._read_zonemap(reader, puffin_path) if pred is not None else None
@@ -894,6 +1007,7 @@ class Coordinator:
         report = self._rerank_and_merge(table, masks, queries, k, ci.metric)
         report.strategy = "centroid"
         report.files_scanned = len(pruned)
+        report.plan = self._tail_only_plan(tail, k, queries.shape[0])
         report.stage_a_seconds = stage_a
         report.bytes_read = self.store.metrics.bytes_read
         report.filtered = pred is not None
@@ -909,12 +1023,14 @@ class Coordinator:
         n_probe: int,
         pred: Optional[Predicate] = None,
         puffin_path: Optional[str] = None,
+        tail: Optional[FreshTail] = None,
     ) -> ProbeReport:
         """Batched coordinator-tier probe: ONE vectorized centroid-routing
         pass produces every query's file list; the union of those files is
         read and reranked once, with per-file ownership keeping each query's
         result set identical to its sequential probe.  ``pred`` (shared by
-        the whole batch on this path) restricts masks to passing rows."""
+        the whole batch on this path) restricts masks to passing rows.
+        Fresh-tail files are owned by every query of the batch."""
         t0 = time.time()
         ci = CentroidIndex.from_blob(reader.read_first(CENTROID_BLOB_TYPE))
         per_query_files = ci.probe_topk_batch(queries, n_probe)
@@ -922,6 +1038,10 @@ class Coordinator:
         for qi, fl in enumerate(per_query_files):
             for fp in fl:
                 file_owners.setdefault(fp, set()).add(qi)
+        if tail is not None:
+            everyone = set(range(queries.shape[0]))
+            for e in tail.entries:
+                file_owners.setdefault(e.file_path, set()).update(everyone)
         pruned = sorted(file_owners)
         stage_a = time.time() - t0
         zonemap = self._read_zonemap(reader, puffin_path) if pred is not None else None
@@ -931,6 +1051,7 @@ class Coordinator:
         )
         report.strategy = "centroid"
         report.files_scanned = len(pruned)
+        report.plan = self._tail_only_plan(tail, k, queries.shape[0])
         report.stage_a_seconds = stage_a
         report.bytes_read = self.store.metrics.bytes_read
         report.filtered = pred is not None
@@ -950,11 +1071,14 @@ class Coordinator:
         L: Optional[int] = None,
         pred: Optional[Predicate] = None,
         zonemap: Optional[AttrZoneMap] = None,
+        tail: Optional[FreshTail] = None,
     ) -> ProbeReport:
         """Three-stage distributed probe (paper §6, Figure 3).  With a
         predicate, the zone map first prunes shards whose member row groups
         cannot match, then every surviving shard searches under its
-        selectivity-adaptive plan."""
+        selectivity-adaptive plan.  A fresh tail adds one ExactScan fragment
+        per unindexed row group to the same Stage-A wave; its exact hits
+        merge with the graph candidates under the shared sentinel contract."""
         oversample = int(routing.params.get("oversample", "4"))
         if use_pq is None:
             use_pq = int(routing.params.get("pq_m", "0")) > 0
@@ -967,8 +1091,21 @@ class Coordinator:
             ops, pruned, est_frac = planner.plan_filtered(
                 pred, zonemap, routing, k=k, oversample=oversample, use_pq=use_pq
             )
+        tail_list = tail.row_group_list() if tail is not None else []
+        tail_ops: Dict[int, PlanOp] = (
+            planner.plan_tail(
+                [cnt for _, _, cnt in tail_list],
+                k=k,
+                oversample=oversample,
+                est_frac=est_frac,
+            )
+            if tail_list
+            else {}
+        )
+        if pred is not None or tail_ops:
             plan_row = dict(ops)
             plan_row.update({sid: planner.Skip() for sid in pruned})
+            plan_row.update(tail_ops)
             plan = ProbePlan(
                 k=k,
                 oversample=oversample,
@@ -1005,17 +1142,31 @@ class Coordinator:
                     plan_op=ops.get(s.shard_id),
                 )
             )
-        probe_results: List[F.ProbeResult] = self.scheduler.run_wave(tasks)
+        Q = queries.shape[0]
+        tail_tasks = self._tail_tasks(
+            tail_list,
+            tail_ops,
+            queries,
+            np.arange(Q, dtype=np.int64),
+            k=k,
+            oversample=oversample,
+            metric=routing.metric,
+            filters=[pred] * Q if pred is not None else None,
+        )
+        results = self.scheduler.run_wave(tasks + tail_tasks)
+        probe_results: List[F.ProbeResult] = results[: len(tasks)]
+        tail_results: List[F.BatchProbeResult] = results[len(tasks):]
         stage_a = time.time() - t0
         # ---- merge + Stage B: exact rerank on row-group masks ---------------
         t1 = time.time()
-        Q = queries.shape[0]
         keep = k * oversample
         merged: List[List[F.ProbeCandidate]] = []
         for qi in range(Q):
             cands: List[F.ProbeCandidate] = []
             for r in probe_results:
                 cands.extend(r.candidates[qi])
+            for r in tail_results:
+                cands.extend(r.candidates.get(qi, []))
             cands.sort(key=lambda c: c.approx_distance)
             merged.append(cands[:keep])
         masks: Dict[str, Dict[int, set]] = {}
@@ -1035,7 +1186,7 @@ class Coordinator:
         report.stage_b_seconds = time.time() - t1 - report.stage_c_seconds
         report.shards_probed = len(tasks)
         report.cache_hits = sum(1 for r in probe_results if r.cache_hit)
-        report.kernel_dispatches = sum(r.kernel_dispatches for r in probe_results)
+        report.kernel_dispatches = sum(r.kernel_dispatches for r in results)
         report.bytes_read = self.store.metrics.bytes_read
         if pred is not None:
             report.filtered = True
@@ -1043,8 +1194,44 @@ class Coordinator:
             report.shards_pruned = len(pruned)
             report.fragments_pruned = len(pruned)  # one fragment per shard here
             report.est_selectivity = est_frac
-            report.plan = plan
+        report.plan = plan
         return report
+
+    @staticmethod
+    def _tail_tasks(
+        tail_list: List[Tuple[str, int, int]],
+        tail_ops: Dict[int, PlanOp],
+        queries: np.ndarray,
+        query_index: np.ndarray,
+        *,
+        k: int,
+        oversample: int,
+        metric: str,
+        filters: Optional[List[Optional[Predicate]]],
+    ) -> List[F.TailScanTaskInfo]:
+        """One Stage-A fragment per fresh-tail row group, carrying the whole
+        query block (tail fragments pass through coalescing unmerged)."""
+        B = queries.shape[0]
+        tasks: List[F.TailScanTaskInfo] = []
+        for i, (fp, rg, _cnt) in enumerate(tail_list):
+            tid = -(i + 1)
+            tasks.append(
+                F.TailScanTaskInfo(
+                    task_id=f"tail-{i}",
+                    cache_key=fp,
+                    file_path=fp,
+                    row_group=rg,
+                    tail_id=tid,
+                    queries=queries,
+                    query_index=query_index,
+                    k=k,
+                    oversample=oversample,
+                    metric=metric,
+                    filters=list(filters) if filters is not None else None,
+                    plan_ops=[tail_ops[tid]] * B,
+                )
+            )
+        return tasks
 
     def _route_queries(
         self, routing: RoutingTable, queries: np.ndarray, n_route: Optional[int]
@@ -1094,6 +1281,7 @@ class Coordinator:
         n_route: Optional[int] = None,
         preds: Optional[List[Optional[Predicate]]] = None,
         zonemap: Optional[AttrZoneMap] = None,
+        tail: Optional[FreshTail] = None,
     ) -> ProbeReport:
         """Batched three-stage distributed probe.
 
@@ -1186,9 +1374,35 @@ class Coordinator:
                         plan_ops=[op] if op is not None else None,
                     )
                 )
-        probe_results: List[F.BatchProbeResult] = self.scheduler.run_coalesced_wave(
-            tasks
+        # fresh-tail fragments: every query scans every tail row group (tail
+        # rows are outside the routing table, so n_route cannot skip them)
+        tail_list = tail.row_group_list() if tail is not None else []
+        tail_ops: Dict[int, PlanOp] = (
+            planner.plan_tail(
+                [cnt for _, _, cnt in tail_list], k=k, oversample=oversample
+            )
+            if tail_list
+            else {}
         )
+        for qi in range(B):
+            ops_grid[qi].update(tail_ops)
+        tail_tasks = self._tail_tasks(
+            tail_list,
+            tail_ops,
+            queries,
+            np.arange(B, dtype=np.int64),
+            k=k,
+            oversample=oversample,
+            metric=routing.metric,
+            filters=preds,
+        )
+        results: List[F.BatchProbeResult] = self.scheduler.run_coalesced_wave(
+            tasks + tail_tasks
+        )
+        # coalescing preserves first-appearance order, so the tail fragments
+        # (appended last, never merged) are the trailing results
+        n_shard_results = len(results) - len(tail_tasks)
+        probe_results = results[:n_shard_results]
         stage_a = time.time() - t0
         # ---- merge + Stage B: exact rerank with per-row ownership ----------
         t1 = time.time()
@@ -1196,7 +1410,7 @@ class Coordinator:
         merged: List[List[F.ProbeCandidate]] = []
         for qi in range(B):
             cands: List[F.ProbeCandidate] = []
-            for r in probe_results:  # shard order == routing order
+            for r in results:  # shard order == routing order, tail last
                 cands.extend(r.candidates.get(qi, []))
             cands.sort(key=lambda c: c.approx_distance)
             merged.append(cands[:keep])
@@ -1224,8 +1438,9 @@ class Coordinator:
         report.shards_probed = len(probe_results)
         report.probe_fragments = len(probe_results)
         report.cache_hits = sum(1 for r in probe_results if r.cache_hit)
-        report.kernel_dispatches = sum(r.kernel_dispatches for r in probe_results)
+        report.kernel_dispatches = sum(r.kernel_dispatches for r in results)
         report.bytes_read = self.store.metrics.bytes_read
+        all_pruned: set = set()
         if plans:
             report.filtered = True
             all_pruned = {sid for _, pruned, _ in plans.values() for sid in pruned}
@@ -1237,6 +1452,7 @@ class Coordinator:
             report.est_selectivity = float(
                 np.mean([frac for _, _, frac in plans.values()])
             )
+        if plans or tail_tasks:
             report.plan = ProbePlan(
                 k=k,
                 oversample=oversample,
@@ -1447,6 +1663,33 @@ class Coordinator:
             shards_reused=0,
             seconds=time.time() - t_start,
         )
+
+    def compact_tail(
+        self,
+        table_name: str,
+        index_name: str,
+        *,
+        threshold_rows: int = TAIL_COMPACT_THRESHOLD_ROWS,
+        force: bool = False,
+    ) -> Optional[RefreshReport]:
+        """Fold the fresh tail into the Vamana shards once it crosses the
+        size threshold (the background compaction policy).  Delegates to
+        :meth:`refresh_index` — the manifest diff already covers the tail's
+        files, and the refresh commit binds a new ``statistics-file``
+        snapshot summary, which implicitly resets the tail (time travel to
+        the pre-compaction snapshot still sees — and serves — its tail;
+        orphaned tail Puffins are reaped by the ordinary GC).  Returns None
+        when there is no tail or it is still below ``threshold_rows``."""
+        meta = self.catalog.load_table(table_name)
+        snap = meta.current_snapshot()
+        if snap is None:
+            return None
+        tail = self._resolve_tail(snap)
+        if tail is None:
+            return None
+        if not force and tail.total_rows < threshold_rows:
+            return None
+        return self.refresh_index(table_name, index_name)
 
     def _rebuild_shard(
         self,

@@ -614,6 +614,8 @@ class Executor:
             result = self._probe_shard(task)
         elif isinstance(task, F.BatchProbeTaskInfo):
             result = self._probe_shard_batch(task)
+        elif isinstance(task, F.TailScanTaskInfo):
+            result = self._tail_scan(task)
         elif isinstance(task, F.RerankTaskInfo):
             result = self._rerank(task)
         elif isinstance(task, F.RefreshTaskInfo):
@@ -752,6 +754,84 @@ class Executor:
             result.candidates.append(
                 self._row_candidates(graph, locmap, dists[qi], ids[qi], task.shard_id)
             )
+        result.probe_seconds = time.time() - t0
+        return result
+
+    def _tail_scan(self, task: F.TailScanTaskInfo) -> F.BatchProbeResult:
+        """Fresh-tail tier Stage A: score one appended-but-unindexed row
+        group for every query routed to it with ONE masked exact kernel
+        dispatch.  Tail rows have no graph and no PQ codes, so every plan
+        op is an ExactScan; predicates become per-query bitmask rows
+        (dedup'd plane when the batch mixes them), and the kernel's
+        (+inf, -1) sentinel contract covers zero-match predicates and
+        k > live-rows exactly as shard scans do — sentinel slots are
+        dropped before candidates leave the executor."""
+        t0 = time.time()
+        result = F.BatchProbeResult(
+            shard_id=task.tail_id, executor_id=self.executor_id
+        )
+        self._dispatch_tls.count = 0
+        qidx = np.asarray(task.query_index, np.int64)
+        reader = VParquetReader.from_store(self.store, task.file_path)
+        vectors = np.ascontiguousarray(
+            reader.read_column("vec", [task.row_group]), np.float32
+        )
+        n = vectors.shape[0]
+        if n == 0:
+            for qi in qidx:
+                result.candidates[int(qi)] = []
+            result.probe_seconds = time.time() - t0
+            return result
+        q = np.ascontiguousarray(task.queries, np.float32)
+        k_eff = min(max(1, task.k * task.oversample), n)
+        all_rows = np.ones(n, bool)
+        masks: List[np.ndarray] = []
+        keys: List[object] = []
+        for bi in range(q.shape[0]):
+            pred = task.filters[bi] if task.filters else None
+            if pred is None:
+                masks.append(all_rows)
+                keys.append(None)
+            else:
+                masks.append(row_group_mask(pred, reader, task.row_group))
+                keys.append(pred)
+        unique, row_index = self._dedup_rows(masks, keys)
+        self._count_dispatch()
+        if len(unique) == 1:
+            d, ids = ops.masked_exact_topk(
+                jnp.asarray(q),
+                jnp.asarray(vectors),
+                jnp.asarray(unique[0]),
+                int(k_eff),
+                metric=task.metric,
+                backend="auto",
+            )
+        else:
+            d, ids = ops.masked_exact_topk_dedup(
+                jnp.asarray(q),
+                jnp.asarray(vectors),
+                jnp.asarray(np.stack(unique)),
+                jnp.asarray(row_index),
+                int(k_eff),
+                metric=task.metric,
+                backend="auto",
+            )
+        d = np.asarray(d)
+        ids = np.asarray(ids, np.int64)
+        for bi, qi in enumerate(qidx):
+            result.candidates[int(qi)] = [
+                F.ProbeCandidate(
+                    file_path=task.file_path,
+                    row_group=task.row_group,
+                    row_offset=int(vid),
+                    approx_distance=float(dist),
+                    vec_id=int(vid),
+                    shard_id=task.tail_id,
+                )
+                for dist, vid in zip(d[bi], ids[bi])
+                if np.isfinite(dist) and vid >= 0
+            ]
+        result.kernel_dispatches = self._task_dispatches()
         result.probe_seconds = time.time() - t0
         return result
 

@@ -178,6 +178,29 @@ class BatchProbeTaskInfo(TaskBase):
 
 
 @dataclass
+class TailScanTaskInfo(TaskBase):
+    """Fresh-tail tier (appended-but-unindexed rows): ONE fragment per tail
+    row group carrying every query routed to it.  Tail rows have no graph
+    and no PQ codes, so the executor scores them with the masked exact
+    kernel — same (+inf, -1) sentinel contract as shard probes — and
+    returns a :class:`BatchProbeResult` keyed by ``tail_id`` (negative, so
+    tail candidates never collide with shard ids in the merge)."""
+
+    file_path: str = ""
+    row_group: int = 0
+    tail_id: int = -1  # synthetic plan-grid id (-1, -2, ... in tail order)
+    queries: Optional[np.ndarray] = None  # (B_sub, D)
+    query_index: Optional[np.ndarray] = None  # (B_sub,) positions in the batch
+    k: int = 10
+    oversample: int = 4
+    metric: str = "l2"
+    # row-aligned per-query predicates / planner ops (same semantics as
+    # BatchProbeTaskInfo); None list entry = unfiltered / planner default
+    filters: Optional[List[Optional[object]]] = None
+    plan_ops: Optional[List[Optional[object]]] = None
+
+
+@dataclass
 class BatchProbeResult:
     shard_id: int
     executor_id: str

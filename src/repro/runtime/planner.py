@@ -262,6 +262,26 @@ def plan_unfiltered(
     return Beam(width=k_eff)
 
 
+def plan_tail(
+    row_counts: List[int], *, k: int, oversample: int, est_frac: float = 1.0
+) -> Dict[int, PlanOp]:
+    """Plan ops for the fresh-tail tier: one op per appended-but-unindexed
+    row group, keyed by its synthetic plan-grid id (-1, -2, ... in tail
+    order — negative so tail rows never collide with shard ids).
+
+    Tail row groups have no graph and no PQ codes, so every op is an
+    :class:`ExactScan` over the row group's rows (the masked kernel path —
+    predicates ride the same bitmask input as shard scans).  ``est_frac``
+    carries the predicate's estimated passing fraction as evidence; the
+    executor still resolves against the measured match count, so a
+    zero-match tail row group collapses to :class:`Skip`."""
+    k_eff = max(1, k * oversample)
+    return {
+        -(i + 1): ExactScan(k=min(k_eff, max(1, int(n))), est_frac=est_frac)
+        for i, n in enumerate(row_counts)
+    }
+
+
 def default_filtered_op(k: int, oversample: int, use_pq: bool) -> PlanOp:
     """Fallback for tasks carrying a predicate but no coordinator op (e.g.
     hand-built tasks in tests): the mid-band mask plan, matching the old

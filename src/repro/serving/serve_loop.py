@@ -48,6 +48,11 @@ class MicroBatchStats:
     # one per scoring flavor per shard per batch, however many distinct
     # predicates the concurrent submitters carried)
     kernel_dispatches: int = 0
+    # submissions refused because the bounded queue was full (fail-fast
+    # backpressure — the caller saw queue.Full, no Future was created)
+    rejected: int = 0
+    # background fresh-tail compactions this batcher kicked off
+    compactions: int = 0
 
 
 class ProbeMicroBatcher:
@@ -79,6 +84,19 @@ class ProbeMicroBatcher:
     ``min_batch``) — deeper backlog buys more coalescing, light traffic
     keeps latency low.
 
+    ``max_queue`` bounds the submission queue: when set, a ``submit`` that
+    finds it full fails fast with :class:`queue.Full` instead of queueing
+    unboundedly (``stats.rejected`` counts the refusals) — backpressure the
+    caller can see, instead of a probe latency that silently grows with the
+    backlog.  Unset, the queue is unbounded (the legacy behavior).
+
+    ``compact_tail_over`` (with ``index_name``) turns on the background
+    fresh-tail compaction policy: when a drained batch reports at least
+    that many tail rows (appended-but-unindexed, served via the exact tail
+    tier), a daemon thread folds the tail into the Vamana shards with
+    :meth:`Coordinator.compact_tail` — serving traffic keeps flowing
+    against the stale-but-tail-served snapshot until the refresh commits.
+
     Caveat: the coordinator's per-probe I/O accounting
     (``ProbeReport.bytes_read``) resets a store-global counter, so byte
     attribution is best-effort when OTHER threads probe the same
@@ -96,6 +114,9 @@ class ProbeMicroBatcher:
         adaptive: bool = False,
         min_batch: int = 4,
         max_batch_cap: int = 512,
+        max_queue: Optional[int] = None,
+        compact_tail_over: Optional[int] = None,
+        index_name: Optional[str] = None,
         **probe_kwargs,
     ) -> None:
         self.coordinator = coordinator
@@ -106,10 +127,15 @@ class ProbeMicroBatcher:
         self.adaptive = adaptive
         self.min_batch = max(1, min_batch)
         self.max_batch_cap = max(max_batch, max_batch_cap)
+        if compact_tail_over is not None and index_name is None:
+            raise ValueError("compact_tail_over requires index_name")
+        self.compact_tail_over = compact_tail_over
+        self.index_name = index_name
         self.probe_kwargs = probe_kwargs
         self.stats = MicroBatchStats()
-        self._queue: "queue_mod.Queue" = queue_mod.Queue()
+        self._queue: "queue_mod.Queue" = queue_mod.Queue(maxsize=max_queue or 0)
         self._thread: Optional[threading.Thread] = None
+        self._compact_thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
 
     # -- lifecycle --------------------------------------------------------
@@ -125,6 +151,9 @@ class ProbeMicroBatcher:
             self._stop.set()
             self._thread.join(timeout=5.0)
             self._thread = None
+        if self._compact_thread is not None:
+            self._compact_thread.join(timeout=30.0)
+            self._compact_thread = None
         # requests enqueued before stop() but never drained must not strand
         # their waiters — fail them loudly
         while True:
@@ -145,11 +174,21 @@ class ProbeMicroBatcher:
     def submit(self, query, k: int = 10, filter=None) -> Future:
         """Enqueue one query; the Future resolves to its ProbeHit list.
         ``filter`` (a Predicate or SQL WHERE fragment) makes it a filtered
-        probe — it shares the batch with unfiltered submissions."""
+        probe — it shares the batch with unfiltered submissions.
+
+        With ``max_queue`` set, a full queue raises :class:`queue.Full`
+        immediately (fail-fast backpressure; counted in
+        ``stats.rejected``) instead of blocking or queueing unboundedly."""
         if self._thread is None:
             raise RuntimeError("micro-batcher is not running (call start())")
         fut: Future = Future()
-        self._queue.put((np.asarray(query, np.float32).reshape(-1), k, filter, fut))
+        try:
+            self._queue.put_nowait(
+                (np.asarray(query, np.float32).reshape(-1), k, filter, fut)
+            )
+        except queue_mod.Full:
+            self.stats.rejected += 1
+            raise
         return fut
 
     def probe_many(self, queries, k: int = 10, filter=None) -> List[list]:
@@ -223,6 +262,30 @@ class ProbeMicroBatcher:
             self.stats.max_batch_seen = max(self.stats.max_batch_seen, len(items))
             for f, hits in zip(futures, report.hits):
                 f.set_result(hits)
+            self._maybe_compact(report)
+
+    def _maybe_compact(self, report) -> None:
+        """Background fresh-tail compaction: when a drained batch served at
+        least ``compact_tail_over`` tail rows, fold the tail into the graph
+        shards off the serving path.  At most one compaction runs at a
+        time; the refresh commit resets the tail, so the trigger naturally
+        disarms until enough new appends accumulate."""
+        if self.compact_tail_over is None:
+            return
+        if report.tail_rows < self.compact_tail_over:
+            return
+        if self._compact_thread is not None and self._compact_thread.is_alive():
+            return
+        self.stats.compactions += 1
+        self._compact_thread = threading.Thread(
+            target=lambda: self.coordinator.compact_tail(
+                self.table_name,
+                self.index_name,
+                threshold_rows=self.compact_tail_over,
+            ),
+            daemon=True,
+        )
+        self._compact_thread.start()
 
 
 @dataclass

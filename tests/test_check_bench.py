@@ -61,6 +61,17 @@ def _clean_doc():
                 "distinct_filters": 8,
                 "parity_ok": True,
             },
+            "table2.freshness": {
+                "throughput_qps": 70.0,
+                "recall": 0.98,
+                "recall_without_tail": 0.48,
+                "tail_rows": 128,
+                "tail_row_groups": 1,
+                "tail_plan_ops": 1,
+                "unindexed_rows": 0,
+                "stale": True,
+                "oracle_qps": 350.0,
+            },
         },
     }
 
@@ -319,6 +330,60 @@ def test_hetero_gates_on_speedup_ratio_not_wall_clock():
         "table2.filtered_hetero" in f and "not above the per-predicate-group" in f
         for f in failures
     )
+
+
+# ---------------------------------------------------------------------------
+# freshness row gates (the fresh-tail tier's stale-read window)
+# ---------------------------------------------------------------------------
+
+
+def test_freshness_absolute_gates():
+    """The stale-read acceptance gates: recall below the floor with a tail
+    present, silently-dropped unindexed rows, and a plan that does not
+    carry one op per tail row group each fail without any baseline."""
+    cur = _clean_doc()
+    f = cur["rows"]["table2.freshness"]
+    f["recall"] = 0.48  # the pre-fix silent-drop recall
+    f["unindexed_rows"] = 128
+    f["tail_plan_ops"] = 0
+    failures = check_bench.check(cur, None)
+    assert any(
+        "table2.freshness" in x and "recall vs the fresh scan oracle" in x
+        for x in failures
+    )
+    assert any("silently dropped" in x for x in failures)
+    assert any("one-ExactScan-per-tail-row-group" in x for x in failures)
+
+
+def test_freshness_gate_requires_a_tail():
+    """A freshness row measured with no unindexed tail present gates
+    nothing — the run must fail rather than pass vacuously."""
+    cur = _clean_doc()
+    cur["rows"]["table2.freshness"]["tail_rows"] = 0
+    failures = check_bench.check(cur, None)
+    assert any("exercised nothing" in x for x in failures)
+    cur = _clean_doc()
+    cur["rows"]["table2.freshness"]["stale"] = False
+    failures = check_bench.check(cur, None)
+    assert any("exercised nothing" in x for x in failures)
+
+
+def test_freshness_recall_drop_vs_baseline_fails():
+    base = _clean_doc()
+    cur = copy.deepcopy(base)
+    cur["rows"]["table2.freshness"]["recall"] = 0.97  # above floor, below base
+    failures = check_bench.check(cur, base)
+    assert any("table2.freshness" in x and "recall" in x for x in failures)
+
+
+def test_freshness_cli_doctored_json(tmp_path):
+    base = _clean_doc()
+    cur = copy.deepcopy(base)
+    cur["rows"]["table2.freshness"]["unindexed_rows"] = 64
+    cur_p, base_p = tmp_path / "cur.json", tmp_path / "base.json"
+    cur_p.write_text(json.dumps(cur))
+    base_p.write_text(json.dumps(base))
+    assert check_bench.main([str(cur_p), "--baseline", str(base_p)]) == 1
 
 
 # ---------------------------------------------------------------------------

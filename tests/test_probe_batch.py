@@ -190,3 +190,90 @@ def test_micro_batcher_adaptive_sizing():
             assert f.result(timeout=5.0) == []
     assert mb2.stats.grows >= 1
     assert mb2.max_batch > 4
+
+
+def test_micro_batcher_bounded_queue_fails_fast():
+    """max_queue backpressure: a submit that finds the queue full raises
+    queue.Full immediately (counted in stats.rejected) instead of growing
+    the backlog — probes already queued are unaffected."""
+    import queue as queue_mod
+    import threading
+
+    from repro.runtime.coordinator import ProbeReport
+
+    gate = threading.Event()
+    entered = threading.Event()
+
+    class _SlowCoordinator:
+        def probe_batch(self, table, queries, k, **kw):
+            entered.set()
+            gate.wait(timeout=5.0)
+            return ProbeReport(
+                hits=[[] for _ in range(queries.shape[0])],
+                strategy="stub", files_scanned=0, bytes_read=0,
+            )
+
+    mb = ProbeMicroBatcher(
+        _SlowCoordinator(), "t", max_batch=1, max_wait_s=0.0, max_queue=2,
+    )
+    q = np.zeros(4, np.float32)
+    with mb:
+        f0 = mb.submit(q, k=5)          # drained, blocks inside probe_batch
+        assert entered.wait(timeout=5.0)
+        f1, f2 = mb.submit(q, k=5), mb.submit(q, k=5)  # fill the queue
+        with pytest.raises(queue_mod.Full):
+            mb.submit(q, k=5)
+        assert mb.stats.rejected == 1
+        gate.set()
+        for f in (f0, f1, f2):
+            assert f.result(timeout=5.0) == []
+    assert mb.stats.queries == 3        # the rejected probe never ran
+
+
+def test_micro_batcher_background_tail_compaction():
+    """compact_tail_over: a drained batch reporting that many tail rows
+    kicks off exactly one background Coordinator.compact_tail, off the
+    serving path; below the threshold nothing happens."""
+    import threading
+
+    from repro.runtime.coordinator import ProbeReport
+
+    compacted = threading.Event()
+
+    class _TailCoordinator:
+        def __init__(self, tail_rows):
+            self.tail_rows = tail_rows
+            self.calls = []
+
+        def probe_batch(self, table, queries, k, **kw):
+            return ProbeReport(
+                hits=[[] for _ in range(queries.shape[0])],
+                strategy="stub", files_scanned=0, bytes_read=0,
+                tail_rows=self.tail_rows,
+            )
+
+        def compact_tail(self, table, index, *, threshold_rows):
+            self.calls.append((table, index, threshold_rows))
+            compacted.set()
+
+    q = np.zeros(4, np.float32)
+    coord = _TailCoordinator(tail_rows=128)
+    with ProbeMicroBatcher(
+        coord, "t", max_wait_s=0.01, compact_tail_over=100, index_name="idx"
+    ) as mb:
+        assert mb.submit(q, k=5).result(timeout=5.0) == []
+        assert compacted.wait(timeout=5.0)
+    assert coord.calls == [("t", "idx", 100)]
+    assert mb.stats.compactions == 1
+
+    # below the threshold the policy stays quiet
+    coord2 = _TailCoordinator(tail_rows=10)
+    with ProbeMicroBatcher(
+        coord2, "t", max_wait_s=0.01, compact_tail_over=100, index_name="idx"
+    ) as mb2:
+        assert mb2.submit(q, k=5).result(timeout=5.0) == []
+    assert coord2.calls == [] and mb2.stats.compactions == 0
+
+    # the policy needs to know which index to fold into
+    with pytest.raises(ValueError):
+        ProbeMicroBatcher(coord, "t", compact_tail_over=100)
