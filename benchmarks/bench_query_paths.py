@@ -10,6 +10,11 @@ per-query sequential probes against one ``probe_batch`` over the same
 queries: the batch shares ≤ one shard fragment per shard and one rerank
 wave, so its throughput must come out strictly higher.
 
+The ``table2.overload`` row drives the multi-tenant serving tier at ~2x
+measured capacity with two tenants (one abusive): admission control must
+make the abuser absorb the rejections while the well-behaved tenant keeps
+a >= 0.9 deadline hit-rate and the bounded queue holds.
+
 ``--tiny`` shrinks everything to a seconds-scale smoke run (used by
 scripts/ci.sh to catch query-path regressions).
 
@@ -530,6 +535,124 @@ def main(tiny: bool = False, json_path: str = "BENCH_query_paths.json") -> None:
         "unindexed_rows": pr_t.unindexed_rows,
         "stale": bool(pr_t.stale),
         "oracle_qps": len(Qf) / oracle_fs,
+    }
+
+    # ---- overload: two tenants at ~2x capacity, one abusive ------------
+    # The serving tier's admission-control contract: with offered load about
+    # twice what the cluster can serve, an ABUSIVE tenant (flooding far past
+    # its token-bucket rate) must absorb the rejections while the
+    # well-behaved tenant keeps a >= 0.9 deadline hit-rate and the bounded
+    # submission queue never grows past its cap.
+    import queue as queue_mod
+    import threading
+
+    from repro.serving.admission import AdmissionRejected, TenantPolicy
+    from repro.serving.serve_loop import ProbeMicroBatcher
+
+    batch_s, _ = _best_of(
+        lambda: c.coordinator.probe_batch("bench", Q, 10, strategy="diskann")
+    )
+    capacity_qps = n_q / batch_s  # warm micro-batch service rate
+    well_qps = 0.25 * capacity_qps
+    abusive_qps = 1.75 * capacity_qps  # offered, mostly refused at the door
+    duration_s = 2.0
+    max_queue = 64
+    deadline_ms = max(1000.0, 20.0 * batch_s * 1e3)
+    counts = {
+        "well_attempts": 0, "well_full": 0,
+        "abusive_attempts": 0, "abusive_admitted": 0, "abusive_rejected": 0,
+    }
+    well_futs: list = []
+    peak_q = [0]
+    with ProbeMicroBatcher(
+        c.coordinator,
+        "bench",
+        strategy="diskann",
+        max_batch=max(8, n_q),
+        max_wait_s=0.002,
+        max_queue=max_queue,
+        tenant_policies={
+            # the abuser's budget: ~25% of capacity, everything past it
+            # bounces off its own bucket instead of the shared queue
+            "abusive": TenantPolicy(rate_qps=0.25 * capacity_qps, burst=8.0),
+        },
+    ) as mb:
+        stop_at = time.perf_counter() + duration_s
+
+        def flood():
+            # absolute schedule: sleep-to-next-tick, so the OFFERED rate
+            # holds even when sleep() overshoots at millisecond intervals
+            next_t = time.perf_counter()
+            while time.perf_counter() < stop_at:
+                counts["abusive_attempts"] += 1
+                try:
+                    mb.submit(
+                        Q[counts["abusive_attempts"] % n_q], 10,
+                        tenant="abusive", deadline_ms=deadline_ms,
+                    )
+                    counts["abusive_admitted"] += 1
+                except (AdmissionRejected, queue_mod.Full):
+                    counts["abusive_rejected"] += 1
+                next_t += 1.0 / abusive_qps
+                delay = next_t - time.perf_counter()
+                if delay > 0:
+                    time.sleep(delay)
+
+        flooder = threading.Thread(target=flood)
+        flooder.start()
+        next_t = time.perf_counter()
+        while time.perf_counter() < stop_at:
+            counts["well_attempts"] += 1
+            try:
+                well_futs.append(mb.submit(
+                    Q[counts["well_attempts"] % n_q], 10,
+                    tenant="well", deadline_ms=deadline_ms,
+                ))
+            except (AdmissionRejected, queue_mod.Full):
+                counts["well_full"] += 1
+            peak_q[0] = max(peak_q[0], mb._queue.qsize())
+            next_t += 1.0 / well_qps
+            delay = next_t - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+        flooder.join()
+        well_served = 0
+        for f in well_futs:
+            try:
+                f.result(timeout=30)
+                well_served += 1
+            except Exception:
+                pass
+        served_total = mb.stats.queries
+        deadline_misses = mb.stats.deadline_misses
+        degraded_batches = mb.stats.degraded_batches
+    offered_qps = (counts["well_attempts"] + counts["abusive_attempts"]) / duration_s
+    well_hit_rate = well_served / max(1, counts["well_attempts"])
+    well_rejected = counts["well_full"] + (len(well_futs) - well_served)
+    queue_bounded = peak_q[0] <= max_queue
+    emit(
+        "table2.overload",
+        duration_s / max(1, served_total) * 1e6,
+        f"capacity_{capacity_qps:.0f}qps_offered_{offered_qps:.0f}qps"
+        f"_x{offered_qps / capacity_qps:.1f}_well_hit_{well_hit_rate:.2f}"
+        f"_abusive_rej_{counts['abusive_rejected']}"
+        f"_deadline_misses_{deadline_misses}_peak_queue_{peak_q[0]}",
+    )
+    rows["table2.overload"] = {
+        "throughput_qps": served_total / duration_s,
+        "capacity_qps": capacity_qps,
+        "offered_qps": offered_qps,
+        "overload_factor": offered_qps / capacity_qps,
+        "well_hit_rate": well_hit_rate,
+        "well_attempts": counts["well_attempts"],
+        "well_served": well_served,
+        "well_rejected": well_rejected,
+        "abusive_attempts": counts["abusive_attempts"],
+        "abusive_admitted": counts["abusive_admitted"],
+        "abusive_rejected": counts["abusive_rejected"],
+        "deadline_misses": deadline_misses,
+        "degraded_batches": degraded_batches,
+        "queue_bounded": queue_bounded,
     }
 
     if json_path:

@@ -40,6 +40,13 @@ Absolute gates (hold regardless of any baseline):
     silently-dropped rows (``unindexed_rows == 0`` — the stale-read
     window the fresh-tail tier closes), and exactly one plan op per
     unindexed row group (``tail_plan_ops == tail_row_groups``).
+  - ``table2.overload`` (two tenants at ~2x serving capacity, one abusive):
+    offered load actually over capacity (``overload_factor >= 1.5``), the
+    well-behaved tenant's deadline hit-rate >= 0.9, the ABUSIVE tenant
+    absorbing the rejections (``abusive_rejected > well_rejected``), and
+    the submission queue staying bounded (``queue_bounded``) — the
+    serving tier's admission-control contract.  Never wall-clock gated:
+    the row's qps rides the scheduler like every other table2 row.
 
 Baseline gates (vs the committed baseline, benchmarks/baselines/):
   - a THROUGHPUT-GATED row's ``throughput_qps`` dropping more than
@@ -248,6 +255,33 @@ def check(
                 f"{fresh.get('tail_plan_ops')} tail ops for "
                 f"{fresh.get('tail_row_groups')} unindexed row groups — the "
                 "one-ExactScan-per-tail-row-group contract broke"
+            )
+
+    overload = rows.get("table2.overload")
+    if overload is not None:
+        if overload.get("overload_factor", 0.0) < 1.5:
+            failures.append(
+                f"table2.overload: offered load was only "
+                f"{overload.get('overload_factor', 0.0):.2f}x capacity — the "
+                "bench did not actually overload the serving tier"
+            )
+        if overload.get("well_hit_rate", 0.0) < 0.9:
+            failures.append(
+                f"table2.overload: well-behaved tenant deadline hit-rate "
+                f"{overload.get('well_hit_rate', 0.0):.2f} < 0.9 under an "
+                "abusive co-tenant — admission control is not isolating tenants"
+            )
+        if overload.get("abusive_rejected", 0) <= overload.get("well_rejected", 0):
+            failures.append(
+                f"table2.overload: the abusive tenant absorbed "
+                f"{overload.get('abusive_rejected', 0)} rejections vs the "
+                f"well-behaved tenant's {overload.get('well_rejected', 0)} — "
+                "the wrong tenant is paying for the overload"
+            )
+        if not overload.get("queue_bounded", False):
+            failures.append(
+                "table2.overload: the submission queue exceeded its bound "
+                "under overload — backpressure is not holding"
             )
 
     for name in sorted(base_rows):

@@ -16,6 +16,13 @@
 #             including the masked ops' and the multi-mask (Q, N)-plane
 #             ops' edge cases), then the full tier-1 suite (pytest -x -q,
 #             slow cases deselected per pytest.ini).
+#   --chaos   serving-tier failover suite (pytest -m chaos): kill an
+#             executor mid-wave (heartbeat-dead while HOLDING fragments)
+#             and between waves, and prove zero queries are lost — results
+#             at exact parity with a healthy run via lease re-dispatch.
+#             The cases also run inside --tier1 (they are not slow-marked);
+#             this stage re-runs them in isolation so failover regressions
+#             get their own red CI job instead of hiding in the suite.
 #   --bench   benchmark smoke + regression gate, TWO bench records:
 #               bench_query_paths --tiny  -> BENCH_query_paths.json
 #               bench_kernels             -> BENCH_kernels.json
@@ -61,17 +68,19 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 run_lint=false
 run_tier1=false
+run_chaos=false
 run_bench=false
 if [ "$#" -eq 0 ]; then
-  run_lint=true; run_tier1=true; run_bench=true
+  run_lint=true; run_tier1=true; run_chaos=true; run_bench=true
 fi
 for arg in "$@"; do
   case "$arg" in
     --lint)  run_lint=true ;;
     --tier1) run_tier1=true ;;
+    --chaos) run_chaos=true ;;
     --bench) run_bench=true ;;
-    --all)   run_lint=true; run_tier1=true; run_bench=true ;;
-    *) echo "usage: $0 [--lint] [--tier1] [--bench] [--all]" >&2; exit 2 ;;
+    --all)   run_lint=true; run_tier1=true; run_chaos=true; run_bench=true ;;
+    *) echo "usage: $0 [--lint] [--tier1] [--chaos] [--bench] [--all]" >&2; exit 2 ;;
   esac
 done
 
@@ -99,6 +108,11 @@ if $run_tier1; then
   python -m pytest -q -m "kernels and not slow"
   echo "== tier-1: full suite =="
   python -m pytest -x -q
+fi
+
+if $run_chaos; then
+  echo "== chaos: executor failover (kill mid-wave, zero queries lost) =="
+  python -m pytest -q -m chaos
 fi
 
 if $run_bench; then

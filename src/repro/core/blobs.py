@@ -36,7 +36,7 @@ from __future__ import annotations
 import io
 import json
 import struct
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -427,17 +427,72 @@ class AttrZoneMap:
     columns: Dict[str, str]  # column name -> "int" | "dict"
     zones: Dict[str, List[Dict[str, "ZoneStats"]]]
     shard_membership: Optional[Dict[int, List[Tuple[str, int]]]] = None
+    # shard-level merged histograms (computed on demand from the decoded
+    # file-level histograms, memoized per shard)
+    _shard_hist_cache: Dict[int, Dict[str, object]] = field(
+        default_factory=dict, repr=False, compare=False
+    )
+
+    def _shard_hists(self, shard_id: int) -> Dict[str, object]:
+        """Per-column histograms merged across the shard's member FILES.
+
+        A shard typically indexes rows from several files; estimating a
+        Range predicate's passing fraction against each row group's
+        file-level histogram lets one file's distribution stand in for the
+        shard's.  Merging the distinct member files' histograms (re-binned
+        over the union range) gives ``plan_filtered`` shard-level evidence
+        instead.  Shards spanning a single file keep the file histogram
+        bit-for-bit.  Cached per shard; the merged histogram is in-memory
+        only, never serialized."""
+        cached = self._shard_hist_cache.get(shard_id)
+        if cached is not None:
+            return cached
+        from repro.runtime.predicates import ColumnHistogram
+
+        per_col: Dict[str, List[object]] = {}
+        seen: Dict[str, set] = {}
+        files = sorted({fp for fp, _ in self.shard_membership[shard_id]})
+        for fp in files:
+            for rg in self.zones.get(fp, []):
+                for col, z in rg.items():
+                    if z.hist is not None and col not in seen.setdefault(fp, set()):
+                        seen[fp].add(col)
+                        per_col.setdefault(col, []).append(z.hist)
+        merged = {
+            col: ColumnHistogram.merge(hists)
+            for col, hists in per_col.items()
+            if len(hists) > 1
+        }
+        merged = {col: h for col, h in merged.items() if h is not None}
+        self._shard_hist_cache[shard_id] = merged
+        return merged
 
     def shard_zones(self, shard_id: int) -> Optional[List[Dict[str, "ZoneStats"]]]:
-        """The member zones of one shard (None = membership unknown)."""
+        """The member zones of one shard (None = membership unknown), with
+        each zone's histogram upgraded from file-level to the shard-level
+        merge (see :meth:`_shard_hists`) so selectivity estimates reflect
+        every file the shard indexed."""
         if self.shard_membership is None or shard_id not in self.shard_membership:
             return None
+        from dataclasses import replace as _replace
+
+        shard_hists = self._shard_hists(shard_id)
         out = []
         for fp, rg in self.shard_membership[shard_id]:
             per_file = self.zones.get(fp)
             if per_file is None or rg >= len(per_file):
                 return None  # stale membership: never prune on partial info
-            out.append(per_file[rg])
+            entry = per_file[rg]
+            if shard_hists:
+                entry = {
+                    col: (
+                        _replace(z, hist=shard_hists[col])
+                        if z.hist is not None and col in shard_hists
+                        else z
+                    )
+                    for col, z in entry.items()
+                }
+            out.append(entry)
         return out
 
 

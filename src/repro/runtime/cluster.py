@@ -50,6 +50,7 @@ def make_local_cluster(
     *,
     enable_speculation: bool = False,
     max_attempts: int = 4,
+    lease_ttl: float | None = None,
 ) -> LocalCluster:
     store = ObjectStore(os.path.join(root, "s3"))
     catalog = RestCatalog(store)
@@ -61,6 +62,10 @@ def make_local_cluster(
     coordinator = Coordinator(
         catalog, pool, enable_speculation=enable_speculation, max_attempts=max_attempts
     )
+    if lease_ttl is not None:
+        # chaos / failover tests shrink the shard-lease TTL so a silent
+        # executor ages out of its leases within the test's patience
+        coordinator.scheduler.leases.ttl = float(lease_ttl)
     return LocalCluster(
         root=root,
         store=store,

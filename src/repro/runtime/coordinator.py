@@ -76,6 +76,7 @@ from repro.runtime import planner
 from repro.runtime.planner import PlanOp, ProbePlan
 from repro.runtime.predicates import Predicate, parse_predicate, row_group_mask
 from repro.runtime.scheduler import ExecutorPool, Scheduler
+from repro.serving.metrics import MetricsRegistry
 
 TOMBSTONE_REBUILD_THRESHOLD = 0.20  # paper §7.3
 
@@ -184,6 +185,15 @@ class ProbeReport:
     # the probed snapshot serves a stale index binding (an append/delete
     # landed after the index was built and no refresh has committed since)
     stale: bool = False
+    # serving-tier trail: which executor served each fragment of this probe
+    # ("probe:<shard>@<executor>" for Stage A / tail fragments,
+    # "rerank@<executor>" for Stage B) — the audit trail for lease failover
+    served_by: List[str] = field(default_factory=list)
+    # degradation labels the serving tier applied before issuing this probe
+    # (e.g. "shrink_k(x0.5)", "skip_tail"); empty = full-quality answer.
+    # The coordinator never sets this — the micro-batcher stamps it so
+    # degraded answers are labeled, not silent.
+    degraded: Tuple[str, ...] = ()
 
 
 @dataclass
@@ -208,12 +218,19 @@ class Coordinator:
         *,
         enable_speculation: bool = False,
         max_attempts: int = 4,
+        metrics: Optional["MetricsRegistry"] = None,
     ) -> None:
         self.catalog = catalog
         self.store = catalog.store
         self.pool = pool
+        # one serving-tier metrics registry shared with the scheduler and
+        # its lease table: counters for re-dispatches, lease grants/expiries
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.scheduler = Scheduler(
-            pool, enable_speculation=enable_speculation, max_attempts=max_attempts
+            pool,
+            enable_speculation=enable_speculation,
+            max_attempts=max_attempts,
+            metrics=self.metrics,
         )
         # decoded attribute zone maps, keyed by (immutable) puffin path —
         # filtered probes on the serving path must not re-decode the blob
@@ -820,6 +837,8 @@ class Coordinator:
         n_route: Optional[int] = None,
         filter: Optional[object] = None,
         include_tail: bool = True,
+        oversample: Optional[int] = None,
+        replay_plan: Optional[ProbePlan] = None,
     ) -> ProbeReport:
         """Batched vector top-k over ``queries (B, dim)``.
 
@@ -832,12 +851,27 @@ class Coordinator:
         independent).  ``n_route`` optionally restricts each query to the
         shards owning its ``n_route`` nearest partitions (recall dial; the
         default probes every shard, preserving exact parity with ``probe``).
-        """
+
+        ``oversample`` overrides the index's configured Stage-B rerank
+        multiplier for this probe (the serving tier's DropOversample
+        degradation step); ``None`` keeps the routing-table value.
+
+        ``replay_plan`` replays a previously planned (possibly deserialized
+        — ``ProbePlan.from_json``) per-(query, shard) op grid: the
+        coordinator skips selectivity estimation and plan construction
+        entirely and dispatches the plan's ops as-is.  The caller must pass
+        the same ``filter`` the plan was built under (executors still need
+        the predicates to build row masks); fresh-tail ops are re-planned
+        against the CURRENT tail, since the tail may have grown or been
+        compacted since the plan was captured.  Only the diskann strategy
+        is plannable."""
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         B = queries.shape[0]
         preds = self._coerce_filters_batch(filter, B)
         self.store.metrics.reset()
         table = LakehouseTable(self.catalog, table_name)
+        if replay_plan is not None and strategy in ("scan", "centroid"):
+            raise ValueError(f"replay_plan is not supported for strategy={strategy!r}")
         if strategy == "scan":
             if preds is None or len(set(preds)) == 1:
                 report = self._probe_scan(
@@ -859,6 +893,8 @@ class Coordinator:
         routing = decode_routing_blob(reader.read_first(ROUTING_BLOB_TYPE))
         shard_blobs = reader.blobs_of_type(SHARD_BLOB_TYPE)
         strategy = self._choose_strategy(strategy, routing, shard_blobs)
+        if replay_plan is not None and strategy != "diskann":
+            raise ValueError(f"replay_plan is not supported for strategy={strategy!r}")
         if strategy == "centroid":
             if preds is None or len(set(preds)) == 1:
                 report = self._probe_centroid_batch(
@@ -889,8 +925,14 @@ class Coordinator:
                 L=L,
                 n_route=n_route,
                 preds=preds,
-                zonemap=self._read_zonemap(reader, puffin_path) if preds else None,
+                zonemap=(
+                    self._read_zonemap(reader, puffin_path)
+                    if preds and replay_plan is None
+                    else None
+                ),
                 tail=tail,
+                oversample_override=oversample,
+                replay_plan=replay_plan,
             )
         self._apply_tail_report(report, snap, full_tail, served=tail is not None)
         report.batch_size = B
@@ -1181,6 +1223,9 @@ class Coordinator:
         }
         report = self._rerank_and_merge(table, masks_l, queries, k, routing.metric)
         report.strategy = "diskann"
+        report.served_by = [
+            f"probe:{r.shard_id}@{r.executor_id}" for r in results
+        ] + report.served_by
         report.files_scanned = len(masks_l)
         report.stage_a_seconds = stage_a
         report.stage_b_seconds = time.time() - t1 - report.stage_c_seconds
@@ -1282,6 +1327,8 @@ class Coordinator:
         preds: Optional[List[Optional[Predicate]]] = None,
         zonemap: Optional[AttrZoneMap] = None,
         tail: Optional[FreshTail] = None,
+        oversample_override: Optional[int] = None,
+        replay_plan: Optional[ProbePlan] = None,
     ) -> ProbeReport:
         """Batched three-stage distributed probe.
 
@@ -1294,8 +1341,31 @@ class Coordinator:
         ``preds`` carries per-query predicates (None entries = unfiltered
         query).  Filtered and unfiltered queries share coalesced fragments;
         the zone map drops a (query, shard) fragment before dispatch when no
-        member row group of that shard can match the query's predicate."""
-        oversample = int(routing.params.get("oversample", "4"))
+        member row group of that shard can match the query's predicate.
+
+        With ``replay_plan`` the per-(query, shard) ops come from the
+        caller's plan verbatim (planning is skipped entirely); tail ops
+        (negative synthetic ids) are ignored and re-planned fresh."""
+        if replay_plan is not None:
+            if replay_plan.k != k:
+                raise ValueError(
+                    f"replay plan was built for k={replay_plan.k}, got k={k}"
+                )
+            if len(replay_plan.ops) != queries.shape[0]:
+                raise ValueError(
+                    f"replay plan covers {len(replay_plan.ops)} queries, "
+                    f"got {queries.shape[0]}"
+                )
+            oversample = (
+                replay_plan.oversample
+                if oversample_override is None
+                else oversample_override
+            )
+            use_pq = replay_plan.use_pq
+        elif oversample_override is not None:
+            oversample = max(1, int(oversample_override))
+        else:
+            oversample = int(routing.params.get("oversample", "4"))
         if use_pq is None:
             use_pq = int(routing.params.get("pq_m", "0")) > 0
         L_eff = L or int(routing.params.get("L", "100"))
@@ -1304,9 +1374,16 @@ class Coordinator:
         blob_by_index = dict(enumerate(reader.blobs))
         route = self._route_queries(routing, queries, n_route)
         B = queries.shape[0]
+        # replay: the op grid is taken as-is (shard ops only — synthetic
+        # negative tail ids are dropped; the tail is re-planned below)
+        replay_ops: List[Dict[int, PlanOp]] = (
+            [{sid: op for sid, op in row.items() if sid >= 0} for row in replay_plan.ops]
+            if replay_plan is not None
+            else []
+        )
         # one plan per distinct predicate; shared across its queries
         plans: Dict[Predicate, Tuple[Dict[int, PlanOp], List[int], float]] = {}
-        if preds:
+        if preds and replay_plan is None:
             for p in preds:
                 if p is not None and p not in plans:
                     plans[p] = planner.plan_filtered(
@@ -1320,15 +1397,16 @@ class Coordinator:
         # old uncapped O(N·D) all-ones scan.
         shard_filtered: Dict[int, bool] = {}
         shard_unfiltered: Dict[int, bool] = {}
-        for s in routing.shards:
-            for qi in range(B):
-                if s.shard_id not in route[qi]:
-                    continue
-                pred = preds[qi] if preds else None
-                if pred is None:
-                    shard_unfiltered[s.shard_id] = True
-                elif s.shard_id in plans[pred][0]:
-                    shard_filtered[s.shard_id] = True
+        if replay_plan is None:
+            for s in routing.shards:
+                for qi in range(B):
+                    if s.shard_id not in route[qi]:
+                        continue
+                    pred = preds[qi] if preds else None
+                    if pred is None:
+                        shard_unfiltered[s.shard_id] = True
+                    elif s.shard_id in plans[pred][0]:
+                        shard_filtered[s.shard_id] = True
         fragments_pruned = 0
         ops_grid: List[Dict[int, PlanOp]] = [dict() for _ in range(B)]
         tasks: List[F.BatchProbeTaskInfo] = []
@@ -1342,7 +1420,13 @@ class Coordinator:
                     continue
                 pred = preds[qi] if preds else None
                 op: Optional[PlanOp] = None
-                if pred is not None:
+                if replay_plan is not None:
+                    op = replay_ops[qi].get(s.shard_id)
+                    if isinstance(op, planner.Skip):
+                        fragments_pruned += 1
+                        ops_grid[qi][s.shard_id] = op
+                        continue  # the replayed plan pruned this fragment
+                elif pred is not None:
                     shard_ops, _pruned, _frac = plans[pred]
                     if s.shard_id not in shard_ops:
                         fragments_pruned += 1
@@ -1432,6 +1516,9 @@ class Coordinator:
             table, masks_l, queries, k, routing.metric, row_owners=row_owners
         )
         report.strategy = "diskann"
+        report.served_by = [
+            f"probe:{r.shard_id}@{r.executor_id}" for r in results
+        ] + report.served_by
         report.files_scanned = len(masks_l)
         report.stage_a_seconds = stage_a
         report.stage_b_seconds = time.time() - t1 - report.stage_c_seconds
@@ -1452,7 +1539,14 @@ class Coordinator:
             report.est_selectivity = float(
                 np.mean([frac for _, _, frac in plans.values()])
             )
-        if plans or tail_tasks:
+        elif replay_plan is not None:
+            report.filtered = bool(preds)
+            all_pruned = set(replay_plan.pruned_shards)
+            report.shards_pruned = len(all_pruned)
+            report.fragments_pruned = fragments_pruned
+            report.filter_plan = "replay"
+            report.est_selectivity = replay_plan.est_selectivity
+        if plans or tail_tasks or replay_plan is not None:
             report.plan = ProbePlan(
                 k=k,
                 oversample=oversample,
@@ -1525,6 +1619,7 @@ class Coordinator:
             files_scanned=0,
             bytes_read=0,
             stage_c_seconds=stage_c,
+            served_by=[f"rerank@{r.executor_id}" for r in results],
         )
 
     # ------------------------------------------------------------------ refresh

@@ -137,6 +137,8 @@ class Executor:
         self.dead = False
         self._fail_budget = 0
         self._delay_next = 0.0
+        self._kill_mid_task = 0
+        self._kill_hold_s = 0.0
         # metrics
         self.tasks_done = 0
         self.cache_hits = 0
@@ -158,12 +160,24 @@ class Executor:
 
     def revive(self) -> None:
         self.dead = False
+        self._kill_mid_task = 0  # disarm any unspent chaos budget
 
     def fail_next(self, count: int = 1) -> None:
         self._fail_budget = count
 
     def delay_next(self, seconds: float) -> None:
         self._delay_next = seconds
+
+    def kill_next(self, count: int = 1, *, hold_s: float = 0.0) -> None:
+        """Chaos hook: die while HOLDING the next ``count`` accepted tasks.
+
+        Unlike ``kill()`` (dead before the next task is even accepted) the
+        executor passes the gate, goes heartbeat-dead mid-task — holding the
+        fragment for ``hold_s`` so the scheduler's lease monitor can observe
+        the death — and then loses the result (``ExecutorDead``).  This is
+        the mid-wave failure the lease re-dispatch path exists for."""
+        self._kill_mid_task = count
+        self._kill_hold_s = hold_s
 
     def _gate(self) -> None:
         if self.dead:
@@ -606,6 +620,12 @@ class Executor:
     # -- dispatch ------------------------------------------------------------
     def handle(self, task) -> object:
         self._gate()
+        if self._kill_mid_task > 0:
+            self._kill_mid_task -= 1
+            self.dead = True  # heartbeat goes dark while the task is held
+            if self._kill_hold_s > 0:
+                time.sleep(self._kill_hold_s)
+            raise ExecutorDead(self.executor_id)
         if isinstance(task, F.ScanPartitionTaskInfo):
             result = self._scan_partition(task)
         elif isinstance(task, F.IndexBuildTaskInfo):

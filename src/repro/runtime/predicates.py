@@ -91,6 +91,40 @@ class ColumnHistogram:
         counts, _edges = np.histogram(arr, bins=bins, range=(lo, hi + 1.0))
         return ColumnHistogram(lo=lo, hi=hi, counts=tuple(int(c) for c in counts))
 
+    @staticmethod
+    def merge(
+        hists: List["ColumnHistogram"], bins: int = 16
+    ) -> Optional["ColumnHistogram"]:
+        """Merge several (file-level) histograms into one equi-width
+        histogram over the union range, distributing each source bin's mass
+        into the overlapped target bins proportionally.  Counts may come
+        out fractional — the merged histogram is an in-memory estimation
+        aid (shard-level selectivity evidence), never serialized."""
+        hists = [h for h in hists if h is not None and h.total > 0]
+        if not hists:
+            return None
+        if len(hists) == 1:
+            return hists[0]
+        lo = min(h.lo for h in hists)
+        hi = max(h.hi for h in hists)
+        width = (hi + 1.0 - lo) / bins
+        counts = [0.0] * bins
+        for h in hists:
+            src_w = (h.hi + 1.0 - h.lo) / len(h.counts)
+            for b, c in enumerate(h.counts):
+                if not c:
+                    continue
+                b_lo = h.lo + b * src_w
+                b_hi = b_lo + src_w
+                t0 = max(0, int((b_lo - lo) / width))
+                t1 = min(bins - 1, int((b_hi - lo - 1e-9) / width))
+                for t in range(t0, t1 + 1):
+                    tb_lo = lo + t * width
+                    overlap = min(b_hi, tb_lo + width) - max(b_lo, tb_lo)
+                    if overlap > 0:
+                        counts[t] += c * (overlap / src_w)
+        return ColumnHistogram(lo=lo, hi=hi, counts=tuple(counts))
+
 
 @dataclass(frozen=True)
 class ZoneStats:

@@ -15,6 +15,15 @@ Responsibilities (DESIGN.md §6):
   wins, the loser's (identical) output is harmlessly overwritten / orphaned.
 - **Elasticity** — executors can be added/removed between (or during)
   waves; the dispatch loop only consults the live set.
+- **Leased placement** — shard→executor affinity is explicit, expiring
+  state in a :class:`repro.serving.leases.LeaseTable`: live executors renew
+  their leases from the poll loop, dispatch prefers valid lease holders
+  (replicated ≥2 per shard), and a fragment whose executor's lease lapsed
+  mid-wave — death observed by heartbeat or by ``ExecutorDead`` at task
+  entry — is re-dispatched to a surviving holder
+  (``stats.redispatches``).  Safe because executors are stateless: the
+  survivor re-reads the shard from the Puffin blob and produces the
+  identical result.
 """
 
 from __future__ import annotations
@@ -27,6 +36,8 @@ from typing import Dict, List, Optional
 
 from repro.runtime import fragments as F
 from repro.runtime.executor import Executor, ExecutorDead, InjectedFailure
+from repro.serving.leases import LeaseTable
+from repro.serving.metrics import MetricsRegistry
 
 
 @dataclass
@@ -40,6 +51,11 @@ class SchedulerStats:
     # fragments eliminated by merging same-shard probes
     probe_fragments_offered: int = 0
     probe_fragments_coalesced: int = 0
+    # fragments re-dispatched to a survivor because their executor's lease
+    # lapsed (executor died mid-wave, seen via heartbeat or ExecutorDead)
+    redispatches: int = 0
+    # dispatches that preferred a valid lease holder for the fragment's shard
+    lease_preferred_hits: int = 0
 
 
 class ExecutorPool:
@@ -77,6 +93,9 @@ class _Attempt:
     thread: threading.Thread
     started: float
     speculative: bool = False
+    # set once this attempt's fragment has been re-dispatched elsewhere
+    # (its executor died mid-wave); keeps the monitor from requeueing twice
+    abandoned: bool = False
 
 
 class Scheduler:
@@ -88,12 +107,18 @@ class Scheduler:
         enable_speculation: bool = False,
         speculation_factor: float = 3.0,
         poll_interval: float = 0.005,
+        lease_table: Optional[LeaseTable] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ) -> None:
         self.pool = pool
         self.max_attempts = max_attempts
         self.enable_speculation = enable_speculation
         self.speculation_factor = speculation_factor
         self.poll_interval = poll_interval
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.leases = (
+            lease_table if lease_table is not None else LeaseTable(metrics=self.metrics)
+        )
         self.stats = SchedulerStats()
 
     def run_coalesced_wave(self, tasks: List[object]) -> List[object]:
@@ -135,10 +160,13 @@ class Scheduler:
                         results[idx] = out
                         completed_latencies.append(time.time() - attempt_obj[0].started)
             except (ExecutorDead, InjectedFailure, Exception) as exc:  # noqa: BLE001
+                if isinstance(exc, ExecutorDead):
+                    # the holder died mid-wave: lapse its leases immediately
+                    # so no later pick in this wave prefers it
+                    executor.kill()
+                    self.leases.expire_holder(executor.executor_id)
                 with lock:
                     self.stats.failures_seen += 1
-                    if isinstance(exc, ExecutorDead):
-                        executor.kill()
                     if not done[idx]:
                         attempts_count[idx] += 1
                         if attempts_count[idx] >= self.max_attempts:
@@ -146,16 +174,33 @@ class Scheduler:
                             done[idx] = True  # give up; surfaced below
                         else:
                             self.stats.reassigned += 1
+                            if isinstance(exc, ExecutorDead):
+                                self.stats.redispatches += 1
+                                self.metrics.counter("redispatches").inc()
                             pending.put(idx)
 
         busy: Dict[str, int] = {}
 
         def pick_executor(idx: int) -> Optional[Executor]:
-            live = [e for e in self.pool.live() if busy.get(e.executor_id, 0) == 0]
+            live_all = self.pool.live()
+            live = [e for e in live_all if busy.get(e.executor_id, 0) == 0]
             if not live:
                 return None
             key = getattr(tasks[idx], "cache_key", None)
             if key:
+                # lease-checked dispatch: top the shard's lease up to its
+                # replica target from the whole live set, then prefer a free
+                # valid holder (cached holders first, else primary order)
+                lease = self.leases.ensure(key, [e.executor_id for e in live_all])
+                holders = lease.valid_holders(self.leases._clock())
+                holding = [e for e in live if e.executor_id in holders]
+                if holding:
+                    self.stats.lease_preferred_hits += 1
+                    cached = [e for e in holding if e.has_cached(key)]
+                    if cached:
+                        self.stats.cache_preferred_hits += 1
+                        return cached[0]
+                    return min(holding, key=lambda e: holders.index(e.executor_id))
                 cached = [e for e in live if e.has_cached(key)]
                 if cached:
                     self.stats.cache_preferred_hits += 1
@@ -168,15 +213,31 @@ class Scheduler:
                 all_done = all(done)
             if all_done:
                 break
-            if not self.pool.live():
+            live_now = self.pool.live()
+            if not live_now:
                 raise RuntimeError("entire executor pool is dead")
-            # reap finished attempts
+            # heartbeats renew leases; executors that stopped answering age out
+            for e in live_now:
+                self.leases.renew(e.executor_id)
+            # reap finished attempts; re-dispatch fragments whose executor
+            # died while holding them (lease lapsed mid-wave) — safe because
+            # executors are stateless, so the survivor recomputes the
+            # identical result and done-first-wins dedupes
             for att in list(inflight):
                 if not att.thread.is_alive():
                     busy[att.executor.executor_id] = max(
                         0, busy.get(att.executor.executor_id, 0) - 1
                     )
                     inflight.remove(att)
+                elif not att.abandoned and not att.executor.heartbeat():
+                    att.abandoned = True
+                    self.leases.expire_holder(att.executor.executor_id)
+                    with lock:
+                        if done[att.task_index]:
+                            continue
+                        self.stats.redispatches += 1
+                    self.metrics.counter("redispatches").inc()
+                    pending.put(att.task_index)
             # dispatch pending
             try:
                 while True:

@@ -1,5 +1,31 @@
 """Serving substrate: prefill/decode steps, device-resident ANN probe,
-retrieval-augmented decoding (the paper's index fused into serve_step)."""
+retrieval-augmented decoding, and the multi-tenant probe serving tier
+(micro-batcher + admission control + leases + metrics).
 
-from repro.serving.serve_loop import make_serve_fns, ServeConfig  # noqa: F401
-from repro.serving.device_index import DeviceAnnIndex, make_probe_fn  # noqa: F401
+The model-serving symbols (``make_serve_fns`` etc.) pull in jax and the
+model stack, so they load lazily — the light serving-tier modules
+(:mod:`repro.serving.leases`, :mod:`repro.serving.metrics`,
+:mod:`repro.serving.admission`) stay importable from the runtime layer
+without that weight.
+"""
+
+_LAZY = {
+    "make_serve_fns": ("repro.serving.serve_loop", "make_serve_fns"),
+    "ServeConfig": ("repro.serving.serve_loop", "ServeConfig"),
+    "ProbeMicroBatcher": ("repro.serving.serve_loop", "ProbeMicroBatcher"),
+    "MicroBatchStats": ("repro.serving.serve_loop", "MicroBatchStats"),
+    "DeviceAnnIndex": ("repro.serving.device_index", "DeviceAnnIndex"),
+    "make_probe_fn": ("repro.serving.device_index", "make_probe_fn"),
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    try:
+        module_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+
+    return getattr(importlib.import_module(module_name), attr)

@@ -18,12 +18,13 @@ serving tier sees.
 from __future__ import annotations
 
 import functools
+import math
 import queue as queue_mod
 import threading
 import time
 from concurrent.futures import Future
-from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +33,16 @@ from jax.sharding import Mesh, NamedSharding
 
 from repro.models.model import Model, param_shapes
 from repro.models.sharding import DEFAULT_RULES, LogicalRules, logical_to_sharding, spec_for
+from repro.serving.admission import (
+    AdmissionController,
+    AdmissionRejected,
+    DeadlineExceeded,
+    DegradationPolicy,
+    ProbeParams,
+    TenantPolicy,
+)
 from repro.serving.device_index import DeviceAnnIndex
+from repro.serving.metrics import MetricsRegistry
 
 
 @dataclass
@@ -53,6 +63,33 @@ class MicroBatchStats:
     rejected: int = 0
     # background fresh-tail compactions this batcher kicked off
     compactions: int = 0
+    # ... and how many of those failed in the background (the daemon used
+    # to swallow exceptions silently; now the last failure is recorded)
+    compaction_errors: int = 0
+    last_compaction_error: str = ""
+    # serving tier: submissions refused at the door by per-tenant token
+    # buckets (the caller saw AdmissionRejected, no Future was created)
+    admission_rejected: int = 0
+    # queries whose deadline passed — dropped before dispatch or refused
+    # after a late completion; their Future got DeadlineExceeded, they were
+    # never served silently late
+    deadline_misses: int = 0
+    # batches / queries served with a degraded (labeled) answer
+    degraded_batches: int = 0
+    degraded_queries: int = 0
+
+
+@dataclass
+class _Submission:
+    """One queued probe: the query plus its serving-tier envelope."""
+
+    query: np.ndarray
+    k: int
+    filter: object
+    fut: Future
+    tenant: str = "default"
+    deadline: Optional[float] = None  # monotonic seconds, None = no deadline
+    submitted: float = field(default_factory=time.monotonic)
 
 
 class ProbeMicroBatcher:
@@ -96,6 +133,32 @@ class ProbeMicroBatcher:
     tier), a daemon thread folds the tail into the Vamana shards with
     :meth:`Coordinator.compact_tail` — serving traffic keeps flowing
     against the stale-but-tail-served snapshot until the refresh commits.
+    A failed background compaction is recorded in
+    ``stats.compaction_errors`` / ``stats.last_compaction_error`` instead
+    of vanishing with the daemon thread.
+
+    **Multi-tenant serving.**  Each submission carries ``(tenant,
+    deadline_ms)``.  With an :class:`AdmissionController` attached (pass
+    ``admission=`` or the ``tenant_policies=`` convenience), a tenant over
+    its token-bucket rate is refused at the door with
+    :class:`AdmissionRejected` — before it can occupy queue space
+    (``stats.admission_rejected``).  The drainer is deadline-aware:
+    already-expired queries are dropped with :class:`DeadlineExceeded`
+    (``stats.deadline_misses``) and never dispatched, earlier deadlines
+    flush first, and a result that completes past its deadline is likewise
+    refused — never served silently late.  Per-tenant latency histograms
+    (p50/p99) and decision counters live in ``self.metrics``.
+
+    **Degradation.**  With a :class:`DegradationPolicy` attached, a drain
+    under pressure (queue depth vs. capacity, and batch-latency EMA vs. the
+    tightest pending deadline) trades answer quality for latency through
+    the policy's typed steps — shrink k, drop the rerank oversample, skip
+    the fresh-tail scan — instead of queueing unboundedly.  Degraded
+    answers are labeled on the report (``ProbeReport.degraded``) and
+    counted (``stats.degraded_batches``).  ``force_degrade`` is the
+    operator override: ``"auto"`` (pressure-driven), ``"on"`` (every step,
+    always), ``"off"`` (policy ignored — behavior is bit-for-bit the
+    pre-degradation serving path).
 
     Caveat: the coordinator's per-probe I/O accounting
     (``ProbeReport.bytes_read``) resets a store-global counter, so byte
@@ -117,6 +180,11 @@ class ProbeMicroBatcher:
         max_queue: Optional[int] = None,
         compact_tail_over: Optional[int] = None,
         index_name: Optional[str] = None,
+        admission: Optional[AdmissionController] = None,
+        tenant_policies: Optional[Dict[str, TenantPolicy]] = None,
+        degradation: Optional[DegradationPolicy] = None,
+        force_degrade: str = "auto",
+        metrics: Optional[MetricsRegistry] = None,
         **probe_kwargs,
     ) -> None:
         self.coordinator = coordinator
@@ -131,8 +199,21 @@ class ProbeMicroBatcher:
             raise ValueError("compact_tail_over requires index_name")
         self.compact_tail_over = compact_tail_over
         self.index_name = index_name
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        if admission is None and tenant_policies is not None:
+            admission = AdmissionController(tenant_policies, metrics=self.metrics)
+        self.admission = admission
+        if force_degrade not in ("off", "auto", "on"):
+            raise ValueError(f"force_degrade must be off/auto/on, got {force_degrade!r}")
+        if degradation is None and force_degrade == "on":
+            degradation = DegradationPolicy()
+        self.degradation = degradation
+        self.force_degrade = force_degrade
         self.probe_kwargs = probe_kwargs
         self.stats = MicroBatchStats()
+        self._stats_lock = threading.Lock()
+        self._max_queue = max_queue
+        self._latency_ema = 0.0  # EMA of drained-batch service time (s)
         self._queue: "queue_mod.Queue" = queue_mod.Queue(maxsize=max_queue or 0)
         self._thread: Optional[threading.Thread] = None
         self._compact_thread: Optional[threading.Thread] = None
@@ -158,11 +239,11 @@ class ProbeMicroBatcher:
         # their waiters — fail them loudly
         while True:
             try:
-                _, _, _, fut = self._queue.get_nowait()
+                sub = self._queue.get_nowait()
             except queue_mod.Empty:
                 break
-            if not fut.done():
-                fut.set_exception(RuntimeError("micro-batcher stopped"))
+            if not sub.fut.done():
+                sub.fut.set_exception(RuntimeError("micro-batcher stopped"))
 
     def __enter__(self) -> "ProbeMicroBatcher":
         return self.start()
@@ -171,29 +252,72 @@ class ProbeMicroBatcher:
         self.stop()
 
     # -- submission -------------------------------------------------------
-    def submit(self, query, k: int = 10, filter=None) -> Future:
+    def submit(
+        self,
+        query,
+        k: int = 10,
+        filter=None,
+        *,
+        tenant: str = "default",
+        deadline_ms: Optional[float] = None,
+    ) -> Future:
         """Enqueue one query; the Future resolves to its ProbeHit list.
         ``filter`` (a Predicate or SQL WHERE fragment) makes it a filtered
         probe — it shares the batch with unfiltered submissions.
+
+        ``tenant`` attributes the query for admission control and per-tenant
+        latency metrics; with an admission controller attached, a tenant
+        over its rate gets :class:`AdmissionRejected` here (counted in
+        ``stats.admission_rejected``; no Future is created).
+
+        ``deadline_ms`` is a relative deadline: if the result cannot be
+        delivered within that many milliseconds the Future fails with
+        :class:`DeadlineExceeded` (``stats.deadline_misses``) — expired
+        queries are dropped before dispatch, and late completions are
+        refused rather than served silently late.
 
         With ``max_queue`` set, a full queue raises :class:`queue.Full`
         immediately (fail-fast backpressure; counted in
         ``stats.rejected``) instead of blocking or queueing unboundedly."""
         if self._thread is None:
             raise RuntimeError("micro-batcher is not running (call start())")
-        fut: Future = Future()
+        if self.admission is not None and not self.admission.admit(tenant):
+            with self._stats_lock:
+                self.stats.admission_rejected += 1
+            raise AdmissionRejected(tenant)
+        now = time.monotonic()
+        sub = _Submission(
+            query=np.asarray(query, np.float32).reshape(-1),
+            k=k,
+            filter=filter,
+            fut=Future(),
+            tenant=tenant,
+            deadline=now + deadline_ms / 1e3 if deadline_ms is not None else None,
+            submitted=now,
+        )
         try:
-            self._queue.put_nowait(
-                (np.asarray(query, np.float32).reshape(-1), k, filter, fut)
-            )
+            self._queue.put_nowait(sub)
         except queue_mod.Full:
-            self.stats.rejected += 1
+            with self._stats_lock:
+                self.stats.rejected += 1
+            self.metrics.counter("queue_rejected", tenant).inc()
             raise
-        return fut
+        return sub.fut
 
-    def probe_many(self, queries, k: int = 10, filter=None) -> List[list]:
+    def probe_many(
+        self,
+        queries,
+        k: int = 10,
+        filter=None,
+        *,
+        tenant: str = "default",
+        deadline_ms: Optional[float] = None,
+    ) -> List[list]:
         """Submit a block of queries and wait for all results (in order)."""
-        futs = [self.submit(q, k, filter=filter) for q in queries]
+        futs = [
+            self.submit(q, k, filter=filter, tenant=tenant, deadline_ms=deadline_ms)
+            for q in queries
+        ]
         return [f.result() for f in futs]
 
     # -- drainer ----------------------------------------------------------
@@ -233,35 +357,117 @@ class ProbeMicroBatcher:
                 self.max_batch = shrunk
                 self.stats.shrinks += 1
 
+    # -- deadline / pressure accounting -----------------------------------
+    def _miss_deadline(self, sub: _Submission, now: float) -> None:
+        with self._stats_lock:
+            self.stats.deadline_misses += 1
+        self.metrics.counter("deadline_misses", sub.tenant).inc()
+        if not sub.fut.done():
+            sub.fut.set_exception(
+                DeadlineExceeded(sub.tenant, now - (sub.deadline or now))
+            )
+
+    def _pressure(self, pending: List[_Submission], now: float) -> float:
+        """Serving pressure in [0, 1]: how full the queue is (drained batch
+        + still-queued backlog vs. capacity), escalated when the observed
+        batch service time (EMA) eats into the tightest pending deadline."""
+        cap = self._max_queue if self._max_queue else 4 * self.max_batch
+        p = min(1.0, (len(pending) + self._queue.qsize()) / max(1, cap))
+        if self._latency_ema > 0.0:
+            headrooms = [s.deadline - now for s in pending if s.deadline is not None]
+            if headrooms:
+                tightest = max(min(headrooms), 1e-6)
+                p = max(p, min(1.0, self._latency_ema / tightest))
+        return p
+
     def _flush(self, pending: list) -> None:
-        by_k: Dict[int, list] = {}
-        for item in pending:
-            by_k.setdefault(item[1], []).append(item)
+        now = time.monotonic()
+        # deadline-aware: already-expired queries are rejected, not served
+        # late; the survivors flush earliest-deadline-first (stable within
+        # equal deadlines, deadline-free queries keep arrival order last)
+        live: List[_Submission] = []
+        for sub in pending:
+            if sub.deadline is not None and now >= sub.deadline:
+                self._miss_deadline(sub, now)
+            else:
+                live.append(sub)
+        if not live:
+            return
+        live.sort(key=lambda s: s.deadline if s.deadline is not None else math.inf)
+        degrade = self.degradation is not None and self.force_degrade != "off"
+        pressure = 0.0
+        if degrade:
+            pressure = 1.0 if self.force_degrade == "on" else self._pressure(live, now)
+        by_k: Dict[int, List[_Submission]] = {}
+        for sub in live:
+            by_k.setdefault(sub.k, []).append(sub)
         for k, items in by_k.items():
-            queries = np.stack([q for q, _, _, _ in items])
-            filters = [flt for _, _, flt, _ in items]
-            futures = [f for _, _, _, f in items]
+            queries = np.stack([s.query for s in items])
+            filters = [s.filter for s in items]
             any_filtered = any(f is not None for f in filters)
+            labels: Tuple[str, ...] = ()
+            probe_kwargs = self.probe_kwargs
+            k_eff = k
+            if degrade:
+                params, labels = self.degradation.apply(
+                    ProbeParams(
+                        k=k,
+                        include_tail=self.probe_kwargs.get("include_tail", True),
+                    ),
+                    pressure,
+                )
+                if labels:
+                    k_eff = params.k
+                    probe_kwargs = dict(self.probe_kwargs)
+                    probe_kwargs["include_tail"] = params.include_tail
+                    if params.oversample is not None:
+                        probe_kwargs["oversample"] = params.oversample
             try:
                 report = self.coordinator.probe_batch(
                     self.table_name,
                     queries,
-                    k,
+                    k_eff,
                     strategy=self.strategy,
                     filter=filters if any_filtered else None,
-                    **self.probe_kwargs,
+                    **probe_kwargs,
                 )
             except Exception as exc:  # propagate to every waiter
-                for f in futures:
-                    f.set_exception(exc)
+                for s in items:
+                    s.fut.set_exception(exc)
                 continue
-            self.stats.batches += 1
-            self.stats.queries += len(items)
-            self.stats.filtered_queries += sum(1 for f in filters if f is not None)
-            self.stats.kernel_dispatches += report.kernel_dispatches
-            self.stats.max_batch_seen = max(self.stats.max_batch_seen, len(items))
-            for f, hits in zip(futures, report.hits):
-                f.set_result(hits)
+            if labels:
+                report.degraded = labels
+                for name in labels:
+                    self.metrics.counter(f"degraded:{name}").inc()
+            done = time.monotonic()
+            batch_s = done - now
+            self._latency_ema = (
+                batch_s
+                if self._latency_ema == 0.0
+                else 0.8 * self._latency_ema + 0.2 * batch_s
+            )
+            with self._stats_lock:
+                self.stats.batches += 1
+                self.stats.queries += len(items)
+                self.stats.filtered_queries += sum(
+                    1 for f in filters if f is not None
+                )
+                self.stats.kernel_dispatches += report.kernel_dispatches
+                self.stats.max_batch_seen = max(self.stats.max_batch_seen, len(items))
+                if labels:
+                    self.stats.degraded_batches += 1
+                    self.stats.degraded_queries += len(items)
+            for s, hits in zip(items, report.hits):
+                # the deadline covers delivery, not just dispatch: a result
+                # that completed late is refused, never served silently late
+                if s.deadline is not None and done > s.deadline:
+                    self._miss_deadline(s, done)
+                    continue
+                self.metrics.histogram("latency_ms", s.tenant).observe(
+                    (done - s.submitted) * 1e3
+                )
+                self.metrics.counter("served", s.tenant).inc()
+                s.fut.set_result(hits)
             self._maybe_compact(report)
 
     def _maybe_compact(self, report) -> None:
@@ -269,7 +475,10 @@ class ProbeMicroBatcher:
         least ``compact_tail_over`` tail rows, fold the tail into the graph
         shards off the serving path.  At most one compaction runs at a
         time; the refresh commit resets the tail, so the trigger naturally
-        disarms until enough new appends accumulate."""
+        disarms until enough new appends accumulate.  A compaction that
+        fails in the background is recorded in ``stats.compaction_errors``
+        / ``stats.last_compaction_error`` — daemon-thread failures must not
+        vanish silently."""
         if self.compact_tail_over is None:
             return
         if report.tail_rows < self.compact_tail_over:
@@ -277,14 +486,21 @@ class ProbeMicroBatcher:
         if self._compact_thread is not None and self._compact_thread.is_alive():
             return
         self.stats.compactions += 1
-        self._compact_thread = threading.Thread(
-            target=lambda: self.coordinator.compact_tail(
-                self.table_name,
-                self.index_name,
-                threshold_rows=self.compact_tail_over,
-            ),
-            daemon=True,
-        )
+
+        def _run() -> None:
+            try:
+                self.coordinator.compact_tail(
+                    self.table_name,
+                    self.index_name,
+                    threshold_rows=self.compact_tail_over,
+                )
+            except Exception as exc:  # noqa: BLE001 — record, don't crash serving
+                with self._stats_lock:
+                    self.stats.compaction_errors += 1
+                    self.stats.last_compaction_error = f"{type(exc).__name__}: {exc}"
+                self.metrics.counter("compaction_errors").inc()
+
+        self._compact_thread = threading.Thread(target=_run, daemon=True)
         self._compact_thread.start()
 
 

@@ -1,0 +1,99 @@
+"""Chaos suite: executor failures mid-wave and between waves.
+
+The acceptance bar for the serving tier's failover path: killing an executor
+while it HOLDS fragments (heartbeat goes dark mid-wave) must lose zero
+queries — every submitted query returns hits at exact parity with a healthy
+run, because the scheduler's lease monitor observes the death and re-dispatches
+the in-flight fragments to a surviving lease holder.
+
+Run explicitly via ``scripts/ci.sh --chaos`` (``pytest -m chaos``); the cases
+are also part of the default tier-1 run (they are not slow-marked).
+"""
+
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.chaos
+
+
+def _locs(hits):
+    return [(h.file_path, h.row_group, h.row_offset) for h in hits]
+
+
+def _dists(hits):
+    return np.array([h.distance for h in hits])
+
+
+def _assert_parity(healthy_hits, chaos_hits):
+    assert len(healthy_hits) == len(chaos_hits)
+    for a, b in zip(healthy_hits, chaos_hits):
+        assert _locs(a) == _locs(b)
+        np.testing.assert_allclose(_dists(a), _dists(b), rtol=1e-5, atol=1e-3)
+
+
+def test_kill_executor_mid_wave_loses_no_queries(built_cluster):
+    """Heartbeat dies while fragments are in flight; nothing is lost.
+
+    ``kill_next(hold_s=...)`` makes the executor accept a fragment, go
+    heartbeat-dead while holding it, and then drop the result.  The
+    scheduler's mid-wave monitor must expire its leases and re-dispatch the
+    held fragment to a survivor — the batch completes at exact parity with a
+    healthy run and the re-dispatch is visible in scheduler stats."""
+    c, t, X, centers, rep = built_cluster
+    Q = X[:8]
+
+    healthy = c.coordinator.probe_batch("emb", Q, 5, strategy="diskann")
+    base_redispatch = c.coordinator.scheduler.stats.redispatches
+
+    doomed = c.executors[1]
+    try:
+        doomed.kill_next(1, hold_s=0.05)
+        chaos = c.coordinator.probe_batch("emb", Q, 5, strategy="diskann")
+    finally:
+        doomed.revive()
+
+    _assert_parity(healthy.hits, chaos.hits)
+    assert len(chaos.hits) == len(Q)
+    assert c.coordinator.scheduler.stats.redispatches > base_redispatch
+    # the dead executor held (and lost) its only task: it served nothing
+    assert chaos.served_by, "probe report must carry placement provenance"
+    assert all(not e.endswith(f"@{doomed.executor_id}") for e in chaos.served_by)
+
+
+def test_kill_executor_mid_wave_through_micro_batcher(built_cluster):
+    """The full serving path (submit → batch → wave) survives a mid-wave kill."""
+    from repro.serving.serve_loop import ProbeMicroBatcher
+
+    c, t, X, centers, rep = built_cluster
+    Q = X[64:70]
+    healthy = c.coordinator.probe_batch("emb", Q, 5, strategy="diskann")
+
+    doomed = c.executors[2]
+    try:
+        doomed.kill_next(1, hold_s=0.05)
+        with ProbeMicroBatcher(
+            c.coordinator, "emb", max_batch=16, max_wait_s=0.02
+        ) as mb:
+            got = mb.probe_many([q for q in Q], k=5)
+    finally:
+        doomed.revive()
+
+    _assert_parity(healthy.hits, got)
+
+
+def test_kill_executor_between_waves_loses_no_queries(built_cluster):
+    """An executor dead BEFORE the wave starts is simply never scheduled."""
+    c, t, X, centers, rep = built_cluster
+    Q = X[128:136]
+
+    healthy = c.coordinator.probe_batch("emb", Q, 5, strategy="diskann")
+
+    doomed = c.executors[0]
+    try:
+        doomed.kill()
+        chaos = c.coordinator.probe_batch("emb", Q, 5, strategy="diskann")
+    finally:
+        doomed.revive()
+
+    _assert_parity(healthy.hits, chaos.hits)
+    assert all(not e.endswith(f"@{doomed.executor_id}") for e in chaos.served_by)

@@ -72,6 +72,22 @@ def _clean_doc():
                 "stale": True,
                 "oracle_qps": 350.0,
             },
+            "table2.overload": {
+                "throughput_qps": 50.0,
+                "capacity_qps": 70.0,
+                "offered_qps": 140.0,
+                "overload_factor": 2.0,
+                "well_hit_rate": 1.0,
+                "well_attempts": 40,
+                "well_served": 40,
+                "well_rejected": 0,
+                "abusive_attempts": 230,
+                "abusive_admitted": 40,
+                "abusive_rejected": 190,
+                "deadline_misses": 0,
+                "degraded_batches": 0,
+                "queue_bounded": True,
+            },
         },
     }
 
@@ -468,3 +484,55 @@ def test_cli_mismatched_baseline_count(tmp_path):
     p.write_text(json.dumps(_clean_doc()))
     rc = check_bench.main([str(p), str(p), "--baseline", ""])
     assert rc == 2
+
+
+# ---------------------------------------------------------------------------
+# overload row (multi-tenant serving tier)
+# ---------------------------------------------------------------------------
+
+
+def test_overload_absolute_gates():
+    """The serving-tier acceptance gates: a well-behaved tenant starved
+    below a 0.9 deadline hit-rate, rejections landing on the wrong tenant,
+    and an unbounded queue each fail without any baseline."""
+    cur = _clean_doc()
+    o = cur["rows"]["table2.overload"]
+    o["well_hit_rate"] = 0.6
+    o["well_rejected"] = 200
+    o["abusive_rejected"] = 5
+    o["queue_bounded"] = False
+    failures = check_bench.check(cur, None)
+    assert any(
+        "table2.overload" in x and "hit-rate" in x for x in failures
+    )
+    assert any("wrong tenant is paying" in x for x in failures)
+    assert any("backpressure is not holding" in x for x in failures)
+
+
+def test_overload_gate_requires_actual_overload():
+    """An overload row measured UNDER capacity gates nothing — the run
+    must fail rather than pass vacuously."""
+    cur = _clean_doc()
+    cur["rows"]["table2.overload"]["overload_factor"] = 1.1
+    failures = check_bench.check(cur, None)
+    assert any("did not actually overload" in x for x in failures)
+
+
+def test_overload_clean_row_passes_and_is_not_wall_clock_gated():
+    """A clean overload row passes, and its throughput is informational:
+    the row rides the scheduler, so wall clock never gates it even
+    against a much faster baseline."""
+    base = _clean_doc()
+    cur = copy.deepcopy(base)
+    cur["rows"]["table2.overload"]["throughput_qps"] = 5.0  # 10x slower
+    assert check_bench.check(cur, base) == []
+
+
+def test_overload_cli_doctored_json(tmp_path):
+    base = _clean_doc()
+    cur = copy.deepcopy(base)
+    cur["rows"]["table2.overload"]["well_hit_rate"] = 0.2
+    cur_p, base_p = tmp_path / "cur.json", tmp_path / "base.json"
+    cur_p.write_text(json.dumps(cur))
+    base_p.write_text(json.dumps(base))
+    assert check_bench.main([str(cur_p), "--baseline", str(base_p)]) == 1

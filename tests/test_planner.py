@@ -494,3 +494,122 @@ def test_histogram_estimate_beats_span_on_skew():
     back = B.decode_zonemap_blob(B.encode_zonemap_blob(zm))
     assert back.zones["f1"][0]["c"].hist == hist
     assert pred.estimate_fraction(back.zones["f1"][0]) == pytest.approx(est_hist)
+
+
+# ---------------------------------------------------------------------------
+# replayable plans: probe_batch(replay_plan=...) skips planning entirely
+# ---------------------------------------------------------------------------
+
+
+def test_probe_batch_replay_plan_skips_planner_at_parity(mixed_cluster, monkeypatch):
+    """A captured ``ProbePlan`` round-trips through JSON and replays through
+    ``probe_batch(replay_plan=...)`` with the planner booby-trapped: no
+    re-planning, no zone-map consultation — and the hits are identical to
+    the freshly planned probe (the plan IS the planning)."""
+    c, t, X, price, rep = mixed_cluster
+    Q = np.stack([X[i] for i in range(8)])
+    fresh = c.coordinator.probe_batch(
+        "emb", Q, 5, strategy="diskann", filter=MIXED_FILTERS
+    )
+    assert fresh.plan is not None
+
+    wire = json.dumps(fresh.plan.to_json())  # e.g. persisted next to a report
+    plan = ProbePlan.from_json(json.loads(wire))
+
+    def _no_planning(*a, **k):
+        raise AssertionError("plan_filtered must not run under replay")
+
+    monkeypatch.setattr(planner, "plan_filtered", _no_planning)
+    replay = c.coordinator.probe_batch(
+        "emb", Q, 5, strategy="diskann", filter=MIXED_FILTERS, replay_plan=plan
+    )
+    assert replay.filter_plan == "replay"
+    assert replay.est_selectivity == pytest.approx(fresh.est_selectivity)
+    assert replay.shards_pruned == fresh.shards_pruned
+    for a, b in zip(fresh.hits, replay.hits):
+        assert _locs(a) == _locs(b)
+        np.testing.assert_allclose(
+            [h.distance for h in a],
+            [h.distance for h in b],
+            rtol=1e-5,
+            atol=1e-3,
+        )
+
+
+def test_replay_plan_validates_shape_and_strategy(mixed_cluster):
+    c, t, X, price, rep = mixed_cluster
+    Q = np.stack([X[i] for i in range(4)])
+    fresh = c.coordinator.probe_batch(
+        "emb", Q, 5, strategy="diskann", filter=MIXED_FILTERS[:4]
+    )
+    plan = ProbePlan.from_json(fresh.plan.to_json())
+    with pytest.raises(ValueError):  # k mismatch
+        c.coordinator.probe_batch(
+            "emb", Q, 7, strategy="diskann", filter=MIXED_FILTERS[:4], replay_plan=plan
+        )
+    with pytest.raises(ValueError):  # row-count mismatch
+        c.coordinator.probe_batch(
+            "emb", Q[:2], 5, strategy="diskann",
+            filter=MIXED_FILTERS[:2], replay_plan=plan,
+        )
+    with pytest.raises(ValueError):  # plans only exist for the index path
+        c.coordinator.probe_batch(
+            "emb", Q, 5, strategy="scan", filter=MIXED_FILTERS[:4], replay_plan=plan
+        )
+
+
+# ---------------------------------------------------------------------------
+# per-shard histogram merge: shard-level selectivity evidence
+# ---------------------------------------------------------------------------
+
+
+def test_column_histogram_merge_unions_files():
+    from repro.runtime.predicates import ColumnHistogram
+
+    lo_half = ColumnHistogram.build(np.arange(0, 50, dtype=np.int64))
+    hi_half = ColumnHistogram.build(np.arange(50, 100, dtype=np.int64))
+    merged = ColumnHistogram.merge([lo_half, hi_half])
+    assert merged.lo == 0.0 and merged.hi == 99.0
+    assert sum(merged.counts) == pytest.approx(100.0, rel=1e-6)
+    # mass sits in both halves, roughly evenly on this uniform data
+    assert merged.fraction_between(None, 49) == pytest.approx(0.5, abs=0.05)
+    assert merged.fraction_between(50, None) == pytest.approx(0.5, abs=0.05)
+    # degenerate cases: single histogram passes through bit-for-bit
+    assert ColumnHistogram.merge([lo_half]) is lo_half
+    assert ColumnHistogram.merge([]) is None
+
+
+def test_shard_zones_merge_file_histograms():
+    """A shard spanning two files with disjoint value ranges must expose a
+    merged histogram: estimating against either file's own histogram would
+    attribute ALL of the shard's mass to that file's range."""
+    from repro.core.blobs import AttrZoneMap
+    from repro.runtime.predicates import ColumnHistogram, Range, ZoneStats
+
+    cheap = np.arange(0, 50, dtype=np.int64).repeat(20)  # 1000 rows, 0..49
+    dear = np.arange(50, 100, dtype=np.int64).repeat(20)  # 1000 rows, 50..99
+    h_cheap = ColumnHistogram.build(cheap)
+    h_dear = ColumnHistogram.build(dear)
+    zm = AttrZoneMap(
+        columns={"price": "int"},
+        zones={
+            "fa": [{"price": ZoneStats(count=1000, min=0, max=49, hist=h_cheap)}],
+            "fb": [{"price": ZoneStats(count=1000, min=50, max=99, hist=h_dear)}],
+        },
+        shard_membership={0: [("fa", 0), ("fb", 0)], 1: [("fa", 0)]},
+    )
+
+    pred = Range("price", hi=49)  # passes exactly file fa's rows
+    both = zm.shard_zones(0)
+    merged_hist = both[0]["price"].hist
+    assert merged_hist is both[1]["price"].hist  # one shard-level histogram
+    assert merged_hist.lo == 0.0 and merged_hist.hi == 99.0
+    # per-zone estimates stay conditioned on each row group's own range
+    assert pred.estimate_fraction(both[0]) == pytest.approx(1.0, abs=0.05)
+    assert pred.estimate_fraction(both[1]) == 0.0
+    # shard-level fraction over the merged evidence: half the shard's rows
+    assert merged_hist.fraction_between(None, 49) == pytest.approx(0.5, abs=0.05)
+
+    # single-file shard keeps its file histogram bit-for-bit (no re-binning)
+    solo = zm.shard_zones(1)
+    assert solo[0]["price"].hist is h_cheap

@@ -180,10 +180,12 @@ def test_micro_batcher_adaptive_sizing():
         _StubCoordinator(), "t", max_batch=4, adaptive=True,
         min_batch=2, max_batch_cap=64, max_wait_s=0.01,
     )
+    from repro.serving.serve_loop import _Submission
+
     futs = []
     for i in range(40):
         f = Future()
-        mb2._queue.put((np.zeros(4, np.float32), 5, None, f))
+        mb2._queue.put(_Submission(np.zeros(4, np.float32), 5, None, f))
         futs.append(f)
     with mb2:
         for f in futs:

@@ -1,0 +1,491 @@
+"""Serving tier: admission control, deadlines, degradation, leases, metrics.
+
+Unit tests run against injected clocks (no sleeps); micro-batcher behavior
+tests run against a stub coordinator so they exercise the serving envelope
+(admission → queue → deadline-aware drain → degradation → delivery) without
+building an index.
+"""
+
+import queue as queue_mod
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro.serving.admission import (
+    AdmissionController,
+    AdmissionRejected,
+    DeadlineExceeded,
+    DegradationPolicy,
+    DropOversample,
+    ProbeParams,
+    ShrinkK,
+    SkipTail,
+    TenantPolicy,
+    TokenBucket,
+)
+from repro.serving.leases import LeaseTable
+from repro.serving.metrics import MetricsRegistry
+from repro.serving.serve_loop import ProbeMicroBatcher
+
+
+class _FakeClock:
+    def __init__(self, t: float = 0.0) -> None:
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+# -- token bucket / admission ---------------------------------------------
+
+def test_token_bucket_burst_and_refill():
+    clock = _FakeClock()
+    bucket = TokenBucket(rate=10.0, burst=2.0, clock=clock)
+    assert bucket.try_acquire()
+    assert bucket.try_acquire()
+    assert not bucket.try_acquire()  # burst exhausted, no time passed
+    clock.advance(0.1)  # one token refills at 10/s
+    assert bucket.try_acquire()
+    assert not bucket.try_acquire()
+    clock.advance(10.0)  # refill caps at burst, not rate*dt
+    assert bucket.try_acquire()
+    assert bucket.try_acquire()
+    assert not bucket.try_acquire()
+
+
+def test_admission_controller_per_tenant_budgets():
+    clock = _FakeClock()
+    metrics = MetricsRegistry()
+    ctl = AdmissionController(
+        {"abuser": TenantPolicy(rate_qps=1.0, burst=2.0)},
+        clock=clock,
+        metrics=metrics,
+    )
+    # unknown tenants fall back to the default policy (unlimited)
+    assert all(ctl.admit("trusted") for _ in range(50))
+    # the configured tenant burns its own bucket
+    decisions = [ctl.admit("abuser") for _ in range(5)]
+    assert decisions == [True, True, False, False, False]
+    assert metrics.counter_value("admissions", "abuser") == 2
+    assert metrics.counter_value("admission_rejected", "abuser") == 3
+    assert metrics.counter_value("admission_rejected", "trusted") == 0
+    clock.advance(1.0)
+    assert ctl.admit("abuser")  # budget recovers at rate_qps
+
+
+# -- degradation ladder ----------------------------------------------------
+
+def test_degradation_ladder_arms_by_pressure():
+    policy = DegradationPolicy()
+    assert policy.plan(0.0) == ()
+    assert [type(s) for s in policy.plan(0.6)] == [ShrinkK]
+    assert [type(s) for s in policy.plan(0.8)] == [ShrinkK, DropOversample]
+    assert [type(s) for s in policy.plan(1.0)] == [ShrinkK, DropOversample, SkipTail]
+
+
+def test_degradation_apply_transforms_params_and_labels():
+    policy = DegradationPolicy()
+    params = ProbeParams(k=10)
+
+    out, labels = policy.apply(params, 0.0)
+    assert out == params and labels == ()
+
+    out, labels = policy.apply(params, 1.0)
+    assert out.k == 5
+    assert out.oversample == 1
+    assert out.include_tail is False
+    assert labels == ("shrink_k(x0.5)", "drop_oversample(to=1)", "skip_tail")
+
+
+def test_degradation_noop_steps_leave_no_label():
+    # k already at the floor: ShrinkK changes nothing and must not claim to
+    policy = DegradationPolicy(steps=(ShrinkK(min_k=1),))
+    out, labels = policy.apply(ProbeParams(k=1), 1.0)
+    assert out.k == 1 and labels == ()
+
+
+# -- lease table -----------------------------------------------------------
+
+def test_lease_table_grants_replicas_and_expires():
+    clock = _FakeClock()
+    lt = LeaseTable(ttl=1.0, replicas=2, clock=clock)
+    lease = lt.ensure("s1", ["a", "b", "c"])
+    assert len(lease.holders) == 2
+    primary = lease.holders[0]
+    assert lt.valid_holders("s1") == lease.holders
+
+    # renewal extends only the renewed holder
+    clock.advance(0.6)
+    lt.renew(primary)
+    clock.advance(0.6)  # the other holder's lease (t=0 + 1.0) has lapsed
+    valid = lt.valid_holders("s1")
+    assert valid == [primary]
+
+    # ensure tops back up to replicas, aging out the lapsed holder
+    lease = lt.ensure("s1", ["a", "b", "c"])
+    assert len(lease.holders) == 2
+    assert primary in lease.holders
+    assert lt.metrics.counter_value("lease_expiries") >= 1
+
+
+def test_lease_table_expire_holder_is_immediate():
+    clock = _FakeClock()
+    lt = LeaseTable(ttl=100.0, replicas=2, clock=clock)
+    lease = lt.ensure("s1", ["a", "b"])
+    dead = lease.holders[0]
+    assert lt.expire_holder(dead) == 1
+    assert dead not in lt.valid_holders("s1")
+    assert lt.holder_load(dead) == 0
+    # re-ensure replaces the dead holder without advancing the clock
+    lease = lt.ensure("s1", ["a", "b"])
+    assert len(lease.holders) == 2 and dead in lease.holders
+
+
+def test_lease_table_hot_shard_gains_extra_holder():
+    clock = _FakeClock()
+    lt = LeaseTable(ttl=100.0, replicas=2, hot_dispatches=10, clock=clock)
+    for _ in range(10):
+        lease = lt.ensure("hot", ["a", "b", "c", "d"])
+    assert len(lease.holders) == 2  # not hot yet (dispatches == threshold)
+    lease = lt.ensure("hot", ["a", "b", "c", "d"])
+    assert len(lease.holders) == 3  # crossed hot_dispatches: +1 replica
+    snap = lt.snapshot()["hot"]
+    assert snap["dispatches"] == 11 and len(snap["valid"]) == 3
+
+
+def test_lease_table_spreads_load_least_leased_first():
+    clock = _FakeClock()
+    lt = LeaseTable(ttl=100.0, replicas=1, clock=clock)
+    holders = [lt.ensure(f"s{i}", ["a", "b", "c"]).holders[0] for i in range(6)]
+    # 6 single-replica shards over 3 candidates: perfectly balanced
+    assert sorted(holders.count(e) for e in "abc") == [2, 2, 2]
+
+
+# -- metrics ---------------------------------------------------------------
+
+def test_metrics_histogram_percentiles_and_snapshot():
+    reg = MetricsRegistry()
+    h = reg.histogram("latency_ms", "tenant-a", window=100)
+    for v in range(1, 101):  # 1..100
+        h.observe(float(v))
+    assert h.percentile(50) == pytest.approx(50.0, abs=1.0)
+    assert h.percentile(99) == pytest.approx(99.0, abs=1.0)
+    assert h.count == 100
+    reg.counter("served", "tenant-a").inc(7)
+    snap = reg.snapshot()
+    assert snap["served[tenant-a]"] == 7.0
+    assert snap["latency_ms[tenant-a].count"] == 100.0
+    assert snap["latency_ms[tenant-a].p99"] >= snap["latency_ms[tenant-a].p50"]
+
+
+def test_metrics_histogram_window_slides():
+    h = MetricsRegistry().histogram("x", window=10)
+    for v in range(1000):
+        h.observe(float(v))
+    # percentiles reflect the recent window, lifetime count keeps the total
+    assert h.percentile(50) >= 990.0
+    assert h.count == 1000
+
+
+# -- micro-batcher behavior (stub coordinator) -----------------------------
+
+class _StubReport:
+    def __init__(self, n):
+        self.hits = [[("hit", i)] for i in range(n)]
+        self.kernel_dispatches = 1
+        self.tail_rows = 0
+        self.degraded = ()
+
+
+class _StubCoordinator:
+    """Records probe_batch calls; optionally blocks on a gate or sleeps."""
+
+    def __init__(self, *, service_s=0.0, gate=None, tail_rows=0, compact_exc=None):
+        self.calls = []
+        self.reports = []
+        self.compact_calls = []
+        self.service_s = service_s
+        self.gate = gate
+        self.tail_rows = tail_rows
+        self.compact_exc = compact_exc
+        self.entered = threading.Event()
+
+    def probe_batch(self, table, queries, k, **kw):
+        self.entered.set()
+        if self.gate is not None:
+            self.gate.wait(timeout=30.0)
+        if self.service_s:
+            time.sleep(self.service_s)
+        self.calls.append((table, np.asarray(queries).shape, k, dict(kw)))
+        rep = _StubReport(len(queries))
+        rep.tail_rows = self.tail_rows
+        self.reports.append(rep)
+        return rep
+
+    def compact_tail(self, table, index_name, threshold_rows):
+        self.compact_calls.append((table, index_name, threshold_rows))
+        if self.compact_exc is not None:
+            raise self.compact_exc
+
+
+def test_submit_admission_rejected_creates_no_future():
+    coord = _StubCoordinator()
+    with ProbeMicroBatcher(
+        coord,
+        "t",
+        max_batch=8,
+        max_wait_s=0.001,
+        tenant_policies={"abuser": TenantPolicy(rate_qps=0.001, burst=2.0)},
+    ) as mb:
+        q = np.zeros(4, np.float32)
+        f1 = mb.submit(q, k=3, tenant="abuser")
+        f2 = mb.submit(q, k=3, tenant="abuser")
+        with pytest.raises(AdmissionRejected):
+            mb.submit(q, k=3, tenant="abuser")
+        # trusted traffic is untouched by the abuser's empty bucket
+        f3 = mb.submit(q, k=3, tenant="trusted")
+        assert f1.result(timeout=5) and f2.result(timeout=5) and f3.result(timeout=5)
+    assert mb.stats.admission_rejected == 1
+    assert mb.metrics.counter_value("admission_rejected", "abuser") == 1
+    assert mb.metrics.counter_value("served", "trusted") == 1
+
+
+def test_deadline_expired_in_queue_never_dispatched():
+    gate = threading.Event()
+    coord = _StubCoordinator(gate=gate)
+    with ProbeMicroBatcher(coord, "t", max_batch=1, max_wait_s=0.0) as mb:
+        q = np.zeros(4, np.float32)
+        f_slow = mb.submit(q, k=3)  # drained; blocks inside probe_batch
+        assert coord.entered.wait(timeout=5)
+        f_doomed = mb.submit(q, k=3, deadline_ms=20)
+        time.sleep(0.08)  # deadline passes while still queued
+        gate.set()
+        assert f_slow.result(timeout=5)
+        with pytest.raises(DeadlineExceeded):
+            f_doomed.result(timeout=5)
+    assert mb.stats.deadline_misses == 1
+    assert len(coord.calls) == 1  # the expired query was never dispatched
+    assert mb.metrics.counter_value("deadline_misses", "default") == 1
+
+
+def test_late_completion_refused_not_served_late():
+    coord = _StubCoordinator(service_s=0.08)
+    with ProbeMicroBatcher(coord, "t", max_batch=4, max_wait_s=0.0) as mb:
+        fut = mb.submit(np.zeros(4, np.float32), k=3, deadline_ms=20)
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=5)
+    # it WAS dispatched (alive at drain time) but the result came back late
+    assert len(coord.calls) == 1
+    assert mb.stats.deadline_misses == 1
+    assert mb.metrics.counter_value("served", "default") == 0
+
+
+def test_deadline_ordering_earliest_first():
+    gate = threading.Event()
+    coord = _StubCoordinator(gate=gate)
+    with ProbeMicroBatcher(coord, "t", max_batch=8, max_wait_s=0.05) as mb:
+        q = np.zeros(4, np.float32)
+        blocker = mb.submit(q, k=3)  # occupies the drainer
+        assert coord.entered.wait(timeout=5)
+        loose = mb.submit(q, k=3, deadline_ms=10_000)
+        tight = mb.submit(q, k=3, deadline_ms=1_000)
+        free = mb.submit(q, k=3)
+        gate.set()
+        for f in (blocker, loose, tight, free):
+            f.result(timeout=5)
+    # second batch flushed earliest-deadline-first, deadline-free last
+    assert coord.calls[1][1][0] == 3  # the three queued queries batched
+    assert len(coord.calls) == 2
+
+
+def test_degradation_force_on_shrinks_and_labels():
+    coord = _StubCoordinator()
+    with ProbeMicroBatcher(
+        coord, "t", max_batch=4, max_wait_s=0.0, force_degrade="on"
+    ) as mb:
+        fut = mb.submit(np.zeros(4, np.float32), k=10)
+        assert fut.result(timeout=5)
+    (table, shape, k, kwargs) = coord.calls[0]
+    assert k == 5  # ShrinkK halved the requested k
+    assert kwargs["oversample"] == 1  # DropOversample
+    assert kwargs["include_tail"] is False  # SkipTail
+    assert coord.reports[0].degraded == (
+        "shrink_k(x0.5)",
+        "drop_oversample(to=1)",
+        "skip_tail",
+    )
+    assert mb.stats.degraded_batches == 1
+    assert mb.stats.degraded_queries == 1
+    assert mb.metrics.counter_value("degraded:skip_tail") == 1
+
+
+def test_force_degrade_off_is_bit_for_bit_legacy():
+    """With force_degrade='off' an attached policy changes NOTHING about the
+    coordinator call — same k, same kwargs as a policy-free batcher."""
+    q = np.arange(4, dtype=np.float32)
+    legacy = _StubCoordinator()
+    with ProbeMicroBatcher(legacy, "t", max_batch=4, max_wait_s=0.0) as mb:
+        for _ in range(3):
+            mb.submit(q, k=7).result(timeout=5)
+
+    armed = _StubCoordinator()
+    with ProbeMicroBatcher(
+        armed,
+        "t",
+        max_batch=4,
+        max_wait_s=0.0,
+        degradation=DegradationPolicy(),
+        force_degrade="off",
+        max_queue=2,  # pressure exists; "off" must still ignore it
+    ) as mb2:
+        for _ in range(3):
+            mb2.submit(q, k=7).result(timeout=5)
+
+    assert armed.calls == legacy.calls
+    assert mb2.stats.degraded_batches == 0
+
+
+def test_force_degrade_validation():
+    with pytest.raises(ValueError):
+        ProbeMicroBatcher(_StubCoordinator(), "t", force_degrade="sometimes")
+
+
+# -- satellite: exact rejection accounting under concurrent submit ---------
+
+def test_concurrent_submit_full_queue_exact_accounting():
+    """≥8 threads hammer a max_queue=4 batcher while the drainer is wedged:
+    exactly 4 submissions fit, every other attempt raises queue.Full, and
+    stats.rejected equals the refusals exactly — no lost or double counts."""
+    gate = threading.Event()
+    coord = _StubCoordinator(gate=gate)
+    mb = ProbeMicroBatcher(
+        coord, "t", max_batch=1, max_wait_s=0.0, max_queue=4
+    ).start()
+    try:
+        q = np.zeros(4, np.float32)
+        wedge = mb.submit(q, k=3)  # drained immediately; blocks in probe_batch
+        assert coord.entered.wait(timeout=5)
+
+        n_threads, per_thread = 8, 6
+        start = threading.Barrier(n_threads)
+        futures, fulls = [], []
+        lock = threading.Lock()
+
+        def hammer():
+            start.wait()
+            for _ in range(per_thread):
+                try:
+                    f = mb.submit(q, k=3)
+                    with lock:
+                        futures.append(f)
+                except queue_mod.Full:
+                    with lock:
+                        fulls.append(1)
+
+        threads = [threading.Thread(target=hammer) for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=10)
+
+        attempts = n_threads * per_thread
+        assert len(futures) == 4  # exactly the queue capacity
+        assert len(fulls) == attempts - 4
+        assert mb.stats.rejected == len(fulls)
+
+        gate.set()  # unwedge: every accepted submission must still be served
+        assert wedge.result(timeout=5)
+        for f in futures:
+            assert f.result(timeout=5)
+        assert mb.stats.queries == 1 + len(futures)
+    finally:
+        gate.set()
+        mb.stop()
+
+
+# -- satellite: background compaction failures are recorded ----------------
+
+def test_background_compaction_error_recorded_not_swallowed():
+    coord = _StubCoordinator(
+        tail_rows=64, compact_exc=RuntimeError("disk full (injected)")
+    )
+    with ProbeMicroBatcher(
+        coord, "t", max_batch=4, max_wait_s=0.0, compact_tail_over=32, index_name="idx"
+    ) as mb:
+        assert mb.submit(np.zeros(4, np.float32), k=3).result(timeout=5)
+        # wait out the doomed background compaction, then prove serving is fine
+        deadline = time.monotonic() + 10
+        while time.monotonic() < deadline:
+            t = mb._compact_thread
+            if t is not None and t.is_alive():
+                t.join(timeout=10)
+            if mb.stats.compaction_errors:
+                break
+            time.sleep(0.005)
+        coord.tail_rows = 0  # disarm the trigger for the follow-up probe
+        assert mb.submit(np.zeros(4, np.float32), k=3).result(timeout=5)
+    assert coord.compact_calls == [("t", "idx", 32)]
+    assert mb.stats.compactions == 1
+    assert mb.stats.compaction_errors == 1
+    assert mb.stats.last_compaction_error == "RuntimeError: disk full (injected)"
+    assert mb.metrics.counter_value("compaction_errors") == 1
+
+
+# -- overload: a well-behaved tenant survives an abusive one ---------------
+
+def test_overload_two_tenants_well_behaved_protected():
+    """Offered load ≫ capacity from an abusive tenant: admission control
+    makes the abuser absorb the rejections while the well-behaved tenant's
+    deadline hit-rate stays ≥ 0.9 and the queue stays bounded."""
+    coord = _StubCoordinator(service_s=0.01)
+    with ProbeMicroBatcher(
+        coord,
+        "t",
+        max_batch=8,
+        max_wait_s=0.002,
+        max_queue=32,
+        tenant_policies={"abuser": TenantPolicy(rate_qps=50.0, burst=4.0)},
+    ) as mb:
+        q = np.zeros(4, np.float32)
+        abusive_outcomes = {"admitted": 0, "rejected": 0}
+
+        def flood():
+            for _ in range(200):
+                try:
+                    mb.submit(q, k=5, tenant="abuser", deadline_ms=2000)
+                    abusive_outcomes["admitted"] += 1
+                except (AdmissionRejected, queue_mod.Full):
+                    abusive_outcomes["rejected"] += 1
+
+        flooder = threading.Thread(target=flood)
+        flooder.start()
+        well_futs = []
+        for _ in range(30):
+            well_futs.append(mb.submit(q, k=5, tenant="well", deadline_ms=2000))
+            time.sleep(0.005)
+        flooder.join(timeout=10)
+
+        well_ok = 0
+        for f in well_futs:
+            try:
+                f.result(timeout=10)
+                well_ok += 1
+            except Exception:
+                pass
+
+    hit_rate = well_ok / len(well_futs)
+    assert hit_rate >= 0.9, f"well-behaved hit rate {hit_rate:.2f}"
+    # the abuser absorbed the rejections, not the well-behaved tenant
+    assert abusive_outcomes["rejected"] > 100
+    assert mb.stats.admission_rejected == abusive_outcomes["rejected"] or (
+        mb.stats.admission_rejected > 100  # queue.Full counted separately
+    )
+    assert mb.metrics.counter_value("admission_rejected", "well") == 0
+    # bounded queue: nothing ever sat beyond max_queue
+    assert mb._queue.qsize() <= 32
