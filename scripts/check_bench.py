@@ -34,6 +34,17 @@ Absolute gates (hold regardless of any baseline):
     dispatches than the split path, and the fragment-level Stage A faster
     than it (``speedup_vs_split > 1``; both modes timed on the same
     executor in the same interleaved window).
+  - ``table2.filtered_lowsel_bigshard`` (low-selectivity predicate on a
+    shard above the planner's masked-scan cap): the MaskedBeam traversal
+    must beat the replayed over-fetched postfilter plan in its same-window
+    paired timing (``speedup_vs_postfilter > 1``), hold recall vs the scan
+    oracle >= 0.95, and stay within its dispatch budget
+    (``kernel_dispatches <= probe_fragments`` — traversal rows cost no
+    masked-kernel dispatch, at most ONE fused fallback per fragment);
+    vacuous-run guards: the shard really above ``exact_scan_cap``, every
+    batch row really traversed (``masked_beam_rows == batch_queries``
+    with ``plan_mbeam``), and not every traversal row allowed to fall
+    back to the exact scan.
   - ``table2.freshness`` (probe immediately after an append, NO index
     refresh): an unindexed tail must actually be present (``tail_rows >
     0`` and ``stale``), recall vs the fresh scan oracle >= 0.95, ZERO
@@ -227,6 +238,62 @@ def check(
                 f"table2.filtered_mixed_flavor: unified fragment Stage A "
                 f"(speedup_vs_split {mixed.get('speedup_vs_split', 0.0):.2f}x) "
                 "is not faster than the two-dispatch split-flavor path"
+            )
+    bigshard = rows.get("table2.filtered_lowsel_bigshard")
+    if bigshard is not None:
+        # vacuous-run guards first: the row gates nothing unless the shard
+        # is really above the masked-scan cap AND every batch row really
+        # took the MaskedBeam traversal
+        if bigshard.get("shard_rows", 0) <= bigshard.get("exact_scan_cap", 0):
+            failures.append(
+                f"table2.filtered_lowsel_bigshard: shard has "
+                f"{bigshard.get('shard_rows', 0)} rows, not above the "
+                f"masked-scan cap {bigshard.get('exact_scan_cap', 0)} — the "
+                "MaskedBeam band was never exercised"
+            )
+        if not bigshard.get("plan_mbeam", False) or (
+            bigshard.get("masked_beam_rows", 0)
+            < bigshard.get("batch_queries", -1)
+        ):
+            failures.append(
+                f"table2.filtered_lowsel_bigshard: only "
+                f"{bigshard.get('masked_beam_rows', 0)} of "
+                f"{bigshard.get('batch_queries', 0)} batch rows took the "
+                f"MaskedBeam traversal (plan_mbeam="
+                f"{bigshard.get('plan_mbeam', False)}) — the row is not "
+                "measuring the predicate-aware path"
+            )
+        if bigshard.get("masked_beam_fallbacks", 0) >= max(
+            bigshard.get("masked_beam_rows", 0), 1
+        ):
+            failures.append(
+                f"table2.filtered_lowsel_bigshard: every traversal row "
+                f"({bigshard.get('masked_beam_fallbacks', 0)}) under-delivered "
+                "into the exact fallback — the timing just compares the "
+                "fallback path with itself"
+            )
+        if bigshard.get("recall", 0.0) < FILTERED_MIN_RECALL:
+            failures.append(
+                f"table2.filtered_lowsel_bigshard: recall vs oracle "
+                f"{bigshard.get('recall', 0.0):.3f} < {FILTERED_MIN_RECALL}"
+            )
+        if bigshard.get("speedup_vs_postfilter", 0.0) <= 1.0:
+            failures.append(
+                f"table2.filtered_lowsel_bigshard: MaskedBeam throughput "
+                f"{bigshard.get('throughput_qps', 0.0):.1f} qps is not above "
+                f"the replayed postfilter path "
+                f"{bigshard.get('postfilter_qps', 0.0):.1f} qps (same-window "
+                "paired timing)"
+            )
+        if bigshard.get("kernel_dispatches", 0) > bigshard.get(
+            "probe_fragments", 0
+        ):
+            failures.append(
+                f"table2.filtered_lowsel_bigshard: "
+                f"{bigshard.get('kernel_dispatches', 0)} masked-kernel "
+                f"dispatches for {bigshard.get('probe_fragments', 0)} "
+                "fragments — traversal rows must cost no dispatch beyond "
+                "ONE fused fallback per fragment"
             )
     fresh = rows.get("table2.freshness")
     if fresh is not None:

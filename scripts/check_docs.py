@@ -1,0 +1,189 @@
+#!/usr/bin/env python
+"""Documentation-reference gate for CI (scripts/ci.sh --lint).
+
+Reads README.md and docs/architecture.md and fails when either references
+something that does not exist in the repo, so the documentation front door
+cannot rot silently as the code moves:
+
+  - **paths** — any ``src/...``, ``scripts/...``, ``docs/...``,
+    ``examples/...``, ``benchmarks/...`` or ``tests/...`` token (inline or
+    in a fenced block) must exist on disk;
+  - **file names** — a backticked bare file name (``planner.py``,
+    ``ci.sh``, ``ruff.toml``) must exist somewhere in the repo;
+  - **symbols** — a backticked reference that looks like code is resolved
+    against a universe of names harvested by AST-parsing every Python file
+    under ``src/repro``, ``scripts`` and ``benchmarks``:
+
+      * ``CamelCase`` must be a known class;
+      * ``ALL_CAPS`` must be a known constant;
+      * ``snake_case`` (with an underscore) must be a known function,
+        method, attribute, field or parameter;
+      * dotted chains (``planner.resolve``, ``VamanaGraph.search_masked``,
+        ``ProbeReport.plan``) are checked component-wise when the first
+        component is a known module or class — every later component must
+        be a known name.
+
+    Anything else (prose, flags, bench row ids like ``table2.filtered``,
+    hyphenated blob names, expressions) is deliberately skipped: the gate
+    is for rot, not for style, so it only judges tokens it can resolve
+    with confidence.
+
+Exit codes: 0 all references resolve, 1 at least one is dangling,
+2 a documented file itself is missing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import re
+import sys
+from pathlib import Path
+
+DOC_FILES = ("README.md", "docs/architecture.md")
+SOURCE_ROOTS = ("src/repro", "scripts", "benchmarks")
+
+PATH_RE = re.compile(
+    r"(?:src|scripts|docs|examples|benchmarks|tests)/[A-Za-z0-9_./-]+"
+)
+FILENAME_RE = re.compile(r"^[A-Za-z0-9_.-]+\.(?:py|sh|md|json|toml|ini|yml)$")
+INLINE_CODE_RE = re.compile(r"`([^`]+)`")
+FENCE_RE = re.compile(r"```.*?```", re.S)
+IDENT = r"[A-Za-z_][A-Za-z0-9_]*"
+CHAIN_RE = re.compile(rf"^{IDENT}(?:\.{IDENT})*$")
+CAMEL_RE = re.compile(r"^[A-Z][A-Za-z0-9]*$")
+ALL_CAPS_RE = re.compile(r"^[A-Z][A-Z0-9_]+$")
+SNAKE_RE = re.compile(r"^[a-z][a-z0-9]*(?:_[a-z0-9]+)+$")
+
+
+def harvest(root: Path) -> tuple[set, set, set]:
+    """AST-walk the source tree: (module stems, class names, all names)."""
+    modules: set = set()
+    classes: set = set()
+    names: set = set()
+    for src_root in SOURCE_ROOTS:
+        base = root / src_root
+        if not base.is_dir():
+            continue
+        for py in base.rglob("*.py"):
+            modules.add(py.stem)
+            for part in py.relative_to(root).parts[:-1]:
+                modules.add(part)
+            try:
+                tree = ast.parse(py.read_text())
+            except SyntaxError as e:  # a broken source file is its own bug
+                print(f"DOCS-ERROR: cannot parse {py}: {e}", file=sys.stderr)
+                sys.exit(2)
+            for node in ast.walk(tree):
+                if isinstance(node, ast.ClassDef):
+                    classes.add(node.name)
+                    names.add(node.name)
+                elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    names.add(node.name)
+                    a = node.args
+                    for arg in (
+                        a.args + a.posonlyargs + a.kwonlyargs
+                        + ([a.vararg] if a.vararg else [])
+                        + ([a.kwarg] if a.kwarg else [])
+                    ):
+                        names.add(arg.arg)
+                elif isinstance(node, ast.Assign):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            names.add(t.id)
+                        elif isinstance(t, ast.Attribute):
+                            names.add(t.attr)  # self.x = ... style attributes
+                elif isinstance(node, ast.AnnAssign):
+                    if isinstance(node.target, ast.Name):
+                        names.add(node.target.id)  # dataclass fields
+                    elif isinstance(node.target, ast.Attribute):
+                        names.add(node.target.attr)
+    return modules, classes, names
+
+
+def clean_span(span: str) -> str:
+    """A backticked span down to its leading reference: drop a call's
+    argument list, an assignment's right side, trailing punctuation."""
+    for stop in ("(", "=", " "):
+        idx = span.find(stop)
+        if idx >= 0:
+            span = span[:idx]
+    return span.strip().rstrip(".,:;")
+
+
+def check_file(
+    doc: Path, root: Path, modules: set, classes: set, names: set
+) -> list:
+    failures = []
+    text = doc.read_text()
+    rel = doc.relative_to(root)
+
+    for m in PATH_RE.finditer(text):
+        token = m.group(0).rstrip(".,:;)")
+        if not (root / token).exists():
+            failures.append(f"{rel}: path `{token}` does not exist")
+
+    # inline spans only — fenced blocks are full example programs whose
+    # identifiers (loop variables, kwargs) are not documentation claims
+    for m in INLINE_CODE_RE.finditer(FENCE_RE.sub("", text)):
+        span = clean_span(m.group(1))
+        if not span or "/" in span:
+            continue  # paths were already handled above
+        if ALL_CAPS_RE.match(span) and m.group(1).startswith(span + "="):
+            continue  # an env-var assignment (`PYTHONPATH=src ...`), not a constant
+        if FILENAME_RE.match(span):
+            if not any(root.rglob(span)):
+                failures.append(f"{rel}: file `{span}` not found in the repo")
+            continue
+        if not CHAIN_RE.match(span):
+            continue
+        parts = span.split(".")
+        if len(parts) == 1:
+            tok = parts[0]
+            if CAMEL_RE.match(tok) and any(c.islower() for c in tok):
+                if tok not in classes:
+                    failures.append(f"{rel}: class `{tok}` not found")
+            elif ALL_CAPS_RE.match(tok):
+                if tok not in names:
+                    failures.append(f"{rel}: constant `{tok}` not found")
+            elif SNAKE_RE.match(tok):
+                if tok not in names:
+                    failures.append(f"{rel}: symbol `{tok}` not found")
+        elif parts[0] in modules or parts[0] in classes:
+            for comp in parts[1:]:
+                if comp not in names:
+                    failures.append(
+                        f"{rel}: `{span}` — member `{comp}` not found"
+                    )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--root", default=str(Path(__file__).resolve().parent.parent),
+        help="repo root (default: the checkout containing this script)",
+    )
+    args = ap.parse_args(argv)
+    root = Path(args.root)
+
+    modules, classes, names = harvest(root)
+    failures = []
+    for doc_rel in DOC_FILES:
+        doc = root / doc_rel
+        if not doc.is_file():
+            print(f"DOCS-ERROR: {doc_rel} is missing", file=sys.stderr)
+            return 2
+        failures += check_file(doc, root, modules, classes, names)
+
+    if failures:
+        print(f"DOCS-CHECK: {len(failures)} dangling reference(s):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"DOCS-CHECK: ok ({', '.join(DOC_FILES)} — all references resolve)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,7 +10,10 @@
 #             may not).  Also fails if any Python cache artifact
 #             (__pycache__/, .pytest_cache/, *.pyc) is ever TRACKED by
 #             git — .gitignore keeps them out, this keeps them out
-#             forever.
+#             forever.  Finally runs scripts/check_docs.py: every repo
+#             path and public symbol referenced by README.md or
+#             docs/architecture.md must exist in the tree (AST-harvested
+#             symbol universe), so the documentation cannot rot silently.
 #   --tier1   kernel-parity gate first (pytest -m "kernels and not slow":
 #             every op in kernels/ops.py, Pallas-interpret vs ref.py,
 #             including the masked ops' and the multi-mask (Q, N)-plane
@@ -101,6 +104,9 @@ if $run_lint; then
     echo "ruff not installed — falling back to a compileall syntax pass"
     python -m compileall -q src tests benchmarks scripts
   fi
+  # the docs front door must not rot: every path / public symbol referenced
+  # by README.md and docs/architecture.md has to exist in the tree
+  python scripts/check_docs.py
 fi
 
 if $run_tier1; then

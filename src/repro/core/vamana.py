@@ -13,6 +13,9 @@ Entry points:
 - :meth:`VamanaGraph.search`        — batched beam search (full precision)
 - :meth:`VamanaGraph.search_pq`     — beam search with PQ ADC distances and
   exact rerank of the pool (the paper's Stage-A probe)
+- :meth:`VamanaGraph.search_masked` — predicate-aware beam search: masked
+  nodes are traversed for connectivity but never admitted to the result set
+  (the filtered-DiskANN move behind the ``MaskedBeam`` plan op)
 - :meth:`VamanaGraph.insert_batch`  — greedy insert (§7.2 refresh)
 - :meth:`VamanaGraph.tombstone`     — lazy deletes (§7.3)
 """
@@ -159,6 +162,155 @@ def _beam_search(
     state = (pool_ids, pool_dists, pool_exp, visited_ids, visited_dists, jnp.int32(0))
     ids, dists, _exp, vis_ids, vis_dists, _ = jax.lax.while_loop(cond, body, state)
     return ids, dists, vis_ids, vis_dists
+
+
+@functools.partial(
+    jax.jit, static_argnames=("L", "k_res", "max_iters", "metric", "use_pq")
+)
+def _masked_beam_search(
+    vectors: jnp.ndarray,  # (cap, D) f32   (or PQ codes (cap, m) int32 if use_pq)
+    adjacency: jnp.ndarray,  # (cap, R) int32, -1 pad
+    n_valid: jnp.ndarray,  # () int32
+    entry: jnp.ndarray,  # () int32
+    queries: jnp.ndarray,  # (B, D) f32     (or LUTs (B, m, K) f32 if use_pq)
+    mask_unique: jnp.ndarray,  # (m, cap) bool — True = admissible
+    mask_idx: jnp.ndarray,  # (B,) int32 — query row -> mask row
+    L: int,
+    k_res: int,
+    max_iters: int,
+    metric: str,
+    use_pq: bool,
+):
+    """Predicate-aware batched beam search (the filtered-DiskANN traversal).
+
+    The frontier expands exactly like :func:`_beam_search` — masked nodes
+    keep their connectivity role, their distances steer the pool — and every
+    (id, dist) the traversal evaluates is buffered; after the loop ONE
+    mask-gated admit pass (neutralize inadmissible, dedupe by id, top-k_res
+    by distance) builds the admitted result set.  Hoisting the admit out of
+    the loop matters: an in-loop accumulator costs two extra argsorts per
+    iteration, which is what let the unmasked postfilter beam win the
+    paired bench timing.  The admitted SET is identical either way — an
+    in-loop accumulator would only ever see these same candidates.  The
+    mask ships dedup'd: ``mask_unique`` holds the
+    distinct admissibility rows, ``mask_idx`` maps each query to its row
+    (the PR 5 dedup-then-broadcast shape — the (B, cap) plane is expanded by
+    gather on device, never materialized on host).
+
+    Returns (res_ids (B, k_res), res_dists (B, k_res), vis_ids
+    (B, max_iters)).  Result rows ascend by distance; slots the traversal
+    could not fill hold (id == cap, dist == +inf).
+    """
+    cap = vectors.shape[0]
+    B = queries.shape[0]
+    INF = jnp.float32(jnp.inf)
+
+    def dist_to(ids: jnp.ndarray) -> jnp.ndarray:  # ids (B, K) -> (B, K)
+        safe = jnp.clip(ids, 0, cap - 1)
+        if use_pq:
+            codes = vectors[safe]  # (B, K, m) int32
+            g = jnp.take_along_axis(queries, codes.transpose(0, 2, 1), axis=2)
+            d = jnp.sum(g, axis=1)
+        else:
+            v = vectors[safe]  # (B, K, D)
+            d = _pair_dist(queries[:, None, :], v, metric)
+        return jnp.where(ids < n_valid, d, INF)
+
+    R = adjacency.shape[1]
+
+    n_seeds = min(4, L)
+    strides = jnp.arange(n_seeds, dtype=jnp.int32)
+    seeds = jnp.where(
+        strides == 0, entry, (strides * (n_valid // jnp.int32(n_seeds))) % jnp.maximum(n_valid, 1)
+    )
+    pool_ids = jnp.full((B, L), cap, jnp.int32).at[:, :n_seeds].set(
+        jnp.broadcast_to(seeds, (B, n_seeds))
+    )
+    d0 = dist_to(pool_ids[:, :n_seeds])
+    pool_dists = jnp.full((B, L), INF).at[:, :n_seeds].set(d0)
+    pool_exp = jnp.ones((B, L), bool).at[:, :n_seeds].set(False)
+    visited_ids = jnp.full((B, max_iters), cap, jnp.int32)
+    # every (id, dist) the traversal evaluates, buffered for the single
+    # post-loop admit pass: one (B, R) slab per iteration
+    cand_ids = jnp.full((B, max_iters, R), cap, jnp.int32)
+    cand_dists = jnp.full((B, max_iters, R), INF)
+
+    def cond(state):
+        _, dists, exp, _, _, _, it = state
+        return jnp.any(~exp & jnp.isfinite(dists)) & (it < max_iters)
+
+    def body(state):
+        ids, dists, exp, vis_ids, c_ids, c_dists, it = state
+        frontier = jnp.where(~exp & jnp.isfinite(dists), dists, INF)
+        best = jnp.argmin(frontier, axis=1)  # (B,)
+        row = jnp.arange(B)
+        best_id = ids[row, best]
+        active = jnp.isfinite(frontier[row, best])
+        exp = exp.at[row, best].set(True)
+        vis_ids = vis_ids.at[row, it].set(jnp.where(active, best_id, cap))
+        nbrs = adjacency[jnp.clip(best_id, 0, cap - 1)]  # (B, R)
+        nbrs = jnp.where((nbrs >= 0) & active[:, None], nbrs, cap)
+        nd = dist_to(nbrs)
+        c_ids = c_ids.at[:, it, :].set(nbrs)
+        c_dists = c_dists.at[:, it, :].set(nd)
+        cat_ids = jnp.concatenate([ids, nbrs], axis=1)
+        cat_dists = jnp.concatenate([dists, nd], axis=1)
+        cat_exp = jnp.concatenate([exp, jnp.zeros_like(nbrs, bool)], axis=1)
+        key = cat_ids * 2 + (1 - cat_exp.astype(jnp.int32))
+        order = jnp.argsort(key, axis=1)
+        cat_ids = jnp.take_along_axis(cat_ids, order, axis=1)
+        cat_dists = jnp.take_along_axis(cat_dists, order, axis=1)
+        cat_exp = jnp.take_along_axis(cat_exp, order, axis=1)
+        cat_ids, cat_dists, cat_exp = _dedupe_sorted_by_id(cat_ids, cat_dists, cat_exp)
+        order = jnp.argsort(cat_dists, axis=1)[:, :L]
+        ids = jnp.take_along_axis(cat_ids, order, axis=1)
+        dists = jnp.take_along_axis(cat_dists, order, axis=1)
+        exp = jnp.take_along_axis(cat_exp, order, axis=1)
+        return ids, dists, exp, vis_ids, c_ids, c_dists, it + 1
+
+    state = (
+        pool_ids,
+        pool_dists,
+        pool_exp,
+        visited_ids,
+        cand_ids,
+        cand_dists,
+        jnp.int32(0),
+    )
+    _, _, _, vis_ids, cand_ids, cand_dists, _ = jax.lax.while_loop(cond, body, state)
+
+    # the ONE admit pass: seeds ∪ every buffered neighbor offer, gated by the
+    # query's mask row, deduped by id (same id ⇒ same distance, so either
+    # copy may survive), top-k_res by distance.  Inadmissible candidates are
+    # neutralized to (cap, +inf) so they can never displace an admitted node.
+    all_ids = jnp.concatenate(
+        [
+            jnp.broadcast_to(seeds, (B, n_seeds)),
+            cand_ids.reshape(B, max_iters * R),
+        ],
+        axis=1,
+    )
+    all_d = jnp.concatenate([d0, cand_dists.reshape(B, max_iters * R)], axis=1)
+    if all_ids.shape[1] < k_res:  # static: keep the output width at k_res
+        pad = k_res - all_ids.shape[1]
+        all_ids = jnp.pad(all_ids, ((0, 0), (0, pad)), constant_values=cap)
+        all_d = jnp.pad(all_d, ((0, 0), (0, pad)), constant_values=jnp.inf)
+    safe = jnp.clip(all_ids, 0, cap - 1)
+    ok = mask_unique[mask_idx[:, None], safe] & (all_ids < n_valid)
+    all_ids = jnp.where(ok, all_ids, cap)
+    all_d = jnp.where(ok, all_d, INF)
+    order = jnp.argsort(all_ids, axis=1)
+    s_ids = jnp.take_along_axis(all_ids, order, axis=1)
+    s_d = jnp.take_along_axis(all_d, order, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(s_ids[:, :1], bool), s_ids[:, 1:] == s_ids[:, :-1]],
+        axis=1,
+    )
+    s_d = jnp.where(dup, INF, s_d)
+    order = jnp.argsort(s_d, axis=1)[:, :k_res]
+    res_ids = jnp.take_along_axis(s_ids, order, axis=1)
+    res_dists = jnp.take_along_axis(s_d, order, axis=1)
+    return res_ids, res_dists, vis_ids
 
 
 @functools.partial(jax.jit, static_argnames=("R", "alpha", "metric"))
@@ -360,6 +512,135 @@ class VamanaGraph:
             order = np.argsort(dists_np, axis=1)[:, :k]
             out_d[s : s + q.shape[0]] = np.take_along_axis(dists_np, order, axis=1)[: q.shape[0]]
             out_i[s : s + q.shape[0]] = np.take_along_axis(ids_np, order, axis=1)[: q.shape[0]]
+        return out_d, out_i
+
+    def search_masked(
+        self,
+        queries: np.ndarray,
+        k: int,
+        unique_masks: np.ndarray,
+        mask_idx: Optional[np.ndarray] = None,
+        L: Optional[int] = None,
+        batch: int = 64,
+        use_pq: bool = False,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Predicate-aware beam search (the filtered-DiskANN traversal).
+
+        The traversal expands *through* masked nodes — connectivity is never
+        lost to the predicate — but only mask-passing nodes are admitted to
+        the returned top-``k``.  ``unique_masks`` is ``(m, n)`` bool over
+        graph ids (True = admissible; the caller folds tombstones in —
+        admissibility means *predicate AND NOT tombstoned*); ``mask_idx``
+        maps each query to its mask row (default: all queries share row 0).
+        With ``use_pq`` the traversal runs on ADC distances and the admitted
+        pool ∪ admissible visited nodes get a full-precision host rerank.
+
+        Unlike :meth:`search`, ``L`` is NOT floored at ``k``: the admitted
+        result set is built from every neighbor the traversal evaluates
+        (not from the final pool), so a wide admit target ``k`` rides a
+        beam of ordinary depth.  Flooring the depth at the planner-widened
+        ``k`` would make the masked traversal as expensive as the
+        1/frac-deepened postfilter pool it exists to beat.
+
+        Returns (dists (Q, k), ids (Q, k)), each row ascending; slots the
+        traversal could not fill hold ``(+inf, -1)`` — the masked-op
+        sentinel contract, so callers detect under-delivery and fall back to
+        the exact masked scan.
+        """
+        k = int(k)
+        L = int(L) if L is not None else self.params.L
+        queries = np.ascontiguousarray(queries, dtype=np.float32)
+        Q = queries.shape[0]
+        cap = self.vectors.shape[0]
+        unique_masks = np.asarray(unique_masks, dtype=bool)
+        if unique_masks.ndim == 1:
+            unique_masks = unique_masks[None, :]
+        mask_pad = np.zeros((unique_masks.shape[0], cap), dtype=bool)
+        width = min(unique_masks.shape[1], cap)
+        mask_pad[:, :width] = unique_masks[:, :width]
+        idx_np = (
+            np.zeros(Q, np.int32)
+            if mask_idx is None
+            else np.asarray(mask_idx, np.int32)
+        )
+        masks_j = jnp.asarray(mask_pad)
+        out_d = np.full((Q, k), np.inf, np.float32)
+        out_i = np.full((Q, k), -1, np.int64)
+        max_iters = int(1.3 * L) + 8
+        if use_pq:
+            if self.pq is None or self.pq_codes is None:
+                raise ValueError("graph has no PQ data; call attach_pq()")
+            codes_j = jnp.asarray(self.pq_codes.astype(np.int32))
+        else:
+            vecs_j = jnp.asarray(self.vectors)
+        adj_j = jnp.asarray(self.adjacency)
+        for s in range(0, Q, batch):
+            q = queries[s : s + batch]
+            pad = batch - q.shape[0]
+            qb = np.pad(q, ((0, pad), (0, 0))) if pad else q
+            ib = idx_np[s : s + batch]
+            ib = np.pad(ib, (0, pad)) if pad else ib
+            if use_pq:
+                luts = build_luts(self.pq, qb)
+                res_i, _res_d, vis_i = _masked_beam_search(
+                    codes_j,
+                    adj_j,
+                    jnp.int32(self.n),
+                    jnp.int32(self.medoid),
+                    luts,
+                    masks_j,
+                    jnp.asarray(ib),
+                    L,
+                    k,
+                    max_iters,
+                    self.params.metric,
+                    True,
+                )
+                # full-precision rerank over admitted pool ∪ admissible
+                # visited nodes (their vectors are already paged in during
+                # traversal, same as search_pq's rerank)
+                cand = np.concatenate([np.asarray(res_i), np.asarray(vis_i)], axis=1)
+                sort_idx = np.argsort(cand, axis=1, kind="stable")
+                s_ids = np.take_along_axis(cand, sort_idx, axis=1)
+                safe = np.clip(s_ids, 0, cap - 1)
+                adm = mask_pad[ib[:, None], safe] & (s_ids < self.n)
+                dup = np.concatenate(
+                    [
+                        np.zeros((cand.shape[0], 1), bool),
+                        s_ids[:, 1:] == s_ids[:, :-1],
+                    ],
+                    axis=1,
+                )
+                adm &= ~dup
+                vecs = self.vectors[safe]
+                if self.params.metric == "ip":
+                    dists_np = -np.einsum("bcd,bd->bc", vecs, qb)
+                else:
+                    dists_np = np.sum((vecs - qb[:, None, :]) ** 2, axis=-1)
+                dists_np = np.where(adm, dists_np, np.inf)
+                order = np.argsort(dists_np, axis=1)[:, :k]
+                dists_np = np.take_along_axis(dists_np, order, axis=1)
+                ids_np = np.take_along_axis(s_ids, order, axis=1).astype(np.int64)
+            else:
+                res_i, res_d, _vis = _masked_beam_search(
+                    vecs_j,
+                    adj_j,
+                    jnp.int32(self.n),
+                    jnp.int32(self.medoid),
+                    jnp.asarray(qb),
+                    masks_j,
+                    jnp.asarray(ib),
+                    L,
+                    k,
+                    max_iters,
+                    self.params.metric,
+                    False,
+                )
+                dists_np = np.asarray(res_d)
+                ids_np = np.asarray(res_i).astype(np.int64)
+            ids_np = np.where(np.isfinite(dists_np), ids_np, -1)
+            out_d[s : s + q.shape[0]] = dists_np[: q.shape[0]]
+            out_i[s : s + q.shape[0]] = ids_np[: q.shape[0]]
         return out_d, out_i
 
     # -- mutation -----------------------------------------------------------------

@@ -168,6 +168,13 @@ class ProbeReport:
     # shard — the unified kernel fuses exact and PQ-ADC flavors — however
     # many distinct predicates the batch carries
     kernel_dispatches: int = 0
+    # MaskedBeam accounting, summed over the probed shards: query rows
+    # answered by the predicate-aware traversal (big-shard selective
+    # filters), and how many of those under-delivered and were re-answered
+    # by the fused exact-masked fallback — the bench bounds the fallback
+    # rate so a "beam win" can't silently be the fallback doing the work
+    masked_beam_rows: int = 0
+    masked_beam_fallbacks: int = 0
     # the probe-plan IR artifact (runtime/planner.py ProbePlan): the
     # per-(query, shard) op grid the coordinator planned, loggable and
     # round-trippable via to_json/from_json.  None on unplanned paths
@@ -984,6 +991,8 @@ class Coordinator:
                 out.fragments_pruned += rep.fragments_pruned
                 out.row_groups_pruned += rep.row_groups_pruned
                 out.kernel_dispatches += rep.kernel_dispatches
+                out.masked_beam_rows += rep.masked_beam_rows
+                out.masked_beam_fallbacks += rep.masked_beam_fallbacks
         assert out is not None
         out.hits = hits
         # per-group bytes_read snapshots are cumulative since the batch's
@@ -1232,6 +1241,8 @@ class Coordinator:
         report.shards_probed = len(tasks)
         report.cache_hits = sum(1 for r in probe_results if r.cache_hit)
         report.kernel_dispatches = sum(r.kernel_dispatches for r in results)
+        report.masked_beam_rows = sum(r.masked_beam_rows for r in results)
+        report.masked_beam_fallbacks = sum(r.masked_beam_fallbacks for r in results)
         report.bytes_read = self.store.metrics.bytes_read
         if pred is not None:
             report.filtered = True
@@ -1526,6 +1537,8 @@ class Coordinator:
         report.probe_fragments = len(probe_results)
         report.cache_hits = sum(1 for r in probe_results if r.cache_hit)
         report.kernel_dispatches = sum(r.kernel_dispatches for r in results)
+        report.masked_beam_rows = sum(r.masked_beam_rows for r in results)
+        report.masked_beam_fallbacks = sum(r.masked_beam_fallbacks for r in results)
         report.bytes_read = self.store.metrics.bytes_read
         all_pruned: set = set()
         if plans:

@@ -285,6 +285,24 @@ class Executor:
     def _task_dispatches(self) -> int:
         return getattr(self._dispatch_tls, "count", 0)
 
+    def _count_mbeam(self, rows: int, fallbacks: int) -> None:
+        """Tally MaskedBeam accounting for the current task: how many rows
+        the predicate-aware traversal answered, and how many of those
+        under-delivered and were re-answered by the fused exact-masked
+        fallback (thread-local, reset per task like the dispatch count)."""
+        t = self._dispatch_tls
+        t.mbeam_rows = getattr(t, "mbeam_rows", 0) + rows
+        t.mbeam_fallbacks = getattr(t, "mbeam_fallbacks", 0) + fallbacks
+
+    def _task_mbeam(self) -> Tuple[int, int]:
+        t = self._dispatch_tls
+        return getattr(t, "mbeam_rows", 0), getattr(t, "mbeam_fallbacks", 0)
+
+    def _reset_task_tallies(self) -> None:
+        self._dispatch_tls.count = 0
+        self._dispatch_tls.mbeam_rows = 0
+        self._dispatch_tls.mbeam_fallbacks = 0
+
     def _resolve_op(self, task, op, live_mask: np.ndarray, has_pq: bool):
         """Refine a planner op with the measured match count.  ALL
         selectivity thresholds and flavor classification live in
@@ -565,6 +583,8 @@ class Executor:
             )
         if isinstance(final, planner.ExactScan):
             return self._exact_masked(graph, queries, live_mask, final.k)
+        if isinstance(final, planner.MaskedBeam):
+            return self._masked_beam(task, graph, queries, live_mask, final)
         return self._postfilter_beam(task, graph, queries, live_mask, final)
 
     def _postfilter_beam_core(
@@ -611,6 +631,62 @@ class Executor:
         if short.any():
             # beam under-delivered for some queries — kernel-backed exact
             # masked scan returns exactly op.k columns, so rows align
+            rows = np.flatnonzero(short)
+            ed, ei = self._exact_masked(graph, queries[rows], live_mask, op.k)
+            dists[rows] = ed
+            ids[rows] = ei
+        return dists, ids
+
+    def _masked_beam_core(
+        self, task, graph, queries: np.ndarray, unique_masks, row_index, width: int, k: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """The ONE copy of the MaskedBeam machinery, shared by the
+        per-group interpreter and the pooled mask-plane path: the
+        predicate-aware traversal (``VamanaGraph.search_masked`` — masked
+        nodes expand for connectivity, only mask-passing nodes are
+        admitted) at the planner-widened admitted-candidate target, the
+        mask shipped as the dedup'd unique rows + row index.  The widened
+        ``width`` sizes only the ADMIT target — the beam depth stays at
+        ``max(task.L, k)``, because admitted candidates come from every
+        neighbor the traversal evaluates, not just the final pool.  This
+        is the structural edge over PostfilterBeam, whose pool must deepen
+        by 1/frac to surface enough passing rows.  This is a beam pass,
+        not a masked-kernel dispatch — like Beam/PostfilterBeam passes it
+        does not count toward ``kernel_dispatches`` (its fused fallback
+        does)."""
+        w = max(1, min(int(width), graph.num_live))
+        L = max(task.L, min(int(k), graph.num_live))
+        return graph.search_masked(
+            queries,
+            w,
+            np.stack(unique_masks),
+            row_index,
+            L=L,
+            use_pq=task.use_pq and graph.pq is not None,
+        )
+
+    def _masked_beam(
+        self, task, graph, queries: np.ndarray, live_mask: np.ndarray, op
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """MaskedBeam interpretation for a group sharing one mask: the
+        widened predicate-aware traversal delivers ``op.k`` admitted
+        candidates per row; rows it under-delivers fall back to the exact
+        masked scan — a filtered probe never silently returns fewer
+        candidates than the shard actually holds."""
+        dists, ids = self._masked_beam_core(
+            task,
+            graph,
+            queries,
+            [live_mask],
+            np.zeros(queries.shape[0], np.int64),
+            op.width,
+            op.k,
+        )
+        dists = dists[:, : op.k]
+        ids = ids[:, : op.k]
+        short = np.isinf(dists).any(axis=1)
+        self._count_mbeam(queries.shape[0], int(short.sum()))
+        if short.any():
             rows = np.flatnonzero(short)
             ed, ei = self._exact_masked(graph, queries[rows], live_mask, op.k)
             dists[rows] = ed
@@ -759,16 +835,18 @@ class Executor:
         graph, locmap, hit = self._load_shard(
             task.puffin_path, task.blob_offset, task.blob_length, task.blob_codec, task.cache_key
         )
-        self._dispatch_tls.count = 0
+        self._reset_task_tallies()
         if task.predicate is not None:
             dists, ids = self._filtered_search(
                 task, graph, locmap, task.queries, task.predicate, task.plan_op
             )
         else:
             dists, ids = self._shard_search(task, graph)
+        mb_rows, mb_fb = self._task_mbeam()
         result = F.ProbeResult(
             shard_id=task.shard_id, executor_id=self.executor_id, cache_hit=hit,
             kernel_dispatches=self._task_dispatches(),
+            masked_beam_rows=mb_rows, masked_beam_fallbacks=mb_fb,
         )
         for qi in range(task.queries.shape[0]):
             result.candidates.append(
@@ -790,7 +868,7 @@ class Executor:
         result = F.BatchProbeResult(
             shard_id=task.tail_id, executor_id=self.executor_id
         )
-        self._dispatch_tls.count = 0
+        self._reset_task_tallies()
         qidx = np.asarray(task.query_index, np.int64)
         reader = VParquetReader.from_store(self.store, task.file_path)
         vectors = np.ascontiguousarray(
@@ -875,7 +953,7 @@ class Executor:
         result = F.BatchProbeResult(
             shard_id=task.shard_id, executor_id=self.executor_id, cache_hit=hit
         )
-        self._dispatch_tls.count = 0
+        self._reset_task_tallies()
         qidx = np.asarray(task.query_index, np.int64)
         if not task.filters:
             # fully-unfiltered fragments keep the batched beam search: its
@@ -892,6 +970,7 @@ class Executor:
         else:
             self._probe_mask_plane(task, graph, locmap, result, qidx)
         result.kernel_dispatches = self._task_dispatches()
+        result.masked_beam_rows, result.masked_beam_fallbacks = self._task_mbeam()
         result.probe_seconds = time.time() - t0
         return result
 
@@ -958,6 +1037,9 @@ class Executor:
         post_rows: Dict[int, List[int]] = {}
         post_masks: Dict[int, np.ndarray] = {}
         post_ks: Dict[int, int] = {}
+        mbeam_rows: Dict[int, List[int]] = {}  # planner MaskedBeam width -> rows
+        mbeam_masks: Dict[int, np.ndarray] = {}
+        mbeam_ks: Dict[int, int] = {}
         pq_pool = 0
         for bi in range(len(qidx)):
             pred = task.filters[bi]
@@ -987,6 +1069,10 @@ class Executor:
                 exact_rows.append(bi)
                 exact_masks.append(live)
                 exact_keys.append(pred)
+            elif isinstance(final, planner.MaskedBeam):
+                mbeam_rows.setdefault(int(final.width), []).append(bi)
+                mbeam_masks[bi] = live
+                mbeam_ks[bi] = final.k  # planner-resolved k_eff
             else:  # PostfilterBeam
                 post_rows.setdefault(int(final.pool), []).append(bi)
                 post_masks[bi] = live
@@ -1042,9 +1128,104 @@ class Executor:
                 task, graph, task.queries[rows], width=w or None
             )
             _emit(rows, dists, ids)
+        short_rows: List[int] = []
         if post_rows:
-            self._postfilter_pooled(
+            short_rows += self._postfilter_pooled(
                 task, graph, locmap, result, qidx, post_rows, post_masks, post_ks
+            )
+        if mbeam_rows:
+            short_rows += self._masked_beam_pooled(
+                task, graph, locmap, result, qidx, mbeam_rows, mbeam_masks, mbeam_ks
+            )
+        if short_rows:
+            self._fused_exact_fallback(
+                task,
+                graph,
+                locmap,
+                result,
+                qidx,
+                sorted(short_rows),
+                {**post_masks, **mbeam_masks},
+            )
+
+    def _masked_beam_pooled(
+        self,
+        task,
+        graph,
+        locmap,
+        result,
+        qidx: np.ndarray,
+        rows_by_width: Dict[int, List[int]],
+        masks_by_row: Dict[int, np.ndarray],
+        ks_by_row: Dict[int, int],
+    ) -> List[int]:
+        """MaskedBeam rows of a fragment: one predicate-aware traversal per
+        distinct planner width (usually a single pass — resolution keeps
+        the width shared unless match counts cap it), each row's mask
+        riding the dedup'd plane, each row sliced to ITS planner-resolved
+        k.  Returns the under-delivered rows so they join the fragment's
+        ONE fused masked-kernel fallback alongside any short postfilter
+        rows.  Per-query results are identical to interpreting each row
+        alone: traversal rows are independent and the fallback math is
+        per-row."""
+        short_rows: List[int] = []
+        total = 0
+        for width, rows in sorted(rows_by_width.items()):
+            unique, idx = self._dedup_rows(
+                [masks_by_row[bi] for bi in rows],
+                [task.filters[bi] for bi in rows],
+            )
+            dists, ids = self._masked_beam_core(
+                task,
+                graph,
+                task.queries[rows],
+                unique,
+                idx,
+                width,
+                max(ks_by_row[bi] for bi in rows),
+            )
+            total += len(rows)
+            for j, bi in enumerate(rows):
+                kj = ks_by_row[bi]
+                dj, ij = dists[j, :kj], ids[j, :kj]
+                if np.isinf(dj).any():
+                    short_rows.append(bi)
+                else:
+                    result.candidates[int(qidx[bi])] = self._row_candidates(
+                        graph, locmap, dj, ij, task.shard_id
+                    )
+        self._count_mbeam(total, len(short_rows))
+        return short_rows
+
+    def _fused_exact_fallback(
+        self,
+        task,
+        graph,
+        locmap,
+        result,
+        qidx: np.ndarray,
+        short_rows: List[int],
+        masks_by_row: Dict[int, np.ndarray],
+    ) -> None:
+        """ONE fused masked-kernel call answers every beam row the fragment
+        under-delivered — postfilter and masked-beam rows alike — instead
+        of per-predicate (or per-path) fallback dispatches."""
+        k_out = max(1, min(task.k * task.oversample, graph.n))
+        unique, idx = self._dedup_rows(
+            [masks_by_row[bi] for bi in short_rows],
+            [task.filters[bi] for bi in short_rows],
+        )
+        if len(unique) == 1:
+            d, i = self._exact_masked(
+                graph, task.queries[short_rows], unique[0], k_out
+            )
+        else:
+            d, i = self._exact_masked_plane(
+                graph, task.queries[short_rows], unique, idx, k_out
+            )
+        for j, bi in enumerate(short_rows):
+            result.candidates[int(qidx[bi])] = self._row_candidates(
+                graph, locmap, d[j], i[j], task.shard_id
             )
 
     def _postfilter_pooled(
@@ -1057,17 +1238,16 @@ class Executor:
         rows_by_pool: Dict[int, List[int]],
         masks_by_row: Dict[int, np.ndarray],
         ks_by_row: Dict[int, int],
-    ) -> None:
+    ) -> List[int]:
         """PostfilterBeam rows of a fragment: one over-fetched beam pass
         per distinct planner pool (NOT per distinct predicate — usually a
         single pass) through the shared ``_postfilter_beam_core``, each row
         post-filtered under its own mask and sliced to ITS planner-resolved
-        k; every under-delivered row across all pools then joins ONE fused
-        masked-kernel fallback call instead of per-predicate fallbacks.
-        Per-query results are identical to interpreting each row alone:
-        beam rows are independent and the fallback math is per-row."""
-        n = graph.n
-        k_out = max(1, min(task.k * task.oversample, n))
+        k.  Returns the under-delivered rows so they join the fragment's
+        ONE fused masked-kernel fallback call (shared with short
+        masked-beam rows) instead of per-predicate fallbacks.  Per-query
+        results are identical to interpreting each row alone: beam rows are
+        independent and the fallback math is per-row."""
         short_rows: List[int] = []
         for pool, rows in sorted(rows_by_pool.items()):
             plane = np.stack([masks_by_row[bi] for bi in rows])
@@ -1083,23 +1263,7 @@ class Executor:
                     result.candidates[int(qidx[bi])] = self._row_candidates(
                         graph, locmap, dj, ij, task.shard_id
                     )
-        if short_rows:
-            unique, idx = self._dedup_rows(
-                [masks_by_row[bi] for bi in short_rows],
-                [task.filters[bi] for bi in short_rows],
-            )
-            if len(unique) == 1:
-                d, i = self._exact_masked(
-                    graph, task.queries[short_rows], unique[0], k_out
-                )
-            else:
-                d, i = self._exact_masked_plane(
-                    graph, task.queries[short_rows], unique, idx, k_out
-                )
-            for j, bi in enumerate(short_rows):
-                result.candidates[int(qidx[bi])] = self._row_candidates(
-                    graph, locmap, d[j], i[j], task.shard_id
-                )
+        return short_rows
 
     def _rerank(self, task: F.RerankTaskInfo) -> F.RerankResult:
         rows_flat: List[Tuple[str, int, int]] = []

@@ -127,6 +127,11 @@ class ProbeResult:
     # masked top-k kernel calls this task issued (observability for the
     # heterogeneous-filter coalescing win; 0 on pure beam paths)
     kernel_dispatches: int = 0
+    # MaskedBeam accounting: rows answered by the predicate-aware
+    # traversal, and how many of those under-delivered and were
+    # re-answered by the fused exact-masked fallback
+    masked_beam_rows: int = 0
+    masked_beam_fallbacks: int = 0
 
 
 @dataclass
@@ -213,6 +218,11 @@ class BatchProbeResult:
     # group loop — the coordinator sums these into
     # ``ProbeReport.kernel_dispatches`` and the bench gates on the drop
     kernel_dispatches: int = 0
+    # MaskedBeam accounting (summed into the matching ProbeReport fields):
+    # rows answered by the predicate-aware traversal, and how many of
+    # those under-delivered into the fused exact-masked fallback
+    masked_beam_rows: int = 0
+    masked_beam_fallbacks: int = 0
 
 
 def coalesce_batch_probes(tasks: Sequence[object]) -> List[object]:

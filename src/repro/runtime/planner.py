@@ -10,7 +10,8 @@ bit-for-bit parity the multi-mask tests and the ``table2.filtered_hetero``
 bench gate assert.  This module turns the control flow into data:
 
 - **Plan ops** — :class:`ExactScan`, :class:`PQScan`, :class:`Beam`,
-  :class:`PostfilterBeam`, :class:`Skip` — are frozen, hashable,
+  :class:`PostfilterBeam`, :class:`MaskedBeam`, :class:`Skip` — are frozen,
+  hashable,
   JSON-serializable dataclasses annotated with the selectivity evidence
   (``est_frac``) that justified them.
 - **Coordinator planning** (:func:`plan_filtered`, :func:`plan_unfiltered`)
@@ -65,6 +66,13 @@ PQ_POOL_FLOOR = 32
 # but an all-ones row is an O(N·D) exact scan, so only below this shard
 # size; larger shards route those queries to a shared beam pass instead.
 EXACT_SCAN_MAX_ROWS = 4096
+
+# Masked-beam traversal (big shards): the admitted-candidate target is
+# k_eff widened by ~1/est_frac so the traversal converges instead of
+# starving at low selectivity, clamped — beam width drives max_iters
+# (~1.3*L), so beyond ~4x the widened traversal costs more than the
+# exact-masked fallback it is trying to avoid.
+MASKED_BEAM_MAX_WIDEN = 4.0
 
 # Post-filter over-fetch: the beam pool is k_eff * clamp(1/est_frac,
 # MIN_OVERFETCH, MAX_OVERFETCH).  Band-planned shards only reach the
@@ -146,7 +154,26 @@ class PostfilterBeam(PlanOp):
     est_frac: float = 1.0
 
 
-_OP_TYPES = {cls.__name__: cls for cls in (Skip, Beam, ExactScan, PQScan, PostfilterBeam)}
+@dataclass(frozen=True)
+class MaskedBeam(PlanOp):
+    """Predicate-aware graph traversal for a shard too large for even a
+    masked linear scan: the beam expands *through* masked nodes — they keep
+    their connectivity role in the frontier — but only mask-passing nodes
+    are admitted to the result set.  ``width`` is the admitted-candidate
+    target (k_eff widened by ~1/est_frac, clamped to
+    MASKED_BEAM_MAX_WIDEN·k_eff, so the traversal converges instead of
+    starving at low selectivity); the executor falls back to the fused
+    exact-masked scan for queries the widened beam still under-delivers."""
+
+    width: int = 0
+    k: int = 0
+    est_frac: float = 1.0
+
+
+_OP_TYPES = {
+    cls.__name__: cls
+    for cls in (Skip, Beam, ExactScan, PQScan, PostfilterBeam, MaskedBeam)
+}
 
 
 def op_from_json(obj: dict) -> PlanOp:
@@ -170,6 +197,8 @@ def op_token(op: PlanOp) -> str:
         return "mask"
     if isinstance(op, PostfilterBeam):
         return "postfilter"
+    if isinstance(op, MaskedBeam):
+        return "mbeam"
     # ExactScan: the band it came from is legible from the evidence
     if op.est_frac >= 1.0:
         return "exact"  # all-ones scan (unfiltered row in a mixed fragment)
@@ -192,9 +221,38 @@ def postfilter_pool(k: int, oversample: int, frac: float) -> int:
     return int(round(k_eff * over))
 
 
-def band_op(frac: float, *, k: int, oversample: int, use_pq: bool) -> PlanOp:
-    """Map a shard's estimated passing fraction to its plan op."""
+def masked_beam_width(k: int, oversample: int, frac: float) -> int:
+    """Admitted-candidate target for a MaskedBeam: k_eff widened by
+    1/est_frac so a low-selectivity traversal still surfaces k_eff passing
+    nodes, clamped at MASKED_BEAM_MAX_WIDEN (see the constant's note)."""
     k_eff = max(1, k * oversample)
+    widen = min(max(1.0 / max(frac, 1e-6), 1.0), MASKED_BEAM_MAX_WIDEN)
+    return int(round(k_eff * widen))
+
+
+def band_op(
+    frac: float,
+    *,
+    k: int,
+    oversample: int,
+    use_pq: bool,
+    shard_rows: Optional[int] = None,
+) -> PlanOp:
+    """Map a shard's estimated passing fraction to its plan op.
+
+    ``shard_rows`` is the shard-size evidence (``ShardInfo.vector_count``
+    via the routing table): on a shard above EXACT_SCAN_MAX_ROWS every
+    masked linear scan — prefilter or mask band — is the O(N·D) row the
+    size cap exists to forbid, so selective predicates take the
+    predicate-aware :class:`MaskedBeam` traversal instead.  Callers without
+    size evidence (hand-built tasks, :func:`default_filtered_op`) omit it
+    and keep the scan bands."""
+    k_eff = max(1, k * oversample)
+    big = shard_rows is not None and shard_rows > EXACT_SCAN_MAX_ROWS
+    if big and frac <= MASK_MAX_FRAC:
+        return MaskedBeam(
+            width=masked_beam_width(k, oversample, frac), k=k_eff, est_frac=frac
+        )
     if frac <= PREFILTER_MAX_FRAC:
         return ExactScan(k=k_eff, est_frac=frac)
     if frac <= MASK_MAX_FRAC:
@@ -245,7 +303,13 @@ def plan_filtered(
             pruned.append(s.shard_id)
             continue
         frac = _frac(shard_zones) if shard_zones else global_frac
-        ops[s.shard_id] = band_op(frac, k=k, oversample=oversample, use_pq=use_pq)
+        ops[s.shard_id] = band_op(
+            frac,
+            k=k,
+            oversample=oversample,
+            use_pq=use_pq,
+            shard_rows=s.vector_count,
+        )
     return ops, pruned, global_frac
 
 
@@ -329,6 +393,9 @@ def resolve(
         return PQScan(pool=int(pool), k=k_eff, est_frac=op.est_frac)
     if isinstance(op, PostfilterBeam):
         return PostfilterBeam(pool=op.pool, k=k_eff, est_frac=op.est_frac)
+    if isinstance(op, MaskedBeam):
+        width = max(k_eff, min(op.width, match_count))
+        return MaskedBeam(width=int(width), k=k_eff, est_frac=op.est_frac)
     return ExactScan(k=k_eff, est_frac=op.est_frac)
 
 

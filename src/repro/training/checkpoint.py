@@ -63,13 +63,17 @@ class CheckpointManager:
     def save(self, step: int, state: Any, metrics: Optional[dict] = None) -> None:
         """Write leaves (async if configured) then commit the snapshot."""
         self.wait()  # one in-flight save at a time
-        leaves, _ = _flatten_with_paths(state)
+        flat, _ = _flatten_with_paths(state)
+        # materialize to host BEFORE handing off to the save thread: the
+        # train step donates its state buffers, so by the time the thread
+        # ran the device arrays could already be deleted (a lost checkpoint
+        # that only surfaced at restore time)
+        leaves = [(name, np.asarray(leaf)) for name, leaf in flat]
         meta = self.catalog.load_table(self.name)
 
         def do_save():
             files = []
-            for name, leaf in leaves:
-                arr = np.asarray(leaf)
+            for name, arr in leaves:
                 buf = io.BytesIO()
                 np.save(buf, arr, allow_pickle=False)
                 key = f"{meta.location}/data/step-{step:08d}/{name.replace('/', '_')}.npy"

@@ -61,6 +61,22 @@ def _clean_doc():
                 "distinct_filters": 8,
                 "parity_ok": True,
             },
+            "table2.filtered_lowsel_bigshard": {
+                "throughput_qps": 30.0,
+                "postfilter_qps": 12.0,
+                "speedup_vs_postfilter": 2.5,
+                "recall": 1.0,
+                "est_selectivity": 0.15,
+                "shard_rows": 5000,
+                "exact_scan_cap": 4096,
+                "batch_queries": 8,
+                "masked_beam_rows": 8,
+                "masked_beam_fallbacks": 1,
+                "postfilter_dispatches": 1,
+                "kernel_dispatches": 1,
+                "probe_fragments": 1,
+                "plan_mbeam": True,
+            },
             "table2.freshness": {
                 "throughput_qps": 70.0,
                 "recall": 0.98,
@@ -346,6 +362,82 @@ def test_hetero_gates_on_speedup_ratio_not_wall_clock():
         "table2.filtered_hetero" in f and "not above the per-predicate-group" in f
         for f in failures
     )
+
+
+# ---------------------------------------------------------------------------
+# low-selectivity big-shard row gates (the MaskedBeam traversal)
+# ---------------------------------------------------------------------------
+
+
+def test_bigshard_absolute_gates():
+    """The MaskedBeam acceptance gates: losing the paired timing to the
+    replayed postfilter plan, recall below the floor, and dispatches beyond
+    one fused fallback per fragment each fail without any baseline."""
+    cur = _clean_doc()
+    b = cur["rows"]["table2.filtered_lowsel_bigshard"]
+    b["speedup_vs_postfilter"] = 0.8
+    b["recall"] = 0.90
+    b["kernel_dispatches"] = 3  # > probe_fragments: traversal leaked dispatches
+    failures = check_bench.check(cur, None)
+    assert any("not above" in f and "postfilter" in f for f in failures)
+    assert any(
+        "table2.filtered_lowsel_bigshard" in f and "recall vs oracle" in f
+        for f in failures
+    )
+    assert any("ONE fused fallback per fragment" in f for f in failures)
+
+
+def test_bigshard_gate_requires_a_big_shard():
+    """A run whose shard shrank below the masked-scan cap (or whose rows
+    never took the traversal) gates nothing — it must fail rather than
+    pass vacuously."""
+    cur = _clean_doc()
+    cur["rows"]["table2.filtered_lowsel_bigshard"]["shard_rows"] = 2000
+    failures = check_bench.check(cur, None)
+    assert any("not above the masked-scan cap" in f for f in failures)
+    cur = _clean_doc()
+    cur["rows"]["table2.filtered_lowsel_bigshard"]["masked_beam_rows"] = 2
+    failures = check_bench.check(cur, None)
+    assert any("took the MaskedBeam traversal" in f for f in failures)
+    cur = _clean_doc()
+    cur["rows"]["table2.filtered_lowsel_bigshard"]["plan_mbeam"] = False
+    failures = check_bench.check(cur, None)
+    assert any("took the MaskedBeam traversal" in f for f in failures)
+
+
+def test_bigshard_gate_rejects_all_fallback_runs():
+    """If EVERY traversal row under-delivered into the exact fallback, the
+    paired timing compares the fallback with itself — fail loudly."""
+    cur = _clean_doc()
+    cur["rows"]["table2.filtered_lowsel_bigshard"]["masked_beam_fallbacks"] = 8
+    failures = check_bench.check(cur, None)
+    assert any("fallback path with itself" in f for f in failures)
+
+
+def test_bigshard_is_not_wall_clock_gated_but_recall_is():
+    """Like every table2 row: wall clock is informational, recall and the
+    same-window ratio gate."""
+    base = _clean_doc()
+    cur = copy.deepcopy(base)
+    cur["rows"]["table2.filtered_lowsel_bigshard"]["throughput_qps"] *= 0.3
+    cur["rows"]["table2.filtered_lowsel_bigshard"]["postfilter_qps"] *= 0.3
+    assert check_bench.check(cur, base) == []
+    cur["rows"]["table2.filtered_lowsel_bigshard"]["recall"] = 0.97
+    failures = check_bench.check(cur, base)
+    assert any(
+        "table2.filtered_lowsel_bigshard" in f and "recall" in f
+        for f in failures
+    )
+
+
+def test_bigshard_cli_doctored_json(tmp_path):
+    base = _clean_doc()
+    cur = copy.deepcopy(base)
+    cur["rows"]["table2.filtered_lowsel_bigshard"]["speedup_vs_postfilter"] = 0.5
+    cur_p, base_p = tmp_path / "cur.json", tmp_path / "base.json"
+    cur_p.write_text(json.dumps(cur))
+    base_p.write_text(json.dumps(base))
+    assert check_bench.main([str(cur_p), "--baseline", str(base_p)]) == 1
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,7 @@ from repro.runtime.coordinator import IndexConfig
 from repro.runtime.planner import (
     Beam,
     ExactScan,
+    MaskedBeam,
     PlanOp,
     PostfilterBeam,
     ProbePlan,
@@ -68,6 +69,44 @@ def test_band_op_golden():
     assert op.pool == 80 and op.k == 40 and op.est_frac == pytest.approx(0.9)
 
 
+def test_band_op_big_shard_routes_to_masked_beam():
+    """Above EXACT_SCAN_MAX_ROWS every masked linear scan is an O(N·D) hole:
+    both the prefilter and mask bands route to MaskedBeam, widened by
+    ~1/est_frac and clamped at MASKED_BEAM_MAX_WIDEN."""
+    big = planner.EXACT_SCAN_MAX_ROWS + 1
+    assert planner.band_op(0.5, k=10, oversample=4, use_pq=True, shard_rows=big) == (
+        MaskedBeam(width=80, k=40, est_frac=0.5)
+    )
+    # prefilter-band fraction on a big shard: still the traversal, width
+    # clamped at 4x even though 1/0.05 = 20x
+    assert planner.band_op(0.05, k=10, oversample=4, use_pq=True, shard_rows=big) == (
+        MaskedBeam(width=160, k=40, est_frac=0.05)
+    )
+    # above MASK_MAX_FRAC the over-fetched postfilter beam stays cheaper
+    assert isinstance(
+        planner.band_op(0.9, k=10, oversample=4, use_pq=True, shard_rows=big),
+        PostfilterBeam,
+    )
+    # AT the cap (not above) the scan bands still apply
+    assert planner.band_op(
+        0.5, k=10, oversample=4, use_pq=True,
+        shard_rows=planner.EXACT_SCAN_MAX_ROWS,
+    ) == PQScan(pool=160, k=40, est_frac=0.5)
+    # no shard-size evidence (default_filtered_op path): never MaskedBeam
+    assert planner.band_op(0.5, k=10, oversample=4, use_pq=True) == PQScan(
+        pool=160, k=40, est_frac=0.5
+    )
+
+
+def test_masked_beam_width_clamps():
+    k_eff = 40
+    assert planner.masked_beam_width(10, 4, 1.0) == k_eff  # no widening
+    assert planner.masked_beam_width(10, 4, 0.5) == 2 * k_eff
+    assert planner.masked_beam_width(10, 4, 0.25) == 4 * k_eff
+    assert planner.masked_beam_width(10, 4, 0.01) == 4 * k_eff  # ceiling
+    assert planner.masked_beam_width(10, 4, 0.0) == 4 * k_eff  # no div-zero
+
+
 def test_postfilter_pool_clamps():
     k_eff = 40
     # band-planned shards only reach PostfilterBeam above MASK_MAX_FRAC,
@@ -103,6 +142,33 @@ def test_resolve_pins_pq_pool_and_degrades_without_codes():
     assert bigger.pool == big.pool == 160
     no_pq = planner.resolve(op, match_count=500, k=10, oversample=4, has_pq=False)
     assert no_pq == ExactScan(k=40, est_frac=0.5)
+
+
+def test_resolve_masked_beam():
+    big = planner.EXACT_SCAN_MAX_ROWS + 1
+    op = planner.band_op(0.1, k=10, oversample=4, use_pq=False, shard_rows=big)
+    assert op == MaskedBeam(width=160, k=40, est_frac=0.1)
+    # zero and small passing sets collapse before the traversal branch
+    assert planner.resolve(
+        op, match_count=0, k=10, oversample=4, has_pq=False
+    ) == Skip(reason="no-match")
+    assert planner.resolve(
+        op, match_count=100, k=10, oversample=4, has_pq=False
+    ) == ExactScan(k=40, est_frac=0.1)
+    # a not-small passing set keeps the traversal with its planned width —
+    # and k pinned at k_eff, the fused-fallback parity requirement
+    kept = planner.resolve(op, match_count=500, k=10, oversample=4, has_pq=False)
+    assert kept == MaskedBeam(width=160, k=40, est_frac=0.1)
+    # hand-authored/replayed widths cap at the actual match count (never
+    # below k_eff): admitting more than the passing set is meaningless
+    hand = MaskedBeam(width=1000, k=40, est_frac=0.1)
+    assert planner.resolve(
+        hand, match_count=300, k=10, oversample=4, has_pq=False
+    ) == MaskedBeam(width=300, k=40, est_frac=0.1)
+    assert planner.resolve(
+        MaskedBeam(width=10, k=40, est_frac=0.1),
+        match_count=500, k=10, oversample=4, has_pq=False,
+    ).width == 40  # floor: at least k_eff
 
 
 def test_resolve_passes_beam_and_skip_through():
@@ -147,6 +213,10 @@ GOLDEN_OPS = [
     (
         PostfilterBeam(pool=80, k=40, est_frac=0.9),
         {"op": "PostfilterBeam", "pool": 80, "k": 40, "est_frac": 0.9},
+    ),
+    (
+        MaskedBeam(width=160, k=40, est_frac=0.1),
+        {"op": "MaskedBeam", "width": 160, "k": 40, "est_frac": 0.1},
     ),
 ]
 
