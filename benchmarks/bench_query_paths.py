@@ -775,6 +775,158 @@ def main(tiny: bool = False, json_path: str = "BENCH_query_paths.json") -> None:
         "queue_bounded": queue_bounded,
     }
 
+    # ---- zipfian: the serving-tier cache hierarchy under skewed traffic --
+    # Real streams are Zipfian: a Zipf(s≈1.1) stream over a fixed query
+    # pool, two tenants, warm (both cache layers on) vs cold (caches off)
+    # interleaved per event in the SAME timing window.  Repeats within a
+    # tenant hit the semantic result cache at the batcher's door; the first
+    # cross-tenant repeat misses the (per-tenant) semantic layer and hits
+    # the shared shard-probe cache instead.  The row also proves the two
+    # correctness claims the gate enforces: bit-parity with the cache-off
+    # path on non-repeating AND fully-cached traffic, and a refresh commit
+    # invalidating both layers with zero stale answers afterwards.
+    from repro.serving.cache import SemanticResultCache, ShardProbeCache
+
+    pool_n = 16
+    pool = (
+        X[rng.choice(len(X), pool_n)]
+        + 0.05 * rng.normal(size=(pool_n, D)).astype(np.float32)
+    ).astype(np.float32)
+    oracle_zr = c.coordinator.probe_batch("bench", pool, 10, strategy="scan")
+    truth_z = [
+        {(h.file_path, h.row_group, h.row_offset) for h in hits}
+        for hits in oracle_zr.hits
+    ]
+    zipf_s = 1.1
+    zr = np.arange(1, pool_n + 1, dtype=np.float64)
+    pz = zr ** -zipf_s
+    pz /= pz.sum()
+    stream_len = 96 if tiny else 128
+    stream = rng.choice(pool_n, size=stream_len, p=pz)
+    tenant_stream = np.where(rng.random(stream_len) < 0.5, "tenant_a", "tenant_b")
+
+    def _locs_z(rep):
+        return [
+            [(h.file_path, h.row_group, h.row_offset) for h in hs]
+            for hs in rep.hits
+        ]
+
+    shard_cache = ShardProbeCache(max_bytes=8 << 20)
+    sem_cache = SemanticResultCache(max_bytes=4 << 20, distance_threshold=1e-4)
+    warm_lat: list = []
+    cold_lat: list = []
+    warm_answers: list = []
+    mb_warm = ProbeMicroBatcher(
+        c.coordinator, "bench", strategy="diskann", max_wait_s=0.0005,
+        semantic_cache=sem_cache,
+    ).start()
+    mb_cold = ProbeMicroBatcher(
+        c.coordinator, "bench", strategy="diskann", max_wait_s=0.0005
+    ).start()
+    try:
+        for pi, ten in zip(stream, tenant_stream):
+            q = pool[pi]
+            # cold leg first, caches off — same interleaved window
+            c.coordinator.probe_cache = None
+            t0 = time.perf_counter()
+            mb_cold.submit(q, 10, tenant=str(ten)).result(timeout=60)
+            cold_lat.append(time.perf_counter() - t0)
+            # warm leg, both layers on
+            c.coordinator.probe_cache = shard_cache
+            t0 = time.perf_counter()
+            wh = mb_warm.submit(q, 10, tenant=str(ten)).result(timeout=60)
+            warm_lat.append(time.perf_counter() - t0)
+            warm_answers.append((int(pi), wh))
+        sem_hits = mb_warm.stats.semantic_hits
+        sem_misses = mb_warm.stats.semantic_misses
+        shard_hits = shard_cache.stats.hits
+        shard_lookups = shard_cache.stats.hits + shard_cache.stats.misses
+        recall_z = float(np.mean([
+            len({(h.file_path, h.row_group, h.row_offset) for h in hs}
+                & truth_z[pi]) / max(len(truth_z[pi]), 1)
+            for pi, hs in warm_answers
+        ]))
+        # bit-parity proof: a FRESH shard cache on non-repeating traffic
+        # (first pass populates, zero hits) and on a full repeat (every
+        # fragment a hit) both match the cache-off path exactly
+        parity_cache = ShardProbeCache(max_bytes=8 << 20)
+        c.coordinator.probe_cache = None
+        off_rep = c.coordinator.probe_batch("bench", pool, 10, strategy="diskann")
+        c.coordinator.probe_cache = parity_cache
+        on_first = c.coordinator.probe_batch("bench", pool, 10, strategy="diskann")
+        on_replay = c.coordinator.probe_batch("bench", pool, 10, strategy="diskann")
+        parity_ok = bool(
+            _locs_z(off_rep) == _locs_z(on_first) == _locs_z(on_replay)
+        )
+        replay_cache_hits = int(on_replay.shard_cache_hits)
+        # refresh: the snapshot commit is the invalidation token for BOTH
+        # layers; afterwards, caches-on must equal caches-off exactly
+        n_zt = rows_per_group
+        t.append_vectors(
+            clustered(rng, n_zt, D, n_clusters=4),
+            num_files=1,
+            rows_per_group=rows_per_group,
+            attributes={
+                "category": np.asarray(["zfresh"] * n_zt),
+                "price": rng.integers(0, 100, size=n_zt).astype(np.int64),
+            },
+        )
+        c.coordinator.probe_cache = shard_cache
+        c.coordinator.refresh_index("bench", "idx")
+        invalidations = int(
+            shard_cache.stats.invalidations + sem_cache.stats.invalidations
+        )
+        post_on = c.coordinator.probe_batch("bench", pool, 10, strategy="diskann")
+        c.coordinator.probe_cache = None
+        post_off = c.coordinator.probe_batch("bench", pool, 10, strategy="diskann")
+        stale_hits = sum(
+            1 for a, b in zip(_locs_z(post_on), _locs_z(post_off)) if a != b
+        )
+        # the semantic layer must re-probe too (entries evicted at commit)
+        wh_post = mb_warm.submit(
+            pool[0], 10, tenant="tenant_a"
+        ).result(timeout=60)
+        stale_hits += int(mb_warm.stats.semantic_hits > sem_hits)
+        stale_hits += int(
+            [(h.file_path, h.row_group, h.row_offset) for h in wh_post]
+            != _locs_z(post_off)[0]
+        )
+    finally:
+        mb_warm.stop()
+        mb_cold.stop()
+        c.coordinator.probe_cache = None
+    warm_p50, warm_p99 = np.percentile(np.array(warm_lat) * 1e3, [50, 99])
+    cold_p50, cold_p99 = np.percentile(np.array(cold_lat) * 1e3, [50, 99])
+    emit(
+        "table2.zipfian",
+        float(np.sum(warm_lat)) / stream_len * 1e6,
+        f"pool_{pool_n}_stream_{stream_len}_sem_hits_{sem_hits}"
+        f"_shard_hits_{shard_hits}_warm_p50_ms_{warm_p50:.2f}"
+        f"_cold_p50_ms_{cold_p50:.2f}_recall_{recall_z:.3f}"
+        f"_inval_{invalidations}_stale_{stale_hits}_parity_{parity_ok}",
+    )
+    rows["table2.zipfian"] = {
+        "throughput_qps": stream_len / float(np.sum(warm_lat)),
+        "recall": recall_z,
+        "zipf_s": zipf_s,
+        "pool_size": pool_n,
+        "stream_len": stream_len,
+        "semantic_hits": int(sem_hits),
+        "semantic_misses": int(sem_misses),
+        "semantic_hit_rate": sem_hits / stream_len,
+        "shard_hits": int(shard_hits),
+        "shard_lookups": int(shard_lookups),
+        "shard_hit_rate": shard_hits / max(1, shard_lookups),
+        "warm_p50_ms": float(warm_p50),
+        "warm_p99_ms": float(warm_p99),
+        "cold_p50_ms": float(cold_p50),
+        "cold_p99_ms": float(cold_p99),
+        "parity_ok": parity_ok,
+        "replay_cache_hits": replay_cache_hits,
+        "invalidations": invalidations,
+        "stale_hits": int(stale_hits),
+    }
+
     if json_path:
         doc = {
             "meta": {"bench": "bench_query_paths", "tiny": tiny, "n_vec": n_vec,

@@ -58,6 +58,17 @@ Absolute gates (hold regardless of any baseline):
     the submission queue staying bounded (``queue_bounded``) — the
     serving tier's admission-control contract.  Never wall-clock gated:
     the row's qps rides the scheduler like every other table2 row.
+  - ``table2.zipfian`` (Zipf-distributed repeat traffic through the
+    two-layer cache hierarchy): vacuous-run guards first (the stream must
+    be longer than the query pool so repeats actually occur, and the
+    full-repeat parity pass must take >0 shard-cache hits — otherwise
+    ``parity_ok`` compares the uncached path with itself), then both hit
+    rates > 0 (``semantic_hit_rate``, ``shard_hit_rate``), warm p50
+    strictly below cold p50 (same interleaved window, so load cancels),
+    recall vs the scan oracle >= 0.95, bit parity with the cache-off path
+    (``parity_ok``), >0 ``invalidations`` after the mid-bench refresh,
+    and ZERO ``stale_hits`` after the snapshot commit.  Never wall-clock
+    gated against the baseline — warm-vs-cold is its own paired timing.
 
 Baseline gates (vs the committed baseline, benchmarks/baselines/):
   - a THROUGHPUT-GATED row's ``throughput_qps`` dropping more than
@@ -79,8 +90,12 @@ Baseline gates (vs the committed baseline, benchmarks/baselines/):
     on their speedup ratios (numerator and denominator timed in the same
     window, so load cancels).  All rows still feed the
     machine factor and the recall gate.
-  - any row present in the baseline but MISSING from the current run — a
-    silently dropped row would otherwise un-gate itself.
+  - baseline drift, BOTH directions: a row present in the baseline but
+    missing from the current run (a silently dropped row would otherwise
+    un-gate itself), and a row the bench now emits that is missing from
+    the committed baseline (a stale baseline would otherwise exempt the
+    new row from every baseline-relative gate — regenerate the baseline
+    alongside the change that added the row).
   - ANY row's ``recall`` dropping below the baseline at all (recall is
     deterministic under the bench's fixed seeds, so any drop is a real
     behavior change, not timing noise).
@@ -351,12 +366,77 @@ def check(
                 "under overload — backpressure is not holding"
             )
 
+    zipf = rows.get("table2.zipfian")
+    if zipf is not None:
+        # vacuous-run guards: the row gates nothing unless the stream
+        # actually repeated queries and the replay pass actually hit
+        if zipf.get("stream_len", 0) <= zipf.get("pool_size", 0):
+            failures.append(
+                f"table2.zipfian: stream of {zipf.get('stream_len', 0)} over a "
+                f"pool of {zipf.get('pool_size', 0)} never repeats a query — "
+                "the cache hierarchy was never exercised"
+            )
+        if zipf.get("replay_cache_hits", 0) <= 0:
+            failures.append(
+                "table2.zipfian: the full-repeat parity pass took zero shard-"
+                "cache hits — parity_ok compares the uncached path with itself"
+            )
+        if zipf.get("semantic_hit_rate", 0.0) <= 0.0:
+            failures.append(
+                f"table2.zipfian: semantic hit rate "
+                f"{zipf.get('semantic_hit_rate', 0.0):.3f} is not > 0 under "
+                "Zipfian repeats — the result cache never answered"
+            )
+        if zipf.get("shard_hit_rate", 0.0) <= 0.0:
+            failures.append(
+                f"table2.zipfian: shard-probe hit rate "
+                f"{zipf.get('shard_hit_rate', 0.0):.3f} is not > 0 — Stage-A "
+                "fragments were always recomputed"
+            )
+        if zipf.get("warm_p50_ms", float("inf")) >= zipf.get("cold_p50_ms", 0.0):
+            failures.append(
+                f"table2.zipfian: warm p50 {zipf.get('warm_p50_ms', 0.0):.2f} ms "
+                f"is not below cold p50 {zipf.get('cold_p50_ms', 0.0):.2f} ms in "
+                "the same interleaved window — the caches bought nothing"
+            )
+        if zipf.get("recall", 0.0) < FILTERED_MIN_RECALL:
+            failures.append(
+                f"table2.zipfian: recall vs oracle {zipf.get('recall', 0.0):.3f} "
+                f"< {FILTERED_MIN_RECALL} — cached answers are degrading results"
+            )
+        if not zipf.get("parity_ok", False):
+            failures.append(
+                "table2.zipfian: cached probes diverged from the cache-off "
+                "path — the cache changed results, not just latency"
+            )
+        if zipf.get("invalidations", 0) <= 0:
+            failures.append(
+                "table2.zipfian: the post-refresh probe saw zero cache "
+                "invalidations — the snapshot commit is not reaching the caches"
+            )
+        if zipf.get("stale_hits", -1) != 0:
+            failures.append(
+                f"table2.zipfian: {zipf.get('stale_hits', -1)} stale answers "
+                "served after the refresh commit — snapshot invalidation broke"
+            )
+
+    # baseline drift, both directions: a baseline row no bench emits anymore
+    # silently keeps gating thin air, and a bench row missing from the
+    # baseline silently exempts itself from every baseline-relative gate
     for name in sorted(base_rows):
         if name not in rows:
             failures.append(
                 f"{name}: present in the baseline but missing from the current "
                 "run — its gates would silently vanish"
             )
+    if base_rows:
+        for name in sorted(rows):
+            if name not in base_rows:
+                failures.append(
+                    f"{name}: emitted by the bench but missing from the "
+                    "committed baseline — regenerate the baseline alongside "
+                    "the change that added this row"
+                )
     # machine factor: median throughput ratio over rows present in both.
     # When the document carries ``anchor.*`` rows (fixed pure-numpy work no
     # repo change can touch — bench_kernels writes one), the factor comes

@@ -26,6 +26,16 @@
 #             The cases also run inside --tier1 (they are not slow-marked);
 #             this stage re-runs them in isolation so failover regressions
 #             get their own red CI job instead of hiding in the suite.
+#   --cache   serving-tier cache hierarchy suite (pytest -m cache): the
+#             shard-probe and semantic result caches — snapshot-commit
+#             invalidation (refresh/compact can never serve stale),
+#             time-travel isolation, LRU byte bounds, bit parity on every
+#             hit, degraded-answer keying, admission interplay (a semantic
+#             hit consumes no token-bucket budget), and the chaos × cache
+#             crossover.  Like --chaos, the cases also run inside --tier1;
+#             this stage re-runs them in isolation so a cache-coherence
+#             regression gets its own red CI job instead of hiding in the
+#             suite.
 #   --bench   benchmark smoke + regression gate, TWO bench records:
 #               bench_query_paths --tiny  -> BENCH_query_paths.json
 #               bench_kernels             -> BENCH_kernels.json
@@ -72,18 +82,20 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 run_lint=false
 run_tier1=false
 run_chaos=false
+run_cache=false
 run_bench=false
 if [ "$#" -eq 0 ]; then
-  run_lint=true; run_tier1=true; run_chaos=true; run_bench=true
+  run_lint=true; run_tier1=true; run_chaos=true; run_cache=true; run_bench=true
 fi
 for arg in "$@"; do
   case "$arg" in
     --lint)  run_lint=true ;;
     --tier1) run_tier1=true ;;
     --chaos) run_chaos=true ;;
+    --cache) run_cache=true ;;
     --bench) run_bench=true ;;
-    --all)   run_lint=true; run_tier1=true; run_chaos=true; run_bench=true ;;
-    *) echo "usage: $0 [--lint] [--tier1] [--chaos] [--bench] [--all]" >&2; exit 2 ;;
+    --all)   run_lint=true; run_tier1=true; run_chaos=true; run_cache=true; run_bench=true ;;
+    *) echo "usage: $0 [--lint] [--tier1] [--chaos] [--cache] [--bench] [--all]" >&2; exit 2 ;;
   esac
 done
 
@@ -119,6 +131,11 @@ fi
 if $run_chaos; then
   echo "== chaos: executor failover (kill mid-wave, zero queries lost) =="
   python -m pytest -q -m chaos
+fi
+
+if $run_cache; then
+  echo "== cache: serving-tier hierarchy (invalidation, parity, LRU bounds) =="
+  python -m pytest -q -m cache
 fi
 
 if $run_bench; then

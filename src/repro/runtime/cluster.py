@@ -51,6 +51,7 @@ def make_local_cluster(
     enable_speculation: bool = False,
     max_attempts: int = 4,
     lease_ttl: float | None = None,
+    probe_cache=None,
 ) -> LocalCluster:
     store = ObjectStore(os.path.join(root, "s3"))
     catalog = RestCatalog(store)
@@ -60,7 +61,13 @@ def make_local_cluster(
     ]
     pool = ExecutorPool(executors)
     coordinator = Coordinator(
-        catalog, pool, enable_speculation=enable_speculation, max_attempts=max_attempts
+        catalog,
+        pool,
+        enable_speculation=enable_speculation,
+        max_attempts=max_attempts,
+        # optional serving-tier ShardProbeCache — None keeps every probe
+        # fully computed (the default for tests and benches)
+        probe_cache=probe_cache,
     )
     if lease_ttl is not None:
         # chaos / failover tests shrink the shard-lease TTL so a silent

@@ -76,6 +76,7 @@ from repro.runtime import planner
 from repro.runtime.planner import PlanOp, ProbePlan
 from repro.runtime.predicates import Predicate, parse_predicate, row_group_mask
 from repro.runtime.scheduler import ExecutorPool, Scheduler
+from repro.serving.cache import ShardProbeCache, query_digest
 from repro.serving.metrics import MetricsRegistry
 
 TOMBSTONE_REBUILD_THRESHOLD = 0.20  # paper §7.3
@@ -201,6 +202,18 @@ class ProbeReport:
     # The coordinator never sets this — the micro-batcher stamps it so
     # degraded answers are labeled, not silent.
     degraded: Tuple[str, ...] = ()
+    # cache provenance: "shard" when at least one Stage-A fragment was
+    # answered from the coordinator's snapshot-keyed shard-probe cache,
+    # "semantic" on the report a semantic-cache entry carries; None means
+    # the answer was fully computed.  (cache_hits above stays the
+    # executor-local blob-cache count — a different layer.)
+    cache: Optional[str] = None
+    # snapshot the probe resolved its index binding against (None on the
+    # scan path) — the serving tier's semantic cache watermarks on it
+    snapshot_id: Optional[int] = None
+    # (query, shard) Stage-A fragments served from the shard-probe cache,
+    # skipping mask evaluation and the kernel dispatch for that fragment
+    shard_cache_hits: int = 0
 
 
 @dataclass
@@ -226,24 +239,57 @@ class Coordinator:
         enable_speculation: bool = False,
         max_attempts: int = 4,
         metrics: Optional["MetricsRegistry"] = None,
+        probe_cache: Optional[ShardProbeCache] = None,
     ) -> None:
         self.catalog = catalog
         self.store = catalog.store
         self.pool = pool
+        # optional cross-batch Stage-A shard-probe cache (serving/cache.py);
+        # None (the default) keeps every probe fully computed
+        self.probe_cache = probe_cache
         # one serving-tier metrics registry shared with the scheduler and
         # its lease table: counters for re-dispatches, lease grants/expiries
         self.metrics = metrics if metrics is not None else MetricsRegistry()
+        if self.probe_cache is not None and self.probe_cache.metrics is None:
+            self.probe_cache.metrics = self.metrics
         self.scheduler = Scheduler(
             pool,
             enable_speculation=enable_speculation,
             max_attempts=max_attempts,
             metrics=self.metrics,
         )
+        # serving-tier result caches subscribed for push invalidation: a
+        # refresh/compaction commit moves their snapshot watermark at the
+        # commit itself — the pull path (watermarking drained probe
+        # reports) only fires after a probe, which would leave a window
+        # where a cached whole answer for the old snapshot still serves
+        self._result_caches: Dict[str, List[object]] = {}
         # decoded attribute zone maps, keyed by (immutable) puffin path —
         # filtered probes on the serving path must not re-decode the blob
         self._zonemap_cache: Dict[str, Optional[AttrZoneMap]] = {}
         # decoded fresh-tail manifests, keyed by (immutable) tail puffin path
         self._tail_cache: Dict[str, FreshTail] = {}
+
+    # ---------------------------------------------------------- invalidation
+    def register_result_cache(self, table_name: str, cache: object) -> None:
+        """Subscribe a result cache (anything with ``observe_snapshot``) to
+        commit-time invalidation for ``table_name``.  Idempotent."""
+        subscribed = self._result_caches.setdefault(table_name, [])
+        if not any(rc is cache for rc in subscribed):
+            subscribed.append(cache)
+
+    def unregister_result_cache(self, table_name: str, cache: object) -> None:
+        subscribed = self._result_caches.get(table_name, [])
+        self._result_caches[table_name] = [rc for rc in subscribed if rc is not cache]
+
+    def _invalidate_caches(self, table_name: str, new_snapshot_id: int) -> None:
+        """The commit is the invalidation token: drop shard-probe entries
+        keyed by any older snapshot and move every subscribed result
+        cache's watermark, so neither layer can serve a pre-commit answer."""
+        if self.probe_cache is not None:
+            self.probe_cache.invalidate(table_name, new_snapshot_id)
+        for rc in self._result_caches.get(table_name, ()):
+            rc.observe_snapshot(new_snapshot_id)
 
     # ------------------------------------------------------------------ build
     def create_index(self, table_name: str, cfg: IndexConfig) -> BuildReport:
@@ -364,6 +410,8 @@ class Coordinator:
                 "ann.num-shards": str(len(results)),
             },
         )
+        # CREATE INDEX commits a new snapshot too — same invalidation flow
+        self._invalidate_caches(table_name, new_meta.current_snapshot_id)
         stage2 = time.time() - t2
         return BuildReport(
             puffin_path=puffin_path,
@@ -940,9 +988,15 @@ class Coordinator:
                 tail=tail,
                 oversample_override=oversample,
                 replay_plan=replay_plan,
+                cache_ctx=(
+                    (table_name, snap.snapshot_id)
+                    if self.probe_cache is not None
+                    else None
+                ),
             )
         self._apply_tail_report(report, snap, full_tail, served=tail is not None)
         report.batch_size = B
+        report.snapshot_id = snap.snapshot_id
         return report
 
     def _coerce_filters_batch(
@@ -1340,6 +1394,7 @@ class Coordinator:
         tail: Optional[FreshTail] = None,
         oversample_override: Optional[int] = None,
         replay_plan: Optional[ProbePlan] = None,
+        cache_ctx: Optional[Tuple[str, int]] = None,
     ) -> ProbeReport:
         """Batched three-stage distributed probe.
 
@@ -1421,6 +1476,15 @@ class Coordinator:
         fragments_pruned = 0
         ops_grid: List[Dict[int, PlanOp]] = [dict() for _ in range(B)]
         tasks: List[F.BatchProbeTaskInfo] = []
+        # cross-batch shard-probe cache (serving/cache.py): keys carry the
+        # snapshot id, predicate, search params, plan op, and the exact
+        # query bytes, so a hit replays the identical Stage-A fragment
+        cache = self.probe_cache if cache_ctx is not None else None
+        q_digests: List[bytes] = (
+            [query_digest(queries[qi]) for qi in range(B)] if cache is not None else []
+        )
+        cached: Dict[Tuple[int, int], List[F.ProbeCandidate]] = {}
+        cache_puts: List[Tuple[tuple, int, int]] = []  # (key, qi, shard_id)
         for s in routing.shards:
             b = blob_by_index[s.blob_index]
             mixed = shard_filtered.get(s.shard_id, False) and shard_unfiltered.get(
@@ -1450,6 +1514,24 @@ class Coordinator:
                     )
                 if op is not None:
                     ops_grid[qi][s.shard_id] = op
+                if cache is not None:
+                    ckey = (
+                        cache_ctx[0],
+                        cache_ctx[1],
+                        s.shard_id,
+                        pred,
+                        (k, L_eff, use_pq, oversample),
+                        op,
+                        q_digests[qi],
+                    )
+                    ent = cache.get(ckey)
+                    if ent is not None:
+                        # Stage-A hit: skip mask evaluation and the kernel
+                        # dispatch for this fragment; the cached candidates
+                        # re-merge below in this shard's routing slot
+                        cached[(qi, s.shard_id)] = ent.candidates
+                        continue
+                    cache_puts.append((ckey, qi, s.shard_id))
                 tasks.append(
                     F.BatchProbeTaskInfo(
                         task_id=f"probe-{s.shard_id}-q{qi}",
@@ -1498,6 +1580,19 @@ class Coordinator:
         # (appended last, never merged) are the trailing results
         n_shard_results = len(results) - len(tail_tasks)
         probe_results = results[:n_shard_results]
+        tail_results = results[n_shard_results:]
+        by_shard = {r.shard_id: r for r in probe_results}
+        if cache is not None:
+            for ckey, qi, sid in cache_puts:
+                r = by_shard.get(sid)
+                if r is not None:
+                    cache.put(
+                        ckey,
+                        r.candidates.get(qi, []),
+                        table_name=cache_ctx[0],
+                        snapshot_id=cache_ctx[1],
+                        served_by=r.executor_id,
+                    )
         stage_a = time.time() - t0
         # ---- merge + Stage B: exact rerank with per-row ownership ----------
         t1 = time.time()
@@ -1505,7 +1600,19 @@ class Coordinator:
         merged: List[List[F.ProbeCandidate]] = []
         for qi in range(B):
             cands: List[F.ProbeCandidate] = []
-            for r in results:  # shard order == routing order, tail last
+            # routing order (== uncached result order): a cache hit drops
+            # its candidates into exactly the slot the live fragment would
+            # have filled, so the stable sort below ties-break identically
+            # and the final hits are bit-identical to the uncached path
+            for s in routing.shards:
+                hit = cached.get((qi, s.shard_id))
+                if hit is not None:
+                    cands.extend(hit)
+                else:
+                    r = by_shard.get(s.shard_id)
+                    if r is not None:
+                        cands.extend(r.candidates.get(qi, []))
+            for r in tail_results:  # tail fragments merge last, as dispatched
                 cands.extend(r.candidates.get(qi, []))
             cands.sort(key=lambda c: c.approx_distance)
             merged.append(cands[:keep])
@@ -1536,6 +1643,9 @@ class Coordinator:
         report.shards_probed = len(probe_results)
         report.probe_fragments = len(probe_results)
         report.cache_hits = sum(1 for r in probe_results if r.cache_hit)
+        report.shard_cache_hits = len(cached)
+        if cached:
+            report.cache = "shard"
         report.kernel_dispatches = sum(r.kernel_dispatches for r in results)
         report.masked_beam_rows = sum(r.masked_beam_rows for r in results)
         report.masked_beam_fallbacks = sum(r.masked_beam_fallbacks for r in results)
@@ -1760,6 +1870,7 @@ class Coordinator:
                 "ann.refreshed-from": str(base_id),
             },
         )
+        self._invalidate_caches(table_name, new_meta.current_snapshot_id)
         return RefreshReport(
             puffin_path=puffin_new,
             snapshot_id=new_meta.current_snapshot_id,

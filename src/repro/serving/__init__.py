@@ -16,6 +16,8 @@ _LAZY = {
     "MicroBatchStats": ("repro.serving.serve_loop", "MicroBatchStats"),
     "DeviceAnnIndex": ("repro.serving.device_index", "DeviceAnnIndex"),
     "make_probe_fn": ("repro.serving.device_index", "make_probe_fn"),
+    "ShardProbeCache": ("repro.serving.cache", "ShardProbeCache"),
+    "SemanticResultCache": ("repro.serving.cache", "SemanticResultCache"),
 }
 
 __all__ = sorted(_LAZY)

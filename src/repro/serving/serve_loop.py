@@ -33,6 +33,7 @@ from jax.sharding import Mesh, NamedSharding
 
 from repro.models.model import Model, param_shapes
 from repro.models.sharding import DEFAULT_RULES, LogicalRules, logical_to_sharding, spec_for
+from repro.runtime.coordinator import ProbeReport
 from repro.serving.admission import (
     AdmissionController,
     AdmissionRejected,
@@ -77,6 +78,20 @@ class MicroBatchStats:
     # batches / queries served with a degraded (labeled) answer
     degraded_batches: int = 0
     degraded_queries: int = 0
+    # serving-tier cache hierarchy (serving/cache.py): queries answered at
+    # the door by the semantic result cache (no admission token, no
+    # dispatch) vs queries that went through to a probe ...
+    semantic_hits: int = 0
+    semantic_misses: int = 0
+    # ... Stage-A (query, shard) fragments the coordinator's shard-probe
+    # cache answered across this batcher's drained probes ...
+    shard_cache_hits: int = 0
+    # ... semantic entries dropped because a refresh/compaction committed a
+    # new snapshot (mirrors the attached cache's invalidation total), and
+    # entries evicted by the semantic cache's byte budget while inserting
+    # this batcher's answers (the shard cache's counters live on the cache)
+    cache_invalidations: int = 0
+    cache_evictions: int = 0
 
 
 @dataclass
@@ -185,6 +200,7 @@ class ProbeMicroBatcher:
         degradation: Optional[DegradationPolicy] = None,
         force_degrade: str = "auto",
         metrics: Optional[MetricsRegistry] = None,
+        semantic_cache=None,
         **probe_kwargs,
     ) -> None:
         self.coordinator = coordinator
@@ -209,6 +225,11 @@ class ProbeMicroBatcher:
             degradation = DegradationPolicy()
         self.degradation = degradation
         self.force_degrade = force_degrade
+        # optional whole-answer SemanticResultCache (serving/cache.py):
+        # consulted in submit() BEFORE admission — a hit costs no token
+        self.semantic_cache = semantic_cache
+        if semantic_cache is not None and semantic_cache.metrics is None:
+            semantic_cache.metrics = self.metrics
         self.probe_kwargs = probe_kwargs
         self.stats = MicroBatchStats()
         self._stats_lock = threading.Lock()
@@ -222,12 +243,28 @@ class ProbeMicroBatcher:
     # -- lifecycle --------------------------------------------------------
     def start(self) -> "ProbeMicroBatcher":
         if self._thread is None:
+            if self.semantic_cache is not None and hasattr(
+                self.coordinator, "register_result_cache"
+            ):
+                # push invalidation: a refresh/compaction commit moves the
+                # semantic cache's snapshot watermark at the commit itself,
+                # closing the window where a hit could serve a pre-commit
+                # answer before any post-commit report is drained
+                self.coordinator.register_result_cache(
+                    self.table_name, self.semantic_cache
+                )
             self._stop.clear()
             self._thread = threading.Thread(target=self._drain_loop, daemon=True)
             self._thread.start()
         return self
 
     def stop(self) -> None:
+        if self.semantic_cache is not None and hasattr(
+            self.coordinator, "unregister_result_cache"
+        ):
+            self.coordinator.unregister_result_cache(
+                self.table_name, self.semantic_cache
+            )
         if self._thread is not None:
             self._stop.set()
             self._thread.join(timeout=5.0)
@@ -281,13 +318,29 @@ class ProbeMicroBatcher:
         ``stats.rejected``) instead of blocking or queueing unboundedly."""
         if self._thread is None:
             raise RuntimeError("micro-batcher is not running (call start())")
+        q = np.asarray(query, np.float32).reshape(-1)
+        if self.semantic_cache is not None:
+            # semantic result cache: answered at the door — the hit consumes
+            # NO admission token (the tenant didn't use any compute), skips
+            # the queue, and resolves the Future immediately
+            entry = self.semantic_cache.lookup(tenant, q, k, filter)
+            if entry is not None:
+                with self._stats_lock:
+                    self.stats.semantic_hits += 1
+                self.metrics.counter("served", tenant).inc()
+                self.metrics.histogram("latency_ms", tenant).observe(0.0)
+                fut = Future()
+                fut.set_result(list(entry.hits))
+                return fut
+            with self._stats_lock:
+                self.stats.semantic_misses += 1
         if self.admission is not None and not self.admission.admit(tenant):
             with self._stats_lock:
                 self.stats.admission_rejected += 1
             raise AdmissionRejected(tenant)
         now = time.monotonic()
         sub = _Submission(
-            query=np.asarray(query, np.float32).reshape(-1),
+            query=q,
             k=k,
             filter=filter,
             fut=Future(),
@@ -453,10 +506,33 @@ class ProbeMicroBatcher:
                     1 for f in filters if f is not None
                 )
                 self.stats.kernel_dispatches += report.kernel_dispatches
+                self.stats.shard_cache_hits += getattr(report, "shard_cache_hits", 0)
                 self.stats.max_batch_seen = max(self.stats.max_batch_seen, len(items))
                 if labels:
                     self.stats.degraded_batches += 1
                     self.stats.degraded_queries += len(items)
+            # semantic cache maintenance: the report's snapshot id is the
+            # invalidation watermark (a refresh/compaction commit changes
+            # it, evicting every answer computed against the old snapshot).
+            # Answers are cacheable at the k they were ACTUALLY served at —
+            # a shrink_k-degraded answer is keyed under its degraded k_eff
+            # so it can never satisfy a later full-k query; other
+            # degradation steps (drop_oversample, skip_tail) lower quality
+            # at the same k, so those answers are not cached at all.
+            cacheable = self.semantic_cache is not None and all(
+                lbl.startswith("shrink_k") for lbl in labels
+            )
+            if self.semantic_cache is not None:
+                # belt-and-braces pull path (commits through OTHER
+                # coordinators have no hook into this cache); the stats
+                # field mirrors the cache's own total either way
+                self.semantic_cache.observe_snapshot(
+                    getattr(report, "snapshot_id", None)
+                )
+                with self._stats_lock:
+                    self.stats.cache_invalidations = (
+                        self.semantic_cache.stats.invalidations
+                    )
             for s, hits in zip(items, report.hits):
                 # the deadline covers delivery, not just dispatch: a result
                 # that completed late is refused, never served silently late
@@ -468,6 +544,27 @@ class ProbeMicroBatcher:
                 )
                 self.metrics.counter("served", s.tenant).inc()
                 s.fut.set_result(hits)
+                if cacheable:
+                    ev = self.semantic_cache.put(
+                        s.tenant,
+                        s.query,
+                        k_eff,
+                        s.filter,
+                        hits,
+                        snapshot_id=getattr(report, "snapshot_id", None),
+                        report=ProbeReport(
+                            hits=[hits],
+                            strategy=report.strategy,
+                            files_scanned=0,
+                            bytes_read=0,
+                            cache="semantic",
+                            snapshot_id=getattr(report, "snapshot_id", None),
+                            degraded=labels,
+                        ),
+                    )
+                    if ev:
+                        with self._stats_lock:
+                            self.stats.cache_evictions += ev
             self._maybe_compact(report)
 
     def _maybe_compact(self, report) -> None:

@@ -97,3 +97,47 @@ def test_kill_executor_between_waves_loses_no_queries(built_cluster):
 
     _assert_parity(healthy.hits, chaos.hits)
     assert all(not e.endswith(f"@{doomed.executor_id}") for e in chaos.served_by)
+
+
+@pytest.mark.cache
+def test_kill_executor_mid_wave_with_warm_shard_cache(built_cluster):
+    """Chaos × cache: a mid-wave kill with a warm shard-probe cache.
+
+    The cache is warmed with a SUBSET of the batch (so the chaos probe
+    still dispatches live fragments that the doomed executor can hold and
+    lose).  The re-dispatched wave may consult the cache freely — results
+    must stay at exact parity with a healthy cache-off run, and no cache
+    entry written during the chaos wave may attribute ``served_by`` to the
+    dead executor (its held fragments were lost, never answered)."""
+    from repro.serving.cache import ShardProbeCache
+
+    c, t, X, centers, rep = built_cluster
+    Q = X[200:208]
+
+    healthy = c.coordinator.probe_batch("emb", Q, 5, strategy="diskann")
+
+    cache = ShardProbeCache(max_bytes=8 << 20)
+    doomed = c.executors[1]
+    try:
+        c.coordinator.probe_cache = cache
+        # warm phase (healthy): only the first half of the batch
+        c.coordinator.probe_batch("emb", Q[:4], 5, strategy="diskann")
+        warm_keys = {k for k, _ in cache.entries_snapshot()}
+        assert warm_keys, "warm phase must populate the cache"
+
+        doomed.kill_next(1, hold_s=0.05)
+        chaos = c.coordinator.probe_batch("emb", Q, 5, strategy="diskann")
+    finally:
+        doomed.revive()
+        c.coordinator.probe_cache = None
+
+    _assert_parity(healthy.hits, chaos.hits)
+    # the warmed half was served from cache, the rest re-dispatched live
+    assert chaos.shard_cache_hits > 0
+    assert chaos.cache == "shard"
+    assert all(not e.endswith(f"@{doomed.executor_id}") for e in chaos.served_by)
+    # entries ADDED by the chaos wave came from the re-dispatch survivors,
+    # never from the executor that died holding its fragment
+    for key, entry in cache.entries_snapshot():
+        if key not in warm_keys:
+            assert entry.served_by != doomed.executor_id

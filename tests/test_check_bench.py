@@ -104,6 +104,27 @@ def _clean_doc():
                 "degraded_batches": 0,
                 "queue_bounded": True,
             },
+            "table2.zipfian": {
+                "throughput_qps": 20000.0,
+                "recall": 0.98,
+                "zipf_s": 1.1,
+                "pool_size": 16,
+                "stream_len": 96,
+                "semantic_hits": 72,
+                "semantic_misses": 24,
+                "semantic_hit_rate": 0.75,
+                "shard_hits": 18,
+                "shard_lookups": 40,
+                "shard_hit_rate": 0.45,
+                "warm_p50_ms": 0.1,
+                "warm_p99_ms": 5.0,
+                "cold_p50_ms": 120.0,
+                "cold_p99_ms": 200.0,
+                "parity_ok": True,
+                "replay_cache_hits": 12,
+                "invalidations": 54,
+                "stale_hits": 0,
+            },
         },
     }
 
@@ -235,10 +256,118 @@ def test_zone_prune_gate():
     assert any("zone-map pruning" in f for f in failures)
 
 
-def test_new_row_without_baseline_entry_is_not_gated():
+def test_current_row_missing_from_baseline_fails():
+    """Drift check, forward direction: a row the bench emits that the
+    committed baseline lacks means the baseline is stale — the new row
+    would otherwise silently exempt itself from every baseline-relative
+    gate.  (Absolute gates still run on it; but the drift failure is what
+    forces the baseline regeneration alongside the change.)"""
     base = _clean_doc()
     cur = copy.deepcopy(base)
-    cur["rows"]["table2.new_path"] = {"throughput_qps": 0.001, "recall": 0.1}
+    cur["rows"]["table2.new_path"] = {"throughput_qps": 100.0, "recall": 1.0}
+    failures = check_bench.check(cur, base)
+    assert any(
+        "table2.new_path" in f and "missing from the committed baseline" in f
+        for f in failures
+    )
+    # without a baseline there is nothing to drift from: absolute-only runs
+    # (check_bench <file> --baseline '') must not fail on row presence
+    assert check_bench.check(cur, None) == []
+
+
+def test_zipfian_vacuous_stream_fails():
+    """Guard: a stream no longer than the pool never repeats a query, so
+    every hit-rate and parity number is vacuous."""
+    cur = _clean_doc()
+    cur["rows"]["table2.zipfian"]["stream_len"] = 16  # == pool_size
+    failures = check_bench.check(cur, None)
+    assert any("table2.zipfian" in f and "never repeats" in f for f in failures)
+
+
+def test_zipfian_vacuous_parity_pass_fails():
+    """Guard: parity_ok proves nothing if the replay pass took zero
+    shard-cache hits — it compared the uncached path with itself."""
+    cur = _clean_doc()
+    cur["rows"]["table2.zipfian"]["replay_cache_hits"] = 0
+    failures = check_bench.check(cur, None)
+    assert any(
+        "table2.zipfian" in f and "uncached path with itself" in f
+        for f in failures
+    )
+
+
+def test_zipfian_zero_semantic_hit_rate_fails():
+    cur = _clean_doc()
+    cur["rows"]["table2.zipfian"]["semantic_hit_rate"] = 0.0
+    failures = check_bench.check(cur, None)
+    assert any(
+        "table2.zipfian" in f and "result cache never answered" in f
+        for f in failures
+    )
+
+
+def test_zipfian_zero_shard_hit_rate_fails():
+    cur = _clean_doc()
+    cur["rows"]["table2.zipfian"]["shard_hit_rate"] = 0.0
+    failures = check_bench.check(cur, None)
+    assert any(
+        "table2.zipfian" in f and "always recomputed" in f for f in failures
+    )
+
+
+def test_zipfian_warm_not_faster_than_cold_fails():
+    cur = _clean_doc()
+    cur["rows"]["table2.zipfian"]["warm_p50_ms"] = 150.0  # >= cold 120.0
+    failures = check_bench.check(cur, None)
+    assert any(
+        "table2.zipfian" in f and "caches bought nothing" in f for f in failures
+    )
+
+
+def test_zipfian_recall_floor_fails():
+    cur = _clean_doc()
+    cur["rows"]["table2.zipfian"]["recall"] = 0.90
+    failures = check_bench.check(cur, None)
+    assert any("table2.zipfian" in f and "recall" in f for f in failures)
+
+
+def test_zipfian_parity_break_fails():
+    cur = _clean_doc()
+    cur["rows"]["table2.zipfian"]["parity_ok"] = False
+    failures = check_bench.check(cur, None)
+    assert any(
+        "table2.zipfian" in f and "changed results" in f for f in failures
+    )
+
+
+def test_zipfian_zero_invalidations_fails():
+    cur = _clean_doc()
+    cur["rows"]["table2.zipfian"]["invalidations"] = 0
+    failures = check_bench.check(cur, None)
+    assert any(
+        "table2.zipfian" in f and "not reaching the caches" in f
+        for f in failures
+    )
+
+
+def test_zipfian_stale_hits_fail():
+    """Any stale answer after the refresh commit fails — and so does a
+    bench that forgot to record the field at all (default -1)."""
+    cur = _clean_doc()
+    cur["rows"]["table2.zipfian"]["stale_hits"] = 2
+    failures = check_bench.check(cur, None)
+    assert any("table2.zipfian" in f and "stale" in f for f in failures)
+    del cur["rows"]["table2.zipfian"]["stale_hits"]
+    failures = check_bench.check(cur, None)
+    assert any("table2.zipfian" in f and "stale" in f for f in failures)
+
+
+def test_zipfian_never_wall_clock_gated():
+    """The zipfian row rides the scheduler like every table2 row: its
+    absolute qps dropping vs the baseline must not gate."""
+    base = _clean_doc()
+    cur = copy.deepcopy(base)
+    cur["rows"]["table2.zipfian"]["throughput_qps"] *= 0.2
     assert check_bench.check(cur, base) == []
 
 
