@@ -28,9 +28,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.kernels import ops
+from repro.kernels import ops, ref
+from repro.runtime import planner
 
 TIMING_ROUNDS = 16
+
+
+def _recall(got_ids: np.ndarray, want_ids: np.ndarray) -> float:
+    """Mean per-row top-k id overlap (sentinel slots excluded)."""
+    hits = total = 0
+    for qi in range(want_ids.shape[0]):
+        want = set(int(v) for v in want_ids[qi] if v >= 0)
+        got = set(int(v) for v in got_ids[qi] if v >= 0)
+        hits += len(want & got)
+        total += len(want)
+    return hits / max(total, 1)
 
 
 def _masked_delta(dp, dr):
@@ -68,6 +80,34 @@ def main(json_path: str = "BENCH_kernels.json") -> None:
     luts_u = jnp.asarray(rng.normal(size=(32, 12, 256)).astype(np.float32))
     codes_u = jnp.asarray(rng.integers(0, 256, size=(16384, 12)).astype(np.int32))
     flavor_u = jnp.asarray((np.arange(32) % 2).astype(bool))
+    # gather-rerank: 64 queries × 256-candidate pools over the rerank
+    # corpus — the Stage-B pool rerank that used to be a NumPy
+    # (Q, P, D) gather + einsum on the host.  The host comparator below is
+    # that removed code, timed in the same interleaved window so the
+    # speedup_vs_host ratio is load-cancelling.
+    Qg = Q[:64]
+    pool_ids = jnp.asarray(rng.integers(0, 4096, size=(64, 256)).astype(np.int32))
+    Qg_h, X_h, pool_h = np.asarray(Qg), np.asarray(X), np.asarray(pool_ids)
+
+    def host_pool_rerank():
+        safe = np.clip(pool_h, 0, X_h.shape[0] - 1)
+        vecs = X_h[safe]  # (Q, P, D) — the allocation the kernel avoids
+        d = np.sum((vecs - Qg_h[:, None, :]) ** 2, axis=-1)
+        d = np.where(pool_h < 0, np.inf, d)
+        order = np.argsort(d, axis=1)[:, :40]
+        return (
+            np.take_along_axis(d, order, axis=1),
+            np.take_along_axis(pool_h, order, axis=1),
+        )
+
+    # quantized exact-scan flavors: the masked-exact load scored from the
+    # cached pre-quantized stored matrix (exactly what the executor ships);
+    # on non-TPU backends the honest scoring path dequantizes to f32, so
+    # the row records quantized_native=False and check_bench applies the
+    # non-native floor instead of the >1x speedup gate.
+    quantized_native = jax.devices()[0].platform == "tpu"
+    stored_bf, sc_bf = ref.quantize_points(Xm, "bf16")
+    stored_i8, sc_i8 = ref.quantize_points(Xm, "int8")
     # k-means assign: 16384 points × 512 centroids × 96 d
     P = jnp.asarray(rng.normal(size=(16384, 96)).astype(np.float32))
     C = jnp.asarray(rng.normal(size=(512, 96)).astype(np.float32))
@@ -98,6 +138,16 @@ def main(json_path: str = "BENCH_kernels.json") -> None:
         "kernel.unified_masked_topk": lambda: ops.unified_masked_topk(
             Qm, Xm, luts_u, codes_u, planes, flavor_u, 40, backend="ref"
         ),
+        "kernel.masked_exact_topk_bf16": lambda: ops.masked_exact_topk(
+            Qm, stored_bf, mask, 40, backend="ref", dtype="bf16", x_scale=sc_bf
+        ),
+        "kernel.masked_exact_topk_int8": lambda: ops.masked_exact_topk(
+            Qm, stored_i8, mask, 40, backend="ref", dtype="int8", x_scale=sc_i8
+        ),
+        "kernel.gather_rerank": lambda: ops.gather_rerank(
+            Qg, X, pool_ids, 40, backend="ref"
+        ),
+        "host.gather_rerank": host_pool_rerank,
         "kernel.kmeans_assign": lambda: ops.kmeans_assign(P, C, backend="ref"),
         "anchor.numpy_matmul": lambda: A_anchor @ B_anchor,
     }
@@ -146,9 +196,64 @@ def main(json_path: str = "BENCH_kernels.json") -> None:
             10, backend="ref",
         )[0],
     )
+    delta["kernel.gather_rerank"] = _masked_delta(
+        ops.gather_rerank(Qg[:8], X[:256], pool_ids[:8, :32], 10, backend="pallas")[0],
+        ops.gather_rerank(Qg[:8], X[:256], pool_ids[:8, :32], 10, backend="ref")[0],
+    )
+    delta["kernel.masked_exact_topk_bf16"] = _masked_delta(
+        ops.masked_exact_topk(
+            Qm[:8], Xm[:256], mask[:256], 10, backend="pallas", dtype="bf16"
+        )[0],
+        ops.masked_exact_topk(
+            Qm[:8], Xm[:256], mask[:256], 10, backend="ref", dtype="bf16"
+        )[0],
+    )
+    delta["kernel.masked_exact_topk_int8"] = _masked_delta(
+        ops.masked_exact_topk(
+            Qm[:8], Xm[:256], mask[:256], 10, backend="pallas", dtype="int8"
+        )[0],
+        ops.masked_exact_topk(
+            Qm[:8], Xm[:256], mask[:256], 10, backend="ref", dtype="int8"
+        )[0],
+    )
     ip, _ = ops.kmeans_assign(P[:512], C[:128], backend="pallas", tile_n=128, tile_k=64)
     ir, _ = ops.kmeans_assign(P[:512], C[:128], backend="ref")
     agree = float(np.mean(np.asarray(ip) == np.asarray(ir)))
+
+    # ---- quantized recall + unified parity (auto backend, full inputs) ---
+    _fd, f32_ids = ops.masked_exact_topk(Qm, Xm, mask, 40, backend="auto")
+    f32_ids = np.asarray(f32_ids)
+    quant_extras = {}
+    guard_pool = min(planner.quant_guard_pool(40), int(Xm.shape[0]))
+    for row_name, stored, scale in (
+        ("kernel.masked_exact_topk_bf16", stored_bf, sc_bf),
+        ("kernel.masked_exact_topk_int8", stored_i8, sc_i8),
+    ):
+        dt = row_name.rsplit("_", 1)[1]
+        _qd, raw_ids = ops.masked_exact_topk(
+            Qm, stored, mask, 40, backend="auto", dtype=dt, x_scale=scale
+        )
+        _pd, pool_pids = ops.masked_exact_topk(
+            Qm, stored, mask, guard_pool, backend="auto", dtype=dt, x_scale=scale
+        )
+        _gd, guard_ids = ops.gather_rerank(Qm, Xm, pool_pids, 40, backend="auto")
+        quant_extras[row_name] = {
+            "recall_raw": _recall(np.asarray(raw_ids), f32_ids),
+            "recall_post_guard": _recall(np.asarray(guard_ids), f32_ids),
+            "quantized_native": quantized_native,
+        }
+    # unified parity: the fused dispatch answers exactly what the two
+    # split-flavor dispatches answer, row for row, on the full bench load
+    du, iu = ops.unified_masked_topk(
+        Qm, Xm, luts_u, codes_u, planes, flavor_u, 40, backend="auto"
+    )
+    de, ie = ops.masked_exact_topk_multi(Qm, Xm, planes, 40, backend="auto")
+    da, ia = ops.masked_pq_topk_multi(luts_u, codes_u, planes, 40, backend="auto")
+    iu, ie, ia = np.asarray(iu), np.asarray(ie), np.asarray(ia)
+    flav = np.asarray(flavor_u)
+    unified_parity = all(
+        np.array_equal(iu[qi], (ia if flav[qi] else ie)[qi]) for qi in range(iu.shape[0])
+    )
 
     # ---- report ----------------------------------------------------------
     work = {  # per-call work for the derived column
@@ -160,9 +265,14 @@ def main(json_path: str = "BENCH_kernels.json") -> None:
         "kernel.masked_pq_topk_multi": ("glookups", 8 * 32768 * 48),
         # one pass computes both score planes: exact flops + ADC lookups
         "kernel.unified_masked_topk": ("gflops", 2 * 32 * 16384 * 96),
+        "kernel.masked_exact_topk_bf16": ("gflops", 2 * 32 * 16384 * 96),
+        "kernel.masked_exact_topk_int8": ("gflops", 2 * 32 * 16384 * 96),
+        "kernel.gather_rerank": ("gflops", 2 * 64 * 256 * 768),
+        "host.gather_rerank": ("gflops", 2 * 64 * 256 * 768),
         "kernel.kmeans_assign": ("gflops", 2 * 16384 * 512 * 96),
         "anchor.numpy_matmul": ("gflops", 2 * 512 * 512 * 512),
     }
+    f32_scan_qps = 1.0 / best["kernel.masked_exact_topk"]
     rows: dict = {}
     for name in cases:
         s = best[name]
@@ -170,12 +280,29 @@ def main(json_path: str = "BENCH_kernels.json") -> None:
         if name == "anchor.numpy_matmul":
             tail = "machine_speed_anchor"
             extra = {}
+        elif name == "host.gather_rerank":
+            tail = "removed_host_rerank_comparator"
+            extra = {}
         elif name == "kernel.kmeans_assign":
             tail = f"pallas_agree_{agree:.3f}"
             extra = {"pallas_agree": agree}
         else:
             tail = f"pallas_delta_{delta[name]:.2e}"
             extra = {"pallas_delta": delta[name]}
+        if name == "kernel.gather_rerank":
+            # same-window paired ratio vs the removed NumPy host rerank
+            extra["host_qps"] = 1.0 / best["host.gather_rerank"]
+            extra["speedup_vs_host"] = best["host.gather_rerank"] / s
+            tail += f"_vs_host_{extra['speedup_vs_host']:.2f}x"
+        if name in quant_extras:
+            extra.update(quant_extras[name])
+            extra["speedup_vs_f32"] = (1.0 / s) / f32_scan_qps
+            tail += (
+                f"_vs_f32_{extra['speedup_vs_f32']:.2f}x"
+                f"_guard_recall_{extra['recall_post_guard']:.3f}"
+            )
+        if name == "kernel.unified_masked_topk":
+            extra["parity_ok"] = bool(unified_parity)
         emit(name, s * 1e6, f"{unit}_{amount/s/1e9:.2f}_{tail}")
         rows[name] = {"throughput_qps": 1.0 / s, **extra}
 

@@ -70,6 +70,18 @@ Absolute gates (hold regardless of any baseline):
     and ZERO ``stale_hits`` after the snapshot commit.  Never wall-clock
     gated against the baseline — warm-vs-cold is its own paired timing.
 
+  - ``kernel.gather_rerank``: the device pool rerank must beat the removed
+    NumPy host rerank it replaced (``speedup_vs_host > 1``; both sides are
+    timed in the same interleaved window, so load cancels);
+  - ``kernel.unified_masked_topk``: fused-dispatch hits identical to the
+    split-flavor exact+ADC dispatches (``parity_ok``);
+  - quantized scan rows (``kernel.masked_exact_topk_bf16`` / ``_int8``):
+    recall AFTER the full-precision gather-rerank guard >= 0.95
+    (``recall_post_guard``), and speed vs the f32 scan gated by backend —
+    ``speedup_vs_f32 > 1`` when ``quantized_native`` (TPU), else the 0.5x
+    plumbing floor (CPU scoring dequantizes to f32, so quantization buys
+    bandwidth/footprint there, not FLOPs).
+
 Baseline gates (vs the committed baseline, benchmarks/baselines/):
   - a THROUGHPUT-GATED row's ``throughput_qps`` dropping more than
     ``--max-regress`` (default 20%) below the baseline, after normalizing
@@ -127,6 +139,16 @@ DEFAULT_MAX_REGRESS = 0.20
 KERNEL_MAX_REGRESS = 0.35
 RECALL_EPS = 1e-9  # float-representation slack only: ANY real drop fails
 FILTERED_MIN_RECALL = 0.95
+# quantized scan flavors (bf16/int8): recall AFTER the mandatory
+# full-precision gather-rerank guard must stay >= this floor — the guard
+# exists precisely so reduced-precision scanning never costs recall
+QUANT_MIN_RECALL = 0.95
+# speed: on a native backend (TPU) a quantized scan must beat the f32 scan
+# outright; on CPU the honest scoring path dequantizes to f32 (quantization
+# buys memory footprint, not CPU FLOPs — measured ~0.6-0.7x), so the gate
+# only catches a pathological slowdown of the quantized plumbing
+QUANT_NON_NATIVE_SPEED_FLOOR = 0.5
+QUANT_ROWS = ("kernel.masked_exact_topk_bf16", "kernel.masked_exact_topk_int8")
 # Wall-clock baseline gating is reserved for the kernels file: its rows
 # are single-process compute timed in interleaved rounds against a
 # pure-numpy anchor.  NO table2 row is wall-clock gated — every one of
@@ -418,6 +440,47 @@ def check(
             failures.append(
                 f"table2.zipfian: {zipf.get('stale_hits', -1)} stale answers "
                 "served after the refresh commit — snapshot invalidation broke"
+            )
+
+    gather = rows.get("kernel.gather_rerank")
+    if gather is not None:
+        if gather.get("speedup_vs_host", 0.0) <= 1.0:
+            failures.append(
+                f"kernel.gather_rerank: device pool rerank "
+                f"(speedup_vs_host {gather.get('speedup_vs_host', 0.0):.2f}x) is "
+                "not faster than the removed NumPy host rerank it replaced "
+                "(same-window paired timing)"
+            )
+    unified_row = rows.get("kernel.unified_masked_topk")
+    if unified_row is not None and not unified_row.get("parity_ok", True):
+        failures.append(
+            "kernel.unified_masked_topk: fused-dispatch hits diverge from the "
+            "split-flavor exact+ADC dispatches — the unified kernel changed "
+            "results, not just dispatch count"
+        )
+    for name in QUANT_ROWS:
+        qrow = rows.get(name)
+        if qrow is None:
+            continue
+        if qrow.get("recall_post_guard", 0.0) < QUANT_MIN_RECALL:
+            failures.append(
+                f"{name}: post-guard recall "
+                f"{qrow.get('recall_post_guard', 0.0):.3f} < {QUANT_MIN_RECALL} "
+                "— the full-precision gather-rerank guard is not restoring "
+                "the quantized scan's recall"
+            )
+        speed = qrow.get("speedup_vs_f32", 0.0)
+        if qrow.get("quantized_native", False):
+            if speed <= 1.0:
+                failures.append(
+                    f"{name}: native quantized scan (speedup_vs_f32 "
+                    f"{speed:.2f}x) is not faster than the f32 scan"
+                )
+        elif speed < QUANT_NON_NATIVE_SPEED_FLOOR:
+            failures.append(
+                f"{name}: non-native quantized scan (speedup_vs_f32 "
+                f"{speed:.2f}x) fell below the "
+                f"{QUANT_NON_NATIVE_SPEED_FLOOR}x plumbing floor"
             )
 
     # baseline drift, both directions: a baseline row no bench emits anymore

@@ -487,26 +487,36 @@ class VamanaGraph:
                 # already paged in during traversal, so the exact rerank runs
                 # over pool ∪ visited, not just the final PQ-ranked pool —
                 # this is what keeps recall high when PQ noise exceeds the
-                # within-cluster distance gaps.
-                ids_np = np.concatenate([ids_np, np.asarray(vis_ids)], axis=1)
-                # dedupe per row (keep first occurrence, invalidate repeats)
-                sort_idx = np.argsort(ids_np, axis=1, kind="stable")
-                sorted_ids = np.take_along_axis(ids_np, sort_idx, axis=1)
+                # within-cluster distance gaps.  Duplicates, out-of-range ids
+                # and tombstones all fold to the pid=-1 sentinel; the
+                # gather-rerank kernel (kernels/rerank.py) scores the rest
+                # on-device — no (B, C, D) host gather.
+                from repro.kernels import device_cache, ops
+
+                cand = np.concatenate([ids_np, np.asarray(vis_ids)], axis=1)
+                sort_idx = np.argsort(cand, axis=1, kind="stable")
+                sorted_ids = np.take_along_axis(cand, sort_idx, axis=1)
                 dup = np.concatenate(
                     [
-                        np.zeros((ids_np.shape[0], 1), bool),
+                        np.zeros((cand.shape[0], 1), bool),
                         sorted_ids[:, 1:] == sorted_ids[:, :-1],
                     ],
                     axis=1,
                 )
-                ids_np = np.where(dup, self.vectors.shape[0], sorted_ids)
-                safe = np.clip(ids_np, 0, self.vectors.shape[0] - 1)
-                vecs = self.vectors[safe]  # (B, C, D)
-                if self.params.metric == "ip":
-                    dists_np = -np.einsum("bcd,bd->bc", vecs, qb)
-                else:
-                    dists_np = np.sum((vecs - qb[:, None, :]) ** 2, axis=-1)
-                dists_np = np.where(ids_np >= self.n, np.inf, dists_np)
+                safe = np.clip(sorted_ids, 0, self.vectors.shape[0] - 1)
+                bad = dup | (sorted_ids >= self.n) | self.tombstones[safe]
+                pids = np.where(bad, -1, sorted_ids).astype(np.int32)
+                rd, ri = ops.gather_rerank(
+                    jnp.asarray(qb),
+                    device_cache.device_vectors(self),
+                    jnp.asarray(pids),
+                    k,
+                    metric=self.params.metric,
+                    backend="auto",
+                )
+                out_d[s : s + q.shape[0]] = np.asarray(rd)[: q.shape[0]]
+                out_i[s : s + q.shape[0]] = np.asarray(ri, np.int64)[: q.shape[0]]
+                continue
             ts = self.tombstones[np.clip(ids_np, 0, self.vectors.shape[0] - 1)]
             dists_np = np.where(ts | (ids_np >= self.n), np.inf, dists_np)
             order = np.argsort(dists_np, axis=1)[:, :k]
@@ -598,7 +608,11 @@ class VamanaGraph:
                 )
                 # full-precision rerank over admitted pool ∪ admissible
                 # visited nodes (their vectors are already paged in during
-                # traversal, same as search_pq's rerank)
+                # traversal, same as search_pq's rerank): inadmissible rows
+                # fold to pid=-1 and the gather-rerank kernel scores the
+                # rest on-device
+                from repro.kernels import device_cache, ops
+
                 cand = np.concatenate([np.asarray(res_i), np.asarray(vis_i)], axis=1)
                 sort_idx = np.argsort(cand, axis=1, kind="stable")
                 s_ids = np.take_along_axis(cand, sort_idx, axis=1)
@@ -612,15 +626,17 @@ class VamanaGraph:
                     axis=1,
                 )
                 adm &= ~dup
-                vecs = self.vectors[safe]
-                if self.params.metric == "ip":
-                    dists_np = -np.einsum("bcd,bd->bc", vecs, qb)
-                else:
-                    dists_np = np.sum((vecs - qb[:, None, :]) ** 2, axis=-1)
-                dists_np = np.where(adm, dists_np, np.inf)
-                order = np.argsort(dists_np, axis=1)[:, :k]
-                dists_np = np.take_along_axis(dists_np, order, axis=1)
-                ids_np = np.take_along_axis(s_ids, order, axis=1).astype(np.int64)
+                pids = np.where(adm, s_ids, -1).astype(np.int32)
+                rd, ri = ops.gather_rerank(
+                    jnp.asarray(qb),
+                    device_cache.device_vectors(self),
+                    jnp.asarray(pids),
+                    k,
+                    metric=self.params.metric,
+                    backend="auto",
+                )
+                dists_np = np.asarray(rd)
+                ids_np = np.asarray(ri, np.int64)
             else:
                 res_i, res_d, _vis = _masked_beam_search(
                     vecs_j,

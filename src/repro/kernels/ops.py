@@ -55,7 +55,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import autotune, ref
 from repro.kernels.kmeans_assign import kmeans_assign_pallas
 from repro.kernels.masked_topk import (
     MASKED_THRESHOLD,
@@ -66,7 +66,7 @@ from repro.kernels.masked_topk import (
     unified_masked_topk_pallas,
 )
 from repro.kernels.pq_scan import pq_scan_pallas
-from repro.kernels.rerank import rerank_distances_pallas
+from repro.kernels.rerank import gather_rerank_pallas, rerank_distances_pallas
 
 _BIG = jnp.float32(3.4e38)  # ~f32 max; safe "never wins" sentinel
 
@@ -82,6 +82,21 @@ def _resolve(backend: str) -> str:
     if backend == "auto":
         return "pallas" if _on_tpu() else "ref"
     return backend
+
+
+def _tiles(
+    tile_q: Optional[int], tile_n: Optional[int], n_rows: int, d: int, flavor: str
+) -> Tuple[int, int]:
+    """Resolve a wrapper's tile choice: explicit values win; ``None`` asks
+    the autotuner for this (rows, D, flavor) bucket — measured winner from
+    the committed sweep fixture, or the old (8, 128) constants on a miss."""
+    if tile_q is not None and tile_n is not None:
+        return int(tile_q), int(tile_n)
+    auto_q, auto_n = autotune.get_tiles(n_rows, d, flavor)
+    return (
+        int(tile_q) if tile_q is not None else auto_q,
+        int(tile_n) if tile_n is not None else auto_n,
+    )
 
 
 def _pad_to(x: jnp.ndarray, axis: int, multiple: int, value) -> Tuple[jnp.ndarray, int]:
@@ -152,6 +167,19 @@ def _mask_row(mask: jnp.ndarray, tile_n: int) -> jnp.ndarray:
     return m
 
 
+def _quant_inputs(queries: jnp.ndarray, points: jnp.ndarray, dtype: str, x_scale):
+    """Normalize a quantized-scoring call: ``points`` may arrive pre-stored
+    (int8/bf16 from a cached device copy, with its ``x_scale``) or f32 to be
+    quantized here; queries are always quantized per call.  Returns
+    (stored_q, stored_x, q_scale, x_scale)."""
+    want = {"bf16": jnp.bfloat16, "int8": jnp.int8}[dtype]
+    x = jnp.asarray(points)
+    if x.dtype != want:
+        x, x_scale = ref.quantize_points(x, dtype)
+    qs, q_scale = ref.quantize_points(jnp.asarray(queries), dtype)
+    return qs, x, float(q_scale), float(x_scale)
+
+
 def masked_exact_topk(
     queries: jnp.ndarray,
     points: jnp.ndarray,
@@ -160,13 +188,44 @@ def masked_exact_topk(
     *,
     metric: str = "l2",
     backend: str = "auto",
-    tile_q: int = 8,
-    tile_n: int = 128,
+    tile_q: Optional[int] = None,
+    tile_n: Optional[int] = None,
+    dtype: str = "f32",
+    x_scale: float = 1.0,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Masked exact top-k: (Q, D) × (N, D) under a (N,) row bitmask →
-    (dists (Q, k), ids (Q, k)) per the masked-op contract above."""
+    (dists (Q, k), ids (Q, k)) per the masked-op contract above.
+
+    ``dtype`` picks the scoring precision (``f32``/``bf16``/``int8``): for
+    quantized dtypes ``points`` may be the pre-quantized stored matrix (pass
+    its ``x_scale``) or f32 to quantize on the fly; queries quantize per
+    call.  Quantized scores carry value error — callers MUST route the
+    surviving pool through the full-precision :func:`gather_rerank` guard
+    (the planner/executor do)."""
     backend = _resolve(backend)
     k = int(k)
+    flavor = "exact" if dtype == "f32" else f"exact_{dtype}"
+    tile_q, tile_n = _tiles(
+        tile_q, tile_n, points.shape[0], points.shape[1], flavor
+    )
+    if dtype != "f32":
+        qs, xs, q_scale, x_scale = _quant_inputs(queries, points, dtype, x_scale)
+        if backend == "ref":
+            return ref.masked_exact_topk_quant(
+                queries, xs, mask, k, metric=metric, dtype=dtype, x_scale=x_scale
+            )
+        interpret = not _on_tpu()
+        q_pad, q0 = _pad_to(qs, 0, tile_q, 0)
+        x_pad, _n0 = _pad_to(xs, 0, tile_n, 0)
+        q_pad, _ = _pad_to(q_pad, 1, 128, 0)
+        x_pad, _ = _pad_to(x_pad, 1, 128, 0)
+        m = _mask_row(jnp.asarray(mask), tile_n)
+        scales = jnp.asarray([[q_scale, x_scale]], dtype=jnp.float32)
+        out_d, out_i = masked_exact_topk_pallas(
+            q_pad, x_pad, m, k, metric=metric, tile_q=tile_q, tile_n=tile_n,
+            interpret=interpret, scales=scales if dtype == "int8" else None,
+        )
+        return _finalize_masked(out_d, out_i, q0)
     if backend == "ref":
         return ref.masked_exact_topk(queries, points, mask, k, metric=metric)
     interpret = not _on_tpu()
@@ -189,14 +248,15 @@ def masked_pq_topk(
     k: int,
     *,
     backend: str = "auto",
-    tile_q: int = 8,
-    tile_n: int = 128,
+    tile_q: Optional[int] = None,
+    tile_n: Optional[int] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Masked PQ-ADC top-k: per-query LUTs (Q, m, K) × codes (N, m) under a
     (N,) row bitmask → (scores (Q, k), ids (Q, k)) per the masked-op
     contract above."""
     backend = _resolve(backend)
     k = int(k)
+    tile_q, tile_n = _tiles(tile_q, tile_n, codes.shape[0], codes.shape[1], "pq")
     if backend == "ref":
         return ref.masked_pq_topk(luts, codes, mask, k)
     interpret = not _on_tpu()
@@ -226,13 +286,17 @@ def masked_exact_topk_multi(
     *,
     metric: str = "l2",
     backend: str = "auto",
-    tile_q: int = 8,
-    tile_n: int = 128,
+    tile_q: Optional[int] = None,
+    tile_n: Optional[int] = None,
+    dtype: str = "f32",
+    x_scale: float = 1.0,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Per-query-mask exact top-k: (Q, D) × (N, D) under a (Q, N) mask
     PLANE (row q masks query q) → (dists (Q, k), ids (Q, k)) per the
     masked-op contract above.  One kernel call for a whole heterogeneous-
-    predicate batch; Q == 1 dispatches to the single-mask kernel."""
+    predicate batch; Q == 1 dispatches to the single-mask kernel.  Scoring
+    precision dispatch matches :func:`masked_exact_topk` (``dtype`` +
+    ``x_scale``; quantized pools need the :func:`gather_rerank` guard)."""
     masks = jnp.asarray(masks)
     q = queries.shape[0]
     assert masks.shape == (q, points.shape[0]), (masks.shape, queries.shape, points.shape)
@@ -240,9 +304,32 @@ def masked_exact_topk_multi(
         return masked_exact_topk(
             queries, points, masks[0], k,
             metric=metric, backend=backend, tile_q=tile_q, tile_n=tile_n,
+            dtype=dtype, x_scale=x_scale,
         )
     backend = _resolve(backend)
     k = int(k)
+    flavor = "exact" if dtype == "f32" else f"exact_{dtype}"
+    tile_q, tile_n = _tiles(
+        tile_q, tile_n, points.shape[0], points.shape[1], flavor
+    )
+    if dtype != "f32":
+        qs, xs, q_scale, x_scale = _quant_inputs(queries, points, dtype, x_scale)
+        if backend == "ref":
+            return ref.masked_exact_topk_quant(
+                queries, xs, masks, k, metric=metric, dtype=dtype, x_scale=x_scale
+            )
+        interpret = not _on_tpu()
+        q_pad, q0 = _pad_to(qs, 0, tile_q, 0)
+        x_pad, _n0 = _pad_to(xs, 0, tile_n, 0)
+        q_pad, _ = _pad_to(q_pad, 1, 128, 0)
+        x_pad, _ = _pad_to(x_pad, 1, 128, 0)
+        m = _mask_plane(masks, tile_q, tile_n)
+        scales = jnp.asarray([[q_scale, x_scale]], dtype=jnp.float32)
+        out_d, out_i = masked_exact_topk_multi_pallas(
+            q_pad, x_pad, m, k, metric=metric, tile_q=tile_q, tile_n=tile_n,
+            interpret=interpret, scales=scales if dtype == "int8" else None,
+        )
+        return _finalize_masked(out_d, out_i, q0)
     if backend == "ref":
         return ref.masked_exact_topk_multi(queries, points, masks, k, metric=metric)
     interpret = not _on_tpu()
@@ -265,8 +352,8 @@ def masked_pq_topk_multi(
     k: int,
     *,
     backend: str = "auto",
-    tile_q: int = 8,
-    tile_n: int = 128,
+    tile_q: Optional[int] = None,
+    tile_n: Optional[int] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Per-query-mask PQ-ADC top-k: per-query LUTs (Q, m, K) × codes (N, m)
     under a (Q, N) mask plane → (scores (Q, k), ids (Q, k)) per the
@@ -280,6 +367,7 @@ def masked_pq_topk_multi(
         )
     backend = _resolve(backend)
     k = int(k)
+    tile_q, tile_n = _tiles(tile_q, tile_n, codes.shape[0], codes.shape[1], "pq")
     if backend == "ref":
         return ref.masked_pq_topk_multi(luts, codes, masks, k)
     interpret = not _on_tpu()
@@ -303,8 +391,8 @@ def unified_masked_topk(
     *,
     metric: str = "l2",
     backend: str = "auto",
-    tile_q: int = 8,
-    tile_n: int = 128,
+    tile_q: Optional[int] = None,
+    tile_n: Optional[int] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Single-dispatch mixed-flavor masked top-k: (Q, D) × (N, D) exact AND
     (Q, m, K) × (N, m) PQ-ADC under a (Q, N) mask plane, with a per-query
@@ -319,6 +407,9 @@ def unified_masked_topk(
     )
     backend = _resolve(backend)
     k = int(k)
+    tile_q, tile_n = _tiles(
+        tile_q, tile_n, points.shape[0], points.shape[1], "unified"
+    )
     if backend == "ref":
         return ref.unified_masked_topk(
             queries, points, luts, codes, masks, flavor, k, metric=metric
@@ -368,8 +459,10 @@ def masked_exact_topk_dedup(
     *,
     metric: str = "l2",
     backend: str = "auto",
-    tile_q: int = 8,
-    tile_n: int = 128,
+    tile_q: Optional[int] = None,
+    tile_n: Optional[int] = None,
+    dtype: str = "f32",
+    x_scale: float = 1.0,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Dedup'd-plane exact top-k: semantics of ``masked_exact_topk_multi``
     on ``unique_masks[row_index]``, shipping only the unique rows."""
@@ -377,6 +470,7 @@ def masked_exact_topk_dedup(
     return masked_exact_topk_multi(
         queries, points, plane, k,
         metric=metric, backend=backend, tile_q=tile_q, tile_n=tile_n,
+        dtype=dtype, x_scale=x_scale,
     )
 
 
@@ -388,8 +482,8 @@ def masked_pq_topk_dedup(
     k: int,
     *,
     backend: str = "auto",
-    tile_q: int = 8,
-    tile_n: int = 128,
+    tile_q: Optional[int] = None,
+    tile_n: Optional[int] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Dedup'd-plane PQ-ADC top-k: semantics of ``masked_pq_topk_multi`` on
     ``unique_masks[row_index]``, shipping only the unique rows."""
@@ -411,8 +505,8 @@ def unified_masked_topk_dedup(
     *,
     metric: str = "l2",
     backend: str = "auto",
-    tile_q: int = 8,
-    tile_n: int = 128,
+    tile_q: Optional[int] = None,
+    tile_n: Optional[int] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Dedup'd-plane mixed-flavor top-k: ``unified_masked_topk`` on
     ``unique_masks[row_index]``, shipping only the unique rows."""
@@ -423,6 +517,55 @@ def unified_masked_topk_dedup(
     )
 
 
+# -- pooled gather-rerank -----------------------------------------------------
+
+def gather_rerank(
+    queries: jnp.ndarray,
+    points: jnp.ndarray,
+    pool_ids: jnp.ndarray,
+    k: int,
+    *,
+    metric: str = "l2",
+    backend: str = "auto",
+    tile_q: Optional[int] = None,
+    tile_n: Optional[int] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-precision rerank of per-query candidate pools: (Q, D) queries ×
+    (N, D) points under (Q, P) ``pool_ids`` (row q = query q's candidate ids;
+    slots < 0 or >= N are sentinels) → (dists (Q, k), ids (Q, k)), ascending,
+    (+inf, -1) beyond the live pool.  ``k`` may exceed P.
+
+    This is the device replacement for the executor/graph host rerank
+    (NumPy ``vectors[pool]`` gather + einsum): the kernel scores candidates
+    inside the tiled scan and never materializes the (Q, P, D) gather.  It
+    is also the mandatory recall guard behind the quantized (bf16/int8)
+    scan flavors — their pools are re-scored here at f32 before results
+    leave the executor."""
+    backend = _resolve(backend)
+    k = int(k)
+    pids = jnp.asarray(pool_ids).astype(jnp.int32)
+    n0 = points.shape[0]
+    # out-of-range ids (stale pools, clipped host fills) become sentinels
+    pids = jnp.where((pids < 0) | (pids >= n0), -1, pids)
+    if backend == "ref":
+        return ref.gather_rerank(queries, points, pids, k, metric=metric)
+    tile_q, tile_n = _tiles(
+        tile_q, tile_n, points.shape[0], points.shape[1], "gather_rerank"
+    )
+    interpret = not _on_tpu()
+    q_pad, q0 = _pad_to(queries.astype(jnp.float32), 0, tile_q, 0.0)
+    x_pad, _n0 = _pad_to(points.astype(jnp.float32), 0, tile_n, 0.0)
+    q_pad, _ = _pad_to(q_pad, 1, 128, 0.0)
+    x_pad, _ = _pad_to(x_pad, 1, 128, 0.0)
+    pids_pad, _ = _pad_to(pids, 0, tile_q, -1)  # padded queries: empty pools
+    pids_pad, _ = _pad_to(pids_pad, 1, 128, -1)  # pool slots pad with sentinel
+    out_d, out_i = gather_rerank_pallas(
+        q_pad, x_pad, pids_pad, k, metric=metric, tile_q=tile_q, tile_n=tile_n,
+        interpret=interpret,
+    )
+    return _finalize_masked(out_d, out_i, q0)
+
+
 # -- PQ ADC scan ---------------------------------------------------------------
 
 def pq_scan(
@@ -430,13 +573,14 @@ def pq_scan(
     codes: jnp.ndarray,
     *,
     backend: str = "auto",
-    tile_q: int = 8,
-    tile_n: int = 128,
+    tile_q: Optional[int] = None,
+    tile_n: Optional[int] = None,
 ) -> jnp.ndarray:
     """ADC scores (Q, N) from per-query LUTs (Q, m, K) and codes (N, m)."""
     backend = _resolve(backend)
     if backend == "ref":
         return ref.pq_adc_scores(luts, codes)
+    tile_q, tile_n = _tiles(tile_q, tile_n, codes.shape[0], codes.shape[1], "pq")
     interpret = not _on_tpu()
     luts_p, q0 = _pad_to(luts.astype(jnp.float32), 0, tile_q, 0.0)
     codes_p, n0 = _pad_to(codes.astype(jnp.int32), 0, tile_n, 0)

@@ -8,6 +8,8 @@ inside heavily-iterated host-side build loops).
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -153,6 +155,109 @@ def unified_masked_topk(
     d_adc = pq_adc_scores(luts, codes)
     sel = jnp.asarray(flavor).astype(bool).reshape(-1, 1)
     return _masked_topk(jnp.where(sel, d_adc, d_exact), masks, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def gather_rerank(
+    queries: jnp.ndarray,
+    points: jnp.ndarray,
+    pool_ids: jnp.ndarray,
+    k: int,
+    metric: str = "l2",
+):
+    """Exact full-precision rerank of a per-query candidate pool.
+
+    queries (Q, D) f32, points (N, D) f32, pool_ids (Q, P) integer — row q
+    holds query q's candidate ids into ``points``; slots < 0 are sentinels
+    ("no candidate") and stay (+inf, -1).  Returns (dists (Q, k) f32, ids
+    (Q, k) int32) ascending per row, (+inf, -1) beyond the live pool — the
+    same sentinel contract as the masked ops.  ``k`` may exceed P.
+
+    This is the semantic ground truth for the old executor host rerank
+    (``np.clip`` gather + einsum / squared-difference sum): same direct-form
+    L2 so distances agree to float tolerance and ids bit-match on
+    non-degenerate pools."""
+    pids = jnp.asarray(pool_ids).astype(jnp.int32)
+    q = jnp.asarray(queries).astype(jnp.float32)
+    x = jnp.asarray(points).astype(jnp.float32)
+    safe = jnp.clip(pids, 0, x.shape[0] - 1)
+    vecs = x[safe]  # (Q, P, D)
+    if metric == "ip":
+        d = -jnp.einsum("qpd,qd->qp", vecs, q)
+    else:
+        diff = vecs - q[:, None, :]
+        d = jnp.sum(diff * diff, axis=-1)
+    d = jnp.where(pids < 0, jnp.inf, d)
+    p = d.shape[1]
+    k_avail = min(k, p)
+    neg, slot = jax.lax.top_k(-d, k_avail)
+    out_d = -neg
+    out_i = jnp.take_along_axis(pids, slot, axis=1)
+    out_i = jnp.where(jnp.isinf(out_d), -1, out_i).astype(jnp.int32)
+    if k_avail < k:
+        pad = ((0, 0), (0, k - k_avail))
+        out_d = jnp.pad(out_d, pad, constant_values=jnp.inf)
+        out_i = jnp.pad(out_i, pad, constant_values=-1)
+    return out_d.astype(jnp.float32), out_i
+
+
+# -- quantized scoring --------------------------------------------------------
+#
+# bf16/int8 are *storage + matmul-rate* levers: values are quantized, the
+# accumulation stays f32 (bf16) / int32 (int8).  The oracles emulate exactly
+# that — dequantize the stored values and score in f32 — so they predict the
+# recall of the quantized kernels bit-for-bit at the value level, and on
+# hardware without native reduced-precision matmul units they double as the
+# production CPU path (quantization there buys memory footprint, not FLOPs).
+
+SCORE_DTYPES = ("f32", "bf16", "int8")
+
+
+def quantize_points(points: jnp.ndarray, dtype: str):
+    """Quantize a point matrix for reduced-precision scoring.
+
+    Returns (stored, scale): ``bf16`` stores bfloat16 values (scale 1.0);
+    ``int8`` stores symmetric per-tensor int8 with ``scale = max|x| / 127``;
+    ``f32`` passes through.  Dequantization is ``stored.astype(f32) *
+    scale`` in every case."""
+    x = jnp.asarray(points)
+    if dtype == "f32":
+        return x.astype(jnp.float32), 1.0
+    if dtype == "bf16":
+        return x.astype(jnp.bfloat16), 1.0
+    if dtype == "int8":
+        scale = float(jnp.max(jnp.abs(x.astype(jnp.float32)))) / 127.0
+        scale = scale or 1.0
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+        return q.astype(jnp.int8), scale
+    raise ValueError(f"unknown score dtype {dtype!r}")
+
+
+def dequantize_points(stored: jnp.ndarray, scale: float) -> jnp.ndarray:
+    return stored.astype(jnp.float32) * jnp.float32(scale)
+
+
+def masked_exact_topk_quant(
+    queries: jnp.ndarray,
+    points: jnp.ndarray,
+    mask: jnp.ndarray,
+    k: int,
+    *,
+    metric: str = "l2",
+    dtype: str = "bf16",
+    x_scale: float = 1.0,
+):
+    """Quantized-scoring oracle for the masked exact scan: ``points`` is the
+    STORED (quantized) matrix from :func:`quantize_points`; queries are
+    quantized per call with their own scale.  The scores carry quantization
+    error — callers restore recall by feeding the surviving pool through the
+    full-precision :func:`gather_rerank` guard.  ``mask`` may be (N,) or a
+    (Q, N) plane."""
+    xq = dequantize_points(points, x_scale)
+    qs, q_scale = quantize_points(queries, dtype)
+    qq = dequantize_points(qs, q_scale)
+    fn = l2_distances if metric == "l2" else ip_distances
+    return _masked_topk(fn(qq, xq), mask, k)
 
 
 def kmeans_assign(points: jnp.ndarray, centroids: jnp.ndarray):

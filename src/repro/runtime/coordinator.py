@@ -676,8 +676,15 @@ class Coordinator:
         L: Optional[int] = None,
         filter: Optional[object] = None,
         include_tail: bool = True,
+        scan_dtype: str = "f32",
     ) -> ProbeReport:
         """Vector top-k query.  ``strategy``: auto | diskann | centroid | scan.
+
+        ``scan_dtype`` (``f32`` | ``bf16`` | ``int8``) selects the scoring
+        precision of planner-emitted ExactScan ops; reduced-precision scans
+        always restore full-precision distances through the gather-rerank
+        guard (planner.quant_guard_pool), so only Stage-A scan bandwidth —
+        not the returned distances — is quantized.
 
         ``filter`` pushes an attribute predicate (a
         :class:`repro.runtime.predicates.Predicate` or a SQL WHERE fragment
@@ -723,6 +730,7 @@ class Coordinator:
                     self._read_zonemap(reader, puffin_path) if pred is not None else None
                 ),
                 tail=tail,
+                scan_dtype=scan_dtype,
             )
         self._apply_tail_report(report, snap, full_tail, served=tail is not None)
         return report
@@ -894,6 +902,7 @@ class Coordinator:
         include_tail: bool = True,
         oversample: Optional[int] = None,
         replay_plan: Optional[ProbePlan] = None,
+        scan_dtype: str = "f32",
     ) -> ProbeReport:
         """Batched vector top-k over ``queries (B, dim)``.
 
@@ -986,6 +995,7 @@ class Coordinator:
                     else None
                 ),
                 tail=tail,
+                scan_dtype=scan_dtype,
                 oversample_override=oversample,
                 replay_plan=replay_plan,
                 cache_ctx=(
@@ -1177,6 +1187,7 @@ class Coordinator:
         pred: Optional[Predicate] = None,
         zonemap: Optional[AttrZoneMap] = None,
         tail: Optional[FreshTail] = None,
+        scan_dtype: str = "f32",
     ) -> ProbeReport:
         """Three-stage distributed probe (paper §6, Figure 3).  With a
         predicate, the zone map first prunes shards whose member row groups
@@ -1194,7 +1205,8 @@ class Coordinator:
         plan: Optional[ProbePlan] = None
         if pred is not None:
             ops, pruned, est_frac = planner.plan_filtered(
-                pred, zonemap, routing, k=k, oversample=oversample, use_pq=use_pq
+                pred, zonemap, routing, k=k, oversample=oversample,
+                use_pq=use_pq, scan_dtype=scan_dtype,
             )
         tail_list = tail.row_group_list() if tail is not None else []
         tail_ops: Dict[int, PlanOp] = (
@@ -1392,6 +1404,7 @@ class Coordinator:
         preds: Optional[List[Optional[Predicate]]] = None,
         zonemap: Optional[AttrZoneMap] = None,
         tail: Optional[FreshTail] = None,
+        scan_dtype: str = "f32",
         oversample_override: Optional[int] = None,
         replay_plan: Optional[ProbePlan] = None,
         cache_ctx: Optional[Tuple[str, int]] = None,
@@ -1455,6 +1468,7 @@ class Coordinator:
                     plans[p] = planner.plan_filtered(
                         p, zonemap, routing,
                         k=k, oversample=oversample, use_pq=use_pq,
+                        scan_dtype=scan_dtype,
                     )
         # pre-pass: which shards end up with MIXED fragments (filtered and
         # unfiltered queries coalesced together)?  An unfiltered query on a

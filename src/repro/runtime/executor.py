@@ -29,7 +29,7 @@ from repro.runtime.predicates import row_group_mask
 from repro.core.vamana import VamanaGraph, VamanaParams, build_vamana
 from repro.core.pq import PQCodebook, encode as pq_encode
 from repro.iceberg.puffin import _decompress  # codec shared with Puffin blobs
-from repro.kernels import ops
+from repro.kernels import device_cache, ops
 from repro.lakehouse.objectstore import ObjectStore
 from repro.lakehouse.vparquet import VParquetReader
 from repro.runtime import fragments as F
@@ -149,6 +149,12 @@ class Executor:
         # attempt runs on its own scheduler thread), so concurrent probes
         # on one executor cannot misattribute each other's dispatches.
         self.masked_kernel_dispatches = 0
+        # gather-rerank kernel calls (ADC-pool reranks + quantized-scan
+        # guards).  Deliberately a SEPARATE counter: rerank stages have
+        # never counted toward masked_kernel_dispatches, and the dispatch-
+        # count invariants the fragment tests assert must keep meaning
+        # "masked scan dispatches".
+        self.rerank_kernel_dispatches = 0
         self._dispatch_tls = threading.local()
 
     # -- health -----------------------------------------------------------
@@ -282,6 +288,12 @@ class Executor:
             self.masked_kernel_dispatches += 1
         self._dispatch_tls.count = getattr(self._dispatch_tls, "count", 0) + 1
 
+    def _count_rerank(self) -> None:
+        """Record one gather-rerank kernel call (see the counter's note in
+        __init__ — separate from masked-scan dispatch accounting)."""
+        with self._lock:
+            self.rerank_kernel_dispatches += 1
+
     def _task_dispatches(self) -> int:
         return getattr(self._dispatch_tls, "count", 0)
 
@@ -375,7 +387,12 @@ class Executor:
         return mask
 
     def _exact_masked(
-        self, graph, queries: np.ndarray, live_mask: np.ndarray, k_eff: int
+        self,
+        graph,
+        queries: np.ndarray,
+        live_mask: np.ndarray,
+        k_eff: int,
+        dtype: str = "f32",
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Kernel-backed pre-filter exact scan: one ``masked_exact_topk``
         call ranks only the rows passing the mask (masked-out rows are
@@ -383,11 +400,29 @@ class Executor:
         Exact by construction — the high-selectivity plan and the fallback
         when beam search can't surface enough passing candidates.  Output
         is always (Q, k_eff); slots beyond the passing-row count hold
-        (+inf, -1) per the masked-op contract."""
+        (+inf, -1) per the masked-op contract.
+
+        ``dtype`` != f32 runs the plan's two-stage quantized form: the
+        reduced-precision scan ranks a quant_guard_pool-sized pool from the
+        cached quantized device copy, and the full-precision gather-rerank
+        guard re-scores that pool down to ``k_eff`` — quantization never
+        reaches the emitted distances."""
         self._count_dispatch()
+        q = jnp.asarray(np.ascontiguousarray(queries, np.float32))
+        if dtype != "f32":
+            stored, x_scale = device_cache.device_vectors_quant(graph, dtype)
+            pool = min(planner.quant_guard_pool(k_eff), graph.n)
+            _qd, pids = ops.masked_exact_topk(
+                q, stored, jnp.asarray(live_mask), int(pool),
+                metric=graph.params.metric, backend="auto",
+                dtype=dtype, x_scale=x_scale,
+            )
+            return self._rerank_pool(
+                graph, queries, np.asarray(pids, np.int64), int(k_eff)
+            )
         d, ids = ops.masked_exact_topk(
-            jnp.asarray(np.ascontiguousarray(queries, np.float32)),
-            jnp.asarray(graph.vectors[: graph.n]),
+            q,
+            device_cache.device_vectors(graph),
             jnp.asarray(live_mask),
             int(k_eff),
             metric=graph.params.metric,
@@ -417,47 +452,77 @@ class Executor:
             int(pool),
             backend="auto",
         )
-        return self._rerank_pq_pool(graph, q, np.asarray(pids, np.int64), k_out)
+        return self._rerank_pool(graph, q, np.asarray(pids, np.int64), k_out)
 
     def _device_codes(self, graph):
         """Codes are immutable between refreshes; cache the int32 device
-        copy on the graph object (keyed by n — insert_batch grows n,
-        refresh swaps the graph) instead of re-widening O(N·m) bytes per
+        copy on the graph object (identity-keyed — see
+        kernels/device_cache.py) instead of re-widening O(N·m) bytes per
         probe."""
-        codes = getattr(graph, "_codes_i32", None)
-        if codes is None or codes.shape[0] != graph.n:
-            codes = jnp.asarray(graph.pq_codes[: graph.n].astype(np.int32))
-            graph._codes_i32 = codes
-        return codes
+        return device_cache.device_codes(graph)
 
-    def _rerank_pq_pool(
+    def _device_vectors(self, graph):
+        """Cached f32 device copy of the shard's vectors (identity-keyed,
+        like ``_device_codes``) — every kernel dispatch that used to ship
+        ``jnp.asarray(graph.vectors[:graph.n])`` per call reuses this."""
+        return device_cache.device_vectors(graph)
+
+    def _rerank_pool(
         self, graph, q: np.ndarray, pids: np.ndarray, k_out: int
     ) -> Tuple[np.ndarray, np.ndarray]:
-        """Exact full-precision rerank of an ADC pool (Q, pool): sentinel
-        slots (pid < 0) stay (+inf, -1); rows are independent, so the math
-        is identical whether the pool came from a per-group call or one
+        """Exact full-precision rerank of a candidate pool (Q, pool) — ADC
+        survivors and quantized-scan guard pools alike: ONE gather-rerank
+        kernel call scores each row's pool ids against the cached device
+        vectors (kernels/rerank.py — the (Q, P, D) host gather and einsum
+        this used to do in NumPy never materializes).  Sentinel slots
+        (pid < 0) stay (+inf, -1); rows are independent, so the math is
+        identical whether the pool came from a per-group call or one
         multi-mask call over the whole fragment."""
-        safe = np.clip(pids, 0, graph.n - 1)
-        vecs = graph.vectors[safe]  # (Q, pool, D)
-        if graph.params.metric == "ip":
-            d = -np.einsum("qcd,qd->qc", vecs, q)
-        else:
-            d = np.sum((vecs - q[:, None, :]) ** 2, axis=-1)
-        d = np.where(pids < 0, np.inf, d).astype(np.float32)
-        order = np.argsort(d, axis=1)[:, :k_out]
-        return np.take_along_axis(d, order, axis=1), np.take_along_axis(pids, order, axis=1)
+        self._count_rerank()
+        d, ids = ops.gather_rerank(
+            jnp.asarray(np.ascontiguousarray(q, np.float32)),
+            self._device_vectors(graph),
+            jnp.asarray(np.ascontiguousarray(pids, np.int64).astype(np.int32)),
+            int(k_out),
+            metric=graph.params.metric,
+            backend="auto",
+        )
+        return np.asarray(d), np.asarray(ids, np.int64)
 
     def _exact_masked_plane(
-        self, graph, queries: np.ndarray, unique_masks, row_index, k_out: int
+        self,
+        graph,
+        queries: np.ndarray,
+        unique_masks,
+        row_index,
+        k_out: int,
+        dtype: str = "f32",
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Heterogeneous-predicate ExactScan: ONE kernel call answers every
         query of a coalesced fragment under its own bitmask row, shipped as
         the dedup'd (m, N) unique rows + (Q,) index — the per-predicate-
-        group kernel loop collapses to a single dispatch per shard."""
+        group kernel loop collapses to a single dispatch per shard.
+        Quantized ``dtype`` runs the same two-stage scan+guard form as
+        ``_exact_masked``."""
         self._count_dispatch()
+        q = jnp.asarray(np.ascontiguousarray(queries, np.float32))
+        if dtype != "f32":
+            stored, x_scale = device_cache.device_vectors_quant(graph, dtype)
+            pool = min(planner.quant_guard_pool(k_out), graph.n)
+            _qd, pids = ops.masked_exact_topk_dedup(
+                q, stored,
+                jnp.asarray(np.stack(unique_masks)),
+                jnp.asarray(row_index),
+                int(pool),
+                metric=graph.params.metric, backend="auto",
+                dtype=dtype, x_scale=x_scale,
+            )
+            return self._rerank_pool(
+                graph, queries, np.asarray(pids, np.int64), int(k_out)
+            )
         d, ids = ops.masked_exact_topk_dedup(
-            jnp.asarray(np.ascontiguousarray(queries, np.float32)),
-            jnp.asarray(graph.vectors[: graph.n]),
+            q,
+            self._device_vectors(graph),
             jnp.asarray(np.stack(unique_masks)),
             jnp.asarray(row_index),
             int(k_out),
@@ -495,7 +560,7 @@ class Executor:
             int(pool),
             backend="auto",
         )
-        return self._rerank_pq_pool(graph, q, np.asarray(pids, np.int64), k_out)
+        return self._rerank_pool(graph, q, np.asarray(pids, np.int64), k_out)
 
     def _unified_masked_stage(
         self,
@@ -525,7 +590,7 @@ class Executor:
         self._count_dispatch()
         d, ids = ops.unified_masked_topk_dedup(
             jnp.asarray(q),
-            jnp.asarray(graph.vectors[: graph.n]),
+            self._device_vectors(graph),
             jnp.asarray(luts),
             codes,
             jnp.asarray(np.stack(unique_masks)),
@@ -543,7 +608,7 @@ class Executor:
         out_d[ex] = d[ex, :k_out]
         out_i[ex] = ids[ex, :k_out]
         if flavor.any():
-            rd, ri = self._rerank_pq_pool(
+            rd, ri = self._rerank_pool(
                 graph, q[flavor], ids[flavor][:, : int(pq_pool)], k_out
             )
             out_d[flavor] = rd
@@ -582,7 +647,10 @@ class Executor:
                 graph, queries, live_mask, final.pool, final.k
             )
         if isinstance(final, planner.ExactScan):
-            return self._exact_masked(graph, queries, live_mask, final.k)
+            return self._exact_masked(
+                graph, queries, live_mask, final.k,
+                dtype=getattr(final, "dtype", "f32"),
+            )
         if isinstance(final, planner.MaskedBeam):
             return self._masked_beam(task, graph, queries, live_mask, final)
         return self._postfilter_beam(task, graph, queries, live_mask, final)
@@ -995,7 +1063,10 @@ class Executor:
                     # exact scan the mask-plane path ships
                     live = ~graph.tombstones[: graph.n]
                     k_out = max(1, min(op.k, graph.n))
-                    dists, ids = self._exact_masked(graph, queries, live, k_out)
+                    dists, ids = self._exact_masked(
+                        graph, queries, live, k_out,
+                        dtype=getattr(op, "dtype", "f32"),
+                    )
                 else:
                     w = op.width if isinstance(op, planner.Beam) else 0
                     dists, ids = self._shard_search(
@@ -1030,6 +1101,7 @@ class Executor:
         exact_rows: List[int] = []
         exact_masks: List[np.ndarray] = []
         exact_keys: List[object] = []
+        exact_dtypes: List[str] = []  # per-row planner scan dtype
         pq_rows: List[int] = []
         pq_masks: List[np.ndarray] = []
         pq_keys: List[object] = []
@@ -1052,6 +1124,7 @@ class Executor:
                     exact_rows.append(bi)
                     exact_masks.append(tomb_live)
                     exact_keys.append(None)
+                    exact_dtypes.append(getattr(op, "dtype", "f32"))
                 else:
                     w = op.width if isinstance(op, planner.Beam) else 0
                     beam_rows.setdefault(int(w), []).append(bi)
@@ -1069,6 +1142,7 @@ class Executor:
                 exact_rows.append(bi)
                 exact_masks.append(live)
                 exact_keys.append(pred)
+                exact_dtypes.append(getattr(final, "dtype", "f32"))
             elif isinstance(final, planner.MaskedBeam):
                 mbeam_rows.setdefault(int(final.width), []).append(bi)
                 mbeam_masks[bi] = live
@@ -1083,6 +1157,34 @@ class Executor:
                 result.candidates[int(qidx[bi])] = self._row_candidates(
                     graph, locmap, dists[j], ids[j], task.shard_id
                 )
+
+        # Reduced-precision exact rows never join the unified fusion: the
+        # unified kernel scores exact rows full-precision only.  Group the
+        # quantized rows per dtype (each gets its own scan+guard dispatch)
+        # and keep the f32 subset for the fusion/plane logic below.
+        quant_groups: Dict[str, List[int]] = {}
+        for pos, dt in enumerate(exact_dtypes):
+            if dt != "f32":
+                quant_groups.setdefault(dt, []).append(pos)
+        if quant_groups:
+            for dt, poss in sorted(quant_groups.items()):
+                rows = [exact_rows[p] for p in poss]
+                masks = [exact_masks[p] for p in poss]
+                keys = [exact_keys[p] for p in poss]
+                unique, idx = self._dedup_rows(masks, keys)
+                if len(unique) == 1:
+                    dists, ids = self._exact_masked(
+                        graph, task.queries[rows], unique[0], k_out, dtype=dt
+                    )
+                else:
+                    dists, ids = self._exact_masked_plane(
+                        graph, task.queries[rows], unique, idx, k_out, dtype=dt
+                    )
+                _emit(rows, dists, ids)
+            keep = [p for p, dt in enumerate(exact_dtypes) if dt == "f32"]
+            exact_rows = [exact_rows[p] for p in keep]
+            exact_masks = [exact_masks[p] for p in keep]
+            exact_keys = [exact_keys[p] for p in keep]
 
         if exact_rows and pq_rows and not self.force_split_flavors:
             # mixed flavors: ONE unified dispatch for the whole fragment

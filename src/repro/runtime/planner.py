@@ -87,6 +87,25 @@ MASKED_BEAM_MAX_WIDEN = 4.0
 POSTFILTER_MIN_OVERFETCH = 2.0
 POSTFILTER_MAX_OVERFETCH = 4.0
 
+# Quantized exact scans (ExactScan.dtype of "bf16"/"int8") score with value
+# error, so they never emit results directly: the scan's top pool — k_eff
+# widened by QUANT_GUARD_FACTOR, floored — feeds the full-precision
+# gather-rerank guard, which re-scores the pool at f32 and emits the final
+# k_eff.  The widening is what restores recall: a true top-k row demoted a
+# few places by quantization noise still lands inside the pool.
+QUANT_GUARD_FACTOR = 4
+QUANT_GUARD_FLOOR = 32
+
+# Scoring dtypes a plan may annotate on ExactScan (mirrors
+# kernels/ref.SCORE_DTYPES; "f32" means no guard stage).
+SCAN_DTYPES = ("f32", "bf16", "int8")
+
+
+def quant_guard_pool(k_eff: int) -> int:
+    """Oversampled pool a quantized scan hands the full-precision
+    gather-rerank guard."""
+    return max(QUANT_GUARD_FLOOR, QUANT_GUARD_FACTOR * max(1, int(k_eff)))
+
 
 # ---------------------------------------------------------------------------
 # plan ops
@@ -126,10 +145,17 @@ class ExactScan(PlanOp):
     """Masked exact scan: one masked top-k kernel call ranks exactly the
     rows passing the (predicate AND tombstone) bitmask.  ``k`` is the
     output column count; ``est_frac`` the selectivity evidence (1.0 for the
-    all-ones scan of an unfiltered query riding a mixed fragment)."""
+    all-ones scan of an unfiltered query riding a mixed fragment).
+
+    ``dtype`` annotates the scan's scoring precision (``f32``/``bf16``/
+    ``int8``).  Quantized scans are a two-stage plan: the reduced-precision
+    kernel ranks a :func:`quant_guard_pool`-sized pool, and the
+    full-precision gather-rerank guard re-scores that pool before anything
+    leaves the executor — so quantization costs bandwidth, not recall."""
 
     k: int = 0
     est_frac: float = 1.0
+    dtype: str = "f32"
 
 
 @dataclass(frozen=True)
@@ -237,6 +263,7 @@ def band_op(
     oversample: int,
     use_pq: bool,
     shard_rows: Optional[int] = None,
+    scan_dtype: str = "f32",
 ) -> PlanOp:
     """Map a shard's estimated passing fraction to its plan op.
 
@@ -247,6 +274,7 @@ def band_op(
     predicate-aware :class:`MaskedBeam` traversal instead.  Callers without
     size evidence (hand-built tasks, :func:`default_filtered_op`) omit it
     and keep the scan bands."""
+    assert scan_dtype in SCAN_DTYPES, scan_dtype
     k_eff = max(1, k * oversample)
     big = shard_rows is not None and shard_rows > EXACT_SCAN_MAX_ROWS
     if big and frac <= MASK_MAX_FRAC:
@@ -254,19 +282,20 @@ def band_op(
             width=masked_beam_width(k, oversample, frac), k=k_eff, est_frac=frac
         )
     if frac <= PREFILTER_MAX_FRAC:
-        return ExactScan(k=k_eff, est_frac=frac)
+        return ExactScan(k=k_eff, est_frac=frac, dtype=scan_dtype)
     if frac <= MASK_MAX_FRAC:
         if use_pq:
             pool = max(PQ_POOL_FACTOR * k_eff, PQ_POOL_FLOOR)
             return PQScan(pool=pool, k=k_eff, est_frac=frac)
-        return ExactScan(k=k_eff, est_frac=frac)
+        return ExactScan(k=k_eff, est_frac=frac, dtype=scan_dtype)
     return PostfilterBeam(
         pool=postfilter_pool(k, oversample, frac), k=k_eff, est_frac=frac
     )
 
 
 def plan_filtered(
-    pred, zonemap, routing, *, k: int, oversample: int, use_pq: bool
+    pred, zonemap, routing, *, k: int, oversample: int, use_pq: bool,
+    scan_dtype: str = "f32",
 ) -> Tuple[Dict[int, PlanOp], List[int], float]:
     """Per-shard plan ops for one predicate: zone-prune a shard outright or
     choose its band op from the estimated passing fraction of its member
@@ -309,6 +338,7 @@ def plan_filtered(
             oversample=oversample,
             use_pq=use_pq,
             shard_rows=s.vector_count,
+            scan_dtype=scan_dtype,
         )
     return ops, pruned, global_frac
 
@@ -382,10 +412,14 @@ def resolve(
         return op
     if match_count <= 0:
         return Skip(reason="no-match")
+    # the scoring-dtype annotation survives every ExactScan refinement —
+    # collapses FROM other op kinds score f32 (tiny sets gain nothing from
+    # quantization, and non-scan ops carry no annotation to preserve)
+    dtype = op.dtype if isinstance(op, ExactScan) else "f32"
     k_eff = min(max(1, k * oversample), match_count)
     small = match_count <= max(SMALL_MATCH_FACTOR * k_eff, SMALL_MATCH_FLOOR)
     if small:
-        return ExactScan(k=k_eff, est_frac=op.est_frac)
+        return ExactScan(k=k_eff, est_frac=op.est_frac, dtype=dtype)
     if isinstance(op, PQScan):
         if not has_pq:
             return ExactScan(k=k_eff, est_frac=op.est_frac)
@@ -396,7 +430,7 @@ def resolve(
     if isinstance(op, MaskedBeam):
         width = max(k_eff, min(op.width, match_count))
         return MaskedBeam(width=int(width), k=k_eff, est_frac=op.est_frac)
-    return ExactScan(k=k_eff, est_frac=op.est_frac)
+    return ExactScan(k=k_eff, est_frac=op.est_frac, dtype=dtype)
 
 
 # ---------------------------------------------------------------------------

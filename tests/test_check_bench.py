@@ -137,6 +137,27 @@ def _kernels_doc():
             "kernel.masked_exact_topk": {"throughput_qps": 45.0},
             "kernel.masked_exact_topk_multi": {"throughput_qps": 65.0},
             "kernel.masked_pq_topk_multi": {"throughput_qps": 5.0},
+            "kernel.unified_masked_topk": {"throughput_qps": 12.0, "parity_ok": True},
+            "kernel.gather_rerank": {
+                "throughput_qps": 900.0,
+                "host_qps": 420.0,
+                "speedup_vs_host": 2.1,
+            },
+            "host.gather_rerank": {"throughput_qps": 420.0},
+            "kernel.masked_exact_topk_bf16": {
+                "throughput_qps": 40.0,
+                "speedup_vs_f32": 0.7,
+                "recall_raw": 0.97,
+                "recall_post_guard": 1.0,
+                "quantized_native": False,
+            },
+            "kernel.masked_exact_topk_int8": {
+                "throughput_qps": 38.0,
+                "speedup_vs_f32": 0.65,
+                "recall_raw": 0.90,
+                "recall_post_guard": 1.0,
+                "quantized_native": False,
+            },
             "anchor.numpy_matmul": {"throughput_qps": 300.0},
         },
     }
@@ -753,6 +774,116 @@ def test_overload_cli_doctored_json(tmp_path):
     base = _clean_doc()
     cur = copy.deepcopy(base)
     cur["rows"]["table2.overload"]["well_hit_rate"] = 0.2
+    cur_p, base_p = tmp_path / "cur.json", tmp_path / "base.json"
+    cur_p.write_text(json.dumps(cur))
+    base_p.write_text(json.dumps(base))
+    assert check_bench.main([str(cur_p), "--baseline", str(base_p)]) == 1
+
+
+# ---------------------------------------------------------------------------
+# gather-rerank / quantized-scan / unified-parity gates (the kernel hot path)
+# ---------------------------------------------------------------------------
+
+
+def test_gather_rerank_speedup_gate():
+    """The device pool rerank replaced the executor's NumPy host rerank; if
+    its same-window paired timing ever loses to that comparator, the
+    replacement regressed and the gate must fail — with or without a
+    baseline."""
+    cur = _kernels_doc()
+    cur["rows"]["kernel.gather_rerank"]["speedup_vs_host"] = 0.9
+    failures = check_bench.check(cur, None)
+    assert any(
+        "kernel.gather_rerank" in f and "host rerank" in f for f in failures
+    )
+
+
+def test_host_comparator_row_is_not_throughput_gated():
+    """host.gather_rerank exists only as the same-window comparator for the
+    paired ratio; its absolute wall clock dropping must not gate (the ratio
+    is what gates)."""
+    base = _kernels_doc()
+    cur = copy.deepcopy(base)
+    cur["rows"]["host.gather_rerank"]["throughput_qps"] *= 0.2
+    assert check_bench.check(cur, base) == []
+
+
+def test_unified_kernel_parity_gate():
+    """The single-dispatch unified kernel must return bit-identical hits to
+    the split exact+ADC dispatches — a dispatch-count win that changes
+    results is a correctness bug, not an optimization."""
+    cur = _kernels_doc()
+    cur["rows"]["kernel.unified_masked_topk"]["parity_ok"] = False
+    failures = check_bench.check(cur, None)
+    assert any(
+        "kernel.unified_masked_topk" in f and "changed results" in f
+        for f in failures
+    )
+
+
+def test_quantized_post_guard_recall_gate():
+    """Reduced-precision scanning is only admissible because the
+    full-precision gather-rerank guard restores recall: post-guard recall
+    below the floor fails for each quantized flavor independently — and so
+    does a bench that forgot to record the field (default 0.0)."""
+    cur = _kernels_doc()
+    cur["rows"]["kernel.masked_exact_topk_bf16"]["recall_post_guard"] = 0.90
+    del cur["rows"]["kernel.masked_exact_topk_int8"]["recall_post_guard"]
+    failures = check_bench.check(cur, None)
+    assert any(
+        "kernel.masked_exact_topk_bf16" in f and "guard" in f for f in failures
+    )
+    assert any(
+        "kernel.masked_exact_topk_int8" in f and "guard" in f for f in failures
+    )
+
+
+def test_quantized_raw_recall_is_informational():
+    """recall_raw (before the guard) is expected to dip — that is the whole
+    reason the guard exists — so it must never gate on its own."""
+    cur = _kernels_doc()
+    cur["rows"]["kernel.masked_exact_topk_int8"]["recall_raw"] = 0.50
+    assert check_bench.check(cur, None) == []
+
+
+def test_quantized_speed_gate_is_backend_conditional():
+    """On a native backend (TPU) a quantized scan that fails to beat f32 is
+    a regression; on CPU the honest path dequantizes to f32, so only the
+    0.5x plumbing floor gates.  The same 0.9x ratio must fail natively and
+    pass non-natively."""
+    for name in check_bench.QUANT_ROWS:
+        native = _kernels_doc()
+        native["rows"][name]["quantized_native"] = True
+        native["rows"][name]["speedup_vs_f32"] = 0.9
+        failures = check_bench.check(native, None)
+        assert any(name in f and "native quantized scan" in f for f in failures)
+        native["rows"][name]["speedup_vs_f32"] = 1.3
+        assert check_bench.check(native, None) == []
+        nonnative = _kernels_doc()
+        nonnative["rows"][name]["speedup_vs_f32"] = 0.9  # above 0.5 floor
+        assert check_bench.check(nonnative, None) == []
+        nonnative["rows"][name]["speedup_vs_f32"] = 0.3  # below it
+        failures = check_bench.check(nonnative, None)
+        assert any(name in f and "plumbing floor" in f for f in failures)
+
+
+def test_new_kernel_rows_are_throughput_gated():
+    """The gather/quantized rows are kernel.* rows like any other: a
+    wall-clock drop past the kernel budget fails against the baseline even
+    when every same-window ratio stays healthy."""
+    base = _kernels_doc()
+    cur = copy.deepcopy(base)
+    cur["rows"]["kernel.gather_rerank"]["throughput_qps"] *= 0.5
+    failures = check_bench.check(cur, base)
+    assert any(
+        "kernel.gather_rerank" in f and "machine factor" in f for f in failures
+    )
+
+
+def test_gather_rerank_cli_doctored_json(tmp_path):
+    base = _kernels_doc()
+    cur = copy.deepcopy(base)
+    cur["rows"]["kernel.gather_rerank"]["speedup_vs_host"] = 0.8
     cur_p, base_p = tmp_path / "cur.json", tmp_path / "base.json"
     cur_p.write_text(json.dumps(cur))
     base_p.write_text(json.dumps(base))

@@ -516,3 +516,395 @@ def test_property_pq_scan(n, m, nbits):
     got = np.asarray(ops.pq_scan(jnp.asarray(luts), jnp.asarray(codes), backend="pallas", tile_q=4, tile_n=32))
     want = np.asarray(ref.pq_adc_scores(jnp.asarray(luts), jnp.asarray(codes)))
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# gather-rerank (device candidate-pool rerank — the host-rerank replacement)
+# ---------------------------------------------------------------------------
+
+
+def _host_rerank(Q, X, pids, k, metric="l2"):
+    """The removed NumPy rerank, verbatim in shape: clip-gather the pool
+    vectors, score, push sentinels to +inf, argsort top-k.  Kept here only
+    as the bit-parity oracle for the kernel that replaced it."""
+    n = X.shape[0]
+    safe = np.clip(pids, 0, n - 1)
+    vecs = X[safe]  # (Q, P, D)
+    if metric == "ip":
+        d = -np.einsum("qpd,qd->qp", vecs, Q)
+    else:
+        d = np.sum((vecs - Q[:, None, :]) ** 2, axis=-1)
+    d = np.where((pids < 0) | (pids >= n), np.inf, d)
+    order = np.argsort(d, axis=1, kind="stable")[:, :k]
+    out_d = np.take_along_axis(d, order, axis=1)
+    out_i = np.take_along_axis(pids, order, axis=1)
+    out_i = np.where(np.isfinite(out_d), out_i, -1)
+    return out_d.astype(np.float32), out_i.astype(np.int64)
+
+
+# Q / N / P deliberately non-tile-aligned (tile_q=8, tile_n=128 defaults)
+@pytest.mark.parametrize("q,n,p,d", [(1, 1, 1, 1), (3, 90, 7, 16), (9, 300, 33, 24), (5, 130, 130, 100)])
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_gather_rerank_matches_ref(q, n, p, d, metric):
+    rng = np.random.default_rng(q * 11 + n)
+    Q, X = _np(q, d, seed=q), _np(n, d, seed=n + 1)
+    pids = rng.choice(n, size=(q, p), replace=p <= n).astype(np.int32) if p <= n \
+        else rng.integers(0, n, size=(q, p)).astype(np.int32)
+    k = min(5, p)
+    outs = {}
+    for backend in ("pallas", "ref"):
+        dd, ii = ops.gather_rerank(
+            jnp.asarray(Q), jnp.asarray(X), jnp.asarray(pids), k,
+            metric=metric, backend=backend,
+        )
+        outs[backend] = (np.asarray(dd), np.asarray(ii))
+    np.testing.assert_array_equal(outs["pallas"][1], outs["ref"][1])
+    dp, dr = outs["pallas"][0], outs["ref"][0]
+    np.testing.assert_allclose(
+        np.where(np.isinf(dp), 0.0, dp), np.where(np.isinf(dr), 0.0, dr),
+        rtol=2e-4, atol=2e-3,
+    )
+    assert (np.isinf(dp) == np.isinf(dr)).all()
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_gather_rerank_bit_parity_with_host_rerank(metric):
+    """The kernel answers exactly what the NumPy gather+einsum it replaced
+    answered (distinct pool ids — the unstable-argsort duplicate tie order
+    was never part of the old contract)."""
+    rng = np.random.default_rng(42)
+    Q, X = _np(6, 32, seed=1), _np(200, 32, seed=2)
+    pids = np.stack([rng.choice(200, size=24, replace=False) for _ in range(6)]).astype(np.int32)
+    pids[2, 5:] = -1  # one mostly-empty pool
+    want_d, want_i = _host_rerank(Q, X, pids, 10, metric=metric)
+    for backend in ("pallas", "ref"):
+        got_d, got_i = ops.gather_rerank(
+            jnp.asarray(Q), jnp.asarray(X), jnp.asarray(pids), 10,
+            metric=metric, backend=backend,
+        )
+        np.testing.assert_array_equal(np.asarray(got_i, np.int64), want_i)
+        np.testing.assert_allclose(
+            np.where(np.isinf(np.asarray(got_d)), 0.0, np.asarray(got_d)),
+            np.where(np.isinf(want_d), 0.0, want_d),
+            rtol=2e-4, atol=2e-3,
+        )
+
+
+@pytest.mark.parametrize("backend", ["pallas", "ref"])
+def test_gather_rerank_sentinels_and_out_of_range(backend):
+    """pid < 0 and pid >= N slots never score: they surface as (+inf, -1),
+    and an all-sentinel pool row is all (+inf, -1)."""
+    Q, X = _np(4, 16, seed=3), _np(50, 16, seed=4)
+    pids = np.full((4, 8), -1, np.int32)
+    pids[0, :3] = [5, 7, 50]  # 50 is out of range -> sentinel
+    pids[1, 0] = 999
+    d, i = ops.gather_rerank(jnp.asarray(Q), jnp.asarray(X), jnp.asarray(pids), 8, backend=backend)
+    d, i = np.asarray(d), np.asarray(i)
+    assert set(i[0][i[0] >= 0]) == {5, 7}
+    assert (i[1] == -1).all() and np.isinf(d[1]).all()
+    assert (i[2:] == -1).all() and np.isinf(d[2:]).all()
+    assert np.isfinite(d[0][:2]).all() and np.isinf(d[0][2:]).all()
+
+
+@pytest.mark.parametrize("backend", ["pallas", "ref"])
+def test_gather_rerank_k_exceeds_pool(backend):
+    """k > P: the extra slots are (+inf, -1) and the live prefix is the
+    whole pool, ascending."""
+    Q, X = _np(2, 8, seed=5), _np(60, 8, seed=6)
+    pids = np.array([[3, 9, 41], [0, 59, 17]], np.int32)
+    d, i = ops.gather_rerank(jnp.asarray(Q), jnp.asarray(X), jnp.asarray(pids), 10, backend=backend)
+    d, i = np.asarray(d), np.asarray(i)
+    assert d.shape == (2, 10)
+    for qi in range(2):
+        assert set(i[qi][:3]) == set(pids[qi].tolist())
+        assert (i[qi][3:] == -1).all() and np.isinf(d[qi][3:]).all()
+        assert np.all(np.diff(d[qi][:3]) >= -1e-5)
+
+
+@pytest.mark.parametrize("backend", ["pallas", "ref"])
+def test_gather_rerank_duplicate_pids(backend):
+    """Duplicate pool ids are allowed: the top-k multiset matches the
+    brute-force multiset (tie ORDER among equal ids is unspecified, exactly
+    as it was for the unstable host argsort)."""
+    rng = np.random.default_rng(9)
+    Q, X = _np(3, 16, seed=7), _np(40, 16, seed=8)
+    pids = rng.integers(0, 40, size=(3, 12)).astype(np.int32)
+    pids[:, 6:] = pids[:, :6]  # force duplicates
+    k = 5
+    d, i = ops.gather_rerank(jnp.asarray(Q), jnp.asarray(X), jnp.asarray(pids), k, backend=backend)
+    d, i = np.asarray(d), np.asarray(i)
+    want_d, want_i = _host_rerank(Q, X, pids, k)
+    for qi in range(3):
+        np.testing.assert_allclose(d[qi], want_d[qi], rtol=2e-4, atol=2e-3)
+        assert sorted(i[qi].tolist()) == sorted(want_i[qi].tolist())
+
+
+# ---------------------------------------------------------------------------
+# quantized scan flavors (bf16 / int8) + full-precision guard
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_quantized_exact_matches_quant_oracle(dtype, metric):
+    """Pallas quantized scan vs the ref quantized oracle: identical id sets
+    (both score the SAME quantized values) and close scores."""
+    rng = np.random.default_rng(17)
+    Q, X = _np(5, 48, seed=11), _np(300, 48, seed=12)
+    mask = rng.random(300) < 0.5
+    k = 10
+    dp, ip_ = ops.masked_exact_topk(
+        jnp.asarray(Q), jnp.asarray(X), jnp.asarray(mask), k,
+        metric=metric, backend="pallas", dtype=dtype,
+    )
+    dr, ir = ops.masked_exact_topk(
+        jnp.asarray(Q), jnp.asarray(X), jnp.asarray(mask), k,
+        metric=metric, backend="ref", dtype=dtype,
+    )
+    ip_, ir = np.asarray(ip_), np.asarray(ir)
+    dp, dr = np.asarray(dp), np.asarray(dr)
+    # quantized ties can swap adjacent ids; compare as sets + score values
+    for qi in range(5):
+        assert set(ip_[qi].tolist()) == set(ir[qi].tolist())
+    np.testing.assert_allclose(
+        np.where(np.isinf(dp), 0.0, dp), np.where(np.isinf(dr), 0.0, dr),
+        rtol=5e-3, atol=5e-2,
+    )
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+def test_quantized_prestored_points_match_fresh_quantization(dtype):
+    """Passing the cached pre-quantized stored matrix (+ its x_scale) must
+    answer exactly like quantize-on-the-fly from f32."""
+    rng = np.random.default_rng(19)
+    Q, X = _np(4, 32, seed=13), _np(200, 32, seed=14)
+    mask = rng.random(200) < 0.6
+    stored, x_scale = ref.quantize_points(jnp.asarray(X), dtype)
+    for backend in ("pallas", "ref"):
+        d1, i1 = ops.masked_exact_topk(
+            jnp.asarray(Q), jnp.asarray(X), jnp.asarray(mask), 8,
+            backend=backend, dtype=dtype,
+        )
+        d2, i2 = ops.masked_exact_topk(
+            jnp.asarray(Q), stored, jnp.asarray(mask), 8,
+            backend=backend, dtype=dtype, x_scale=x_scale,
+        )
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+def test_quantized_scan_plus_guard_restores_f32_recall(dtype):
+    """The planner's two-stage contract: quantized scan at the oversampled
+    quant_guard_pool, then full-precision gather_rerank — top-k recall vs
+    the f32 scan must be >= 0.95, and the emitted distances are exact f32
+    distances (never quantized scores)."""
+    from repro.runtime import planner
+
+    rng = np.random.default_rng(23)
+    Q, X = _np(8, 64, seed=15), _np(500, 64, seed=16)
+    mask = rng.random(500) < 0.7
+    k = 10
+    pool = min(planner.quant_guard_pool(k), 500)
+    _qd, pids = ops.masked_exact_topk(
+        jnp.asarray(Q), jnp.asarray(X), jnp.asarray(mask), pool,
+        backend="auto", dtype=dtype,
+    )
+    gd, gi = ops.gather_rerank(jnp.asarray(Q), jnp.asarray(X), pids, k, backend="auto")
+    fd, fi = ops.masked_exact_topk(
+        jnp.asarray(Q), jnp.asarray(X), jnp.asarray(mask), k, backend="auto"
+    )
+    gd, gi = np.asarray(gd), np.asarray(gi)
+    fd, fi = np.asarray(fd), np.asarray(fi)
+    hits = sum(
+        len(set(gi[qi][gi[qi] >= 0]) & set(fi[qi][fi[qi] >= 0])) for qi in range(8)
+    )
+    total = int((fi >= 0).sum())
+    assert hits / total >= 0.95
+    # guarded distances are full-precision: every returned id's distance
+    # equals the f32 oracle distance for that id
+    full = np.asarray(ops.exact_distances(jnp.asarray(Q), jnp.asarray(X), backend="ref"))
+    for qi in range(8):
+        live = gi[qi] >= 0
+        np.testing.assert_allclose(gd[qi][live], full[qi, gi[qi][live]], rtol=2e-4, atol=2e-3)
+
+
+def test_quantize_roundtrip_error_bounds():
+    """int8 symmetric quantization error is bounded by scale/2 per value;
+    bf16 by ~2^-8 relative."""
+    X = _np(100, 32, seed=21, scale=3.0)
+    for dtype, tol in (("int8", None), ("bf16", 0.01)):
+        stored, scale = ref.quantize_points(jnp.asarray(X), dtype)
+        back = np.asarray(ref.dequantize_points(stored, scale))
+        if dtype == "int8":
+            assert np.abs(back - X).max() <= float(scale) * 0.5 + 1e-6
+        else:
+            assert np.abs(back - X).max() <= tol * np.abs(X).max() + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# unified-kernel VMEM budget (BlockSpec walk)
+# ---------------------------------------------------------------------------
+
+
+def test_unified_block_shapes_walk():
+    """Independently recompute every resident block of one unified grid
+    step and assert the budget table (which the kernel builds its
+    BlockSpecs from) matches — the docstring numbers cannot drift."""
+    from repro.kernels import masked_topk as mt
+
+    tq, tn, d, m, K, k = 8, 128, 1024, 16, 256, 128
+    shapes = mt.unified_block_shapes(tq, tn, d, m, K, k)
+    assert shapes["queries"] == ((tq, d), jnp.float32)
+    assert shapes["points"] == ((tn, d), jnp.float32)
+    assert shapes["luts"] == ((tq, m, K), jnp.float32)
+    assert shapes["codes"] == ((tn, m), jnp.int32)
+    assert shapes["selector"] == ((tq, tn), jnp.float32)
+    assert shapes["out_dists"] == ((tq, k), jnp.float32)
+    assert shapes["out_ids"] == ((tq, k), jnp.int32)
+    assert shapes["score_scratch"] == ((tq, tn), jnp.float32)
+    resident = sum(
+        int(np.prod(s)) * np.dtype(dt).itemsize for s, dt in shapes.values()
+    )
+    assert mt.unified_vmem_bytes(tq, tn, d, m, K, k) == 2 * resident + tn * K * 4
+
+
+def test_unified_vmem_fits_16mb_at_d4096():
+    """Acceptance: the restructured unified kernel's worst-case estimate at
+    D=4096 (m=16, K=256, k=128) fits a 16 MB VMEM budget WITHOUT halving
+    tile_q — the old dual-buffer layout did not."""
+    from repro.kernels import masked_topk as mt
+
+    budget = 16 * 1024 * 1024
+    assert mt.unified_vmem_bytes(8, 128, 4096, 16, 256, 128) < budget
+    # and the shared-buffer design keeps even D=8192 under budget
+    assert mt.unified_vmem_bytes(8, 128, 8192, 16, 256, 128) < budget
+
+
+# ---------------------------------------------------------------------------
+# autotuner (measured tile selection)
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_defaults_on_cache_miss(tmp_path):
+    from repro.kernels import autotune
+
+    autotune.clear_cache()
+    assert autotune.get_tiles(4096, 128, "exact", cache_path=tmp_path / "nope.json") \
+        == autotune.DEFAULT_TILES
+    autotune.clear_cache()
+
+
+def test_autotune_reads_fixture_and_rejects_unknown_tiles(tmp_path):
+    import json
+
+    from repro.kernels import autotune
+
+    path = tmp_path / "cache.json"
+    path.write_text(json.dumps({
+        "tiles": {
+            autotune.cache_key(4096, 128, "exact"): [16, 256],
+            autotune.cache_key(4096, 128, "pq"): [13, 77],  # never swept
+        }
+    }))
+    autotune.clear_cache()
+    assert autotune.get_tiles(4096, 128, "exact", cache_path=path) == (16, 256)
+    # bucketing: 3000 rows round up to the same 4096 bucket
+    assert autotune.get_tiles(3000, 128, "exact", cache_path=path) == (16, 256)
+    # invalid tiles are discarded -> defaults
+    assert autotune.get_tiles(4096, 128, "pq", cache_path=path) == autotune.DEFAULT_TILES
+    autotune.clear_cache()
+
+
+def test_autotune_candidates_include_defaults():
+    """Structural never-regress: the default tiling is always a candidate,
+    and a challenger must beat it by the hysteresis margin."""
+    from repro.kernels import autotune
+
+    assert autotune.DEFAULT_TILES in autotune.CANDIDATES
+    assert 0.0 < autotune.HYSTERESIS < 0.5
+
+
+def test_autotune_tiles_give_identical_results():
+    """Whatever tiles the autotuner picks, the kernel answers identically —
+    tiling is a performance knob, never a semantics knob."""
+    rng = np.random.default_rng(29)
+    Q, X = _np(9, 40, seed=25), _np(300, 40, seed=26)
+    mask = rng.random(300) < 0.5
+    from repro.kernels import autotune
+
+    base = None
+    for tq, tn in autotune.CANDIDATES:
+        d, i = ops.masked_exact_topk(
+            jnp.asarray(Q), jnp.asarray(X), jnp.asarray(mask), 7,
+            backend="pallas", tile_q=tq, tile_n=tn,
+        )
+        d, i = np.asarray(d), np.asarray(i)
+        if base is None:
+            base = (d, i)
+        else:
+            np.testing.assert_array_equal(i, base[1])
+            np.testing.assert_allclose(
+                np.where(np.isinf(d), 0.0, d),
+                np.where(np.isinf(base[0]), 0.0, base[0]),
+                rtol=2e-4, atol=2e-3,
+            )
+
+
+# ---------------------------------------------------------------------------
+# device-copy caching (identity-keyed)
+# ---------------------------------------------------------------------------
+
+
+class _FakeGraph:
+    def __init__(self, vectors, n):
+        self.vectors = vectors
+        self.n = n
+
+
+def test_device_vectors_cached_by_identity():
+    from repro.kernels import device_cache
+
+    g = _FakeGraph(_np(50, 8, seed=31), 40)
+    a = device_cache.device_vectors(g)
+    b = device_cache.device_vectors(g)
+    assert a is b  # cache hit: same device buffer
+    np.testing.assert_allclose(np.asarray(a), g.vectors[:40])
+
+
+def test_device_vectors_staleness_same_length_swap():
+    """Regression (the old cache keyed by n alone): swapping in a DIFFERENT
+    array of the SAME length must invalidate the cached device copy."""
+    from repro.kernels import device_cache
+
+    g = _FakeGraph(_np(50, 8, seed=33), 50)
+    a = device_cache.device_vectors(g)
+    g.vectors = _np(50, 8, seed=34)  # same shape, new contents
+    b = device_cache.device_vectors(g)
+    assert a is not b
+    np.testing.assert_allclose(np.asarray(b), g.vectors[:50])
+
+
+def test_device_vectors_revalidates_on_n_change():
+    from repro.kernels import device_cache
+
+    vecs = _np(50, 8, seed=35)
+    g = _FakeGraph(vecs, 30)
+    a = device_cache.device_vectors(g)
+    assert np.asarray(a).shape == (30, 8)
+    g.n = 45  # same array grew its live prefix (insert_batch)
+    b = device_cache.device_vectors(g)
+    assert np.asarray(b).shape == (45, 8)
+    np.testing.assert_allclose(np.asarray(b), vecs[:45])
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+def test_device_vectors_quant_cached_per_dtype(dtype):
+    from repro.kernels import device_cache
+
+    g = _FakeGraph(_np(60, 16, seed=37), 60)
+    s1, sc1 = device_cache.device_vectors_quant(g, dtype)
+    s2, sc2 = device_cache.device_vectors_quant(g, dtype)
+    assert s1 is s2 and sc1 == sc2
+    f32 = device_cache.device_vectors(g)
+    assert np.asarray(f32).dtype == np.float32  # separate attr per flavor

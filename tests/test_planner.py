@@ -204,7 +204,11 @@ GOLDEN_OPS = [
     (Beam(width=40), {"op": "Beam", "width": 40}),
     (
         ExactScan(k=40, est_frac=0.05),
-        {"op": "ExactScan", "k": 40, "est_frac": 0.05},
+        {"op": "ExactScan", "k": 40, "est_frac": 0.05, "dtype": "f32"},
+    ),
+    (
+        ExactScan(k=40, est_frac=0.05, dtype="int8"),
+        {"op": "ExactScan", "k": 40, "est_frac": 0.05, "dtype": "int8"},
     ),
     (
         PQScan(pool=160, k=40, est_frac=0.5),
@@ -229,6 +233,13 @@ def test_golden_op_serialization(op, golden):
     assert op_from_json(golden) == op
     # through an actual JSON string, as a log line would carry it
     assert op_from_json(json.loads(json.dumps(op.to_json()))) == op
+
+
+def test_exact_scan_json_back_compat():
+    """Plans serialized before the ``dtype`` field existed deserialize to
+    the f32 default — replay of old captured plans keeps working."""
+    old = {"op": "ExactScan", "k": 40, "est_frac": 0.05}
+    assert op_from_json(old) == ExactScan(k=40, est_frac=0.05, dtype="f32")
 
 
 def test_probe_plan_round_trip():
